@@ -1,0 +1,56 @@
+"""Quickstart: sparsity-preserving coded matrix multiplication in 40 lines.
+
+Builds the paper's Alg. 2 scheme for n=20 devices with gamma_A =
+gamma_B = 1/4 (Fig. 4's system), encodes two sparse matrices with the
+minimum weight omega = 4, knocks out the worst-case s = 4 stragglers,
+and recovers A^T B exactly from the fastest 16 workers.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coded_matmat, min_weight, proposed_mm
+
+rng = np.random.default_rng(0)
+
+# --- the paper's Fig. 4 system ------------------------------------------
+n, k_A, k_B = 20, 4, 4
+scheme = proposed_mm(n, k_A, k_B)
+s = scheme.s
+print(f"system: n={n} devices, k_A=k_B=4 -> resilient to s={s} stragglers")
+print(f"weight: omega_A*omega_B = {scheme.omega_A}*{scheme.omega_B} "
+      f"= {scheme.weight()} (lower bound {min_weight(n, s)})")
+print(f"dense MDS codes would use weight k_A*k_B = {k_A * k_B}\n")
+
+# --- sparse inputs (95% zeros) -------------------------------------------
+t, r, w = 400, 320, 240
+A = rng.standard_normal((t, r)) * (rng.random((t, r)) < 0.05)
+B = rng.standard_normal((t, w)) * (rng.random((t, w)) < 0.05)
+print(f"A: {A.shape}, density {np.mean(A != 0):.3f}; "
+      f"B: {B.shape}, density {np.mean(B != 0):.3f}")
+
+# each coded submatrix mixes only omega block-columns -> density grows by
+# ~omega, not by k (the paper's whole point)
+per_worker_density = 1 - (1 - 0.05) ** scheme.omega_A
+print(f"coded submatrix density ~{per_worker_density:.3f} "
+      f"(dense coding would give ~{1 - 0.95 ** k_A:.3f})\n")
+
+# --- straggle any s devices, still decode exactly -------------------------
+done = np.ones(n, bool)
+stragglers = rng.choice(n, size=s, replace=False)
+done[stragglers] = False
+print(f"stragglers this round: {sorted(stragglers.tolist())}")
+
+out = coded_matmat(jnp.asarray(A, jnp.float32), jnp.asarray(B, jnp.float32),
+                   scheme, seed=0, done=jnp.asarray(done))
+err = np.max(np.abs(np.asarray(out) - A.T @ B)) / np.max(np.abs(A.T @ B))
+print(f"recovered A^T B from the fastest {n - s} workers; "
+      f"max rel err = {err:.2e}")
+assert err < 1e-3
+print("OK")

@@ -1,0 +1,76 @@
+"""End-to-end training driver: train a small LM for a few hundred steps
+on the synthetic pipeline, with checkpointing and auto-resume.
+
+Default trains a ~13M-parameter qwen3-family model for 200 steps on CPU
+(a few minutes); ``--params 100m --steps 300`` scales to the ~100M-class
+run on real hardware.  Loss decreases monotonically thanks to the copy
+motifs planted by the pipeline.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig, ModelConfig
+from repro.data import DataConfig, make_pipeline
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+SIZES = {
+    "13m": dict(n_layers=4, d_model=256, d_ff=768, n_heads=4, kv=2, hd=64),
+    "30m": dict(n_layers=6, d_model=384, d_ff=1152, n_heads=6, kv=2, hd=64),
+    "100m": dict(n_layers=12, d_model=640, d_ff=1920, n_heads=10, kv=2, hd=64),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", choices=SIZES, default="13m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    sz = SIZES[args.params]
+    cfg = ModelConfig(
+        name=f"lm-{args.params}", family="dense", n_layers=sz["n_layers"],
+        d_model=sz["d_model"], d_ff=sz["d_ff"], vocab=args.vocab,
+        attn=AttnConfig(n_heads=sz["n_heads"], n_kv_heads=sz["kv"],
+                        head_dim=sz["hd"], qk_norm=True),
+        tie_embeddings=True, max_seq=args.seq, remat="none")
+    model = build_model(cfg, dtype=jnp.float32)
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model}")
+
+    dcfg = DataConfig(vocab=args.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+    tcfg = TrainConfig(steps=args.steps, ckpt_every=max(50, args.steps // 4),
+                       ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(
+        model, AdamWConfig(lr=args.lr, warmup_steps=args.steps // 10,
+                           total_steps=args.steps), tcfg)
+    _, _, hist = trainer.fit(lambda s0: make_pipeline(dcfg, s0),
+                             rng=jax.random.key(0))
+    for h in hist:
+        if h["step"] % 20 == 0 or h["step"] == args.steps - 1:
+            print(f"step {h['step']:4d}  loss {h['loss']:.4f}  "
+                  f"{h['dt'] * 1e3:6.0f} ms/step")
+    if hist:
+        first = sum(h["loss"] for h in hist[:5]) / 5
+        last = sum(h["loss"] for h in hist[-5:]) / 5
+        print(f"\nloss: {first:.3f} -> {last:.3f} "
+              f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

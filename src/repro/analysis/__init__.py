@@ -1,0 +1,1 @@
+"""Roofline analysis: HLO parsing, analytic FLOP/byte models, reports."""

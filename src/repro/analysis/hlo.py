@@ -1,0 +1,155 @@
+"""Optimized-HLO analysis: collective bytes with loop-aware accounting.
+
+``compiled.as_text()`` lists each op once even when it sits inside a
+``while`` body that iterates n_layers (scan-over-layers) or microbatch
+times.  Summing line-by-line therefore undercounts collective traffic by
+the trip count.  This parser builds the computation call graph, extracts
+while-loop trip counts from the loop-condition constants, and multiplies
+bottom-up -- nested scans (microbatch x layers x attention chunks)
+compose correctly.
+
+Returned bytes are the summed OUTPUT sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops, i.e. the payload
+each device receives per executed instance -- the quantity the ICI
+roofline term divides by link bandwidth.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_BYTES = {"f64": 8, "f32": 4, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+          "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(" + "|".join(_BYTES) + r")\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$")
+_CALL_ATTR = re.compile(
+    r"(?:body|to_apply|branch_computations|called_computations|calls)="
+    r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _COMP_HEADER.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _line_collective(line: str) -> tuple[str, int] | None:
+    # "%x = bf16[...] all-reduce(...)" / "all-gather-start(" etc.
+    m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$", line)
+    if not m:
+        return None
+    rhs = m.group(1)
+    for c in _COLLECTIVES:
+        mm = re.search(rf"\s{c}(?:-start)?\(", rhs)
+        if mm:
+            out_bytes = _shape_bytes(rhs[: mm.start()])
+            return c, out_bytes
+    return None
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Heuristic: largest integer constant in the loop condition."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_INT.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes_loop_aware(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+
+    direct: dict[str, dict[str, float]] = {}
+    calls: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    counts: dict[str, dict[str, int]] = {}
+
+    for name, lines in comps.items():
+        d = defaultdict(float)
+        cnt = defaultdict(int)
+        for line in lines:
+            col = _line_collective(line)
+            if col:
+                d[col[0]] += col[1]
+                cnt[col[0]] += 1
+            if "while(" in line:
+                mb = _CALL_ATTR.search(line)
+                mc = _COND_ATTR.search(line)
+                trip = _trip_count(comps.get(mc.group(1), [])) if mc else 1
+                if mb:
+                    for callee in re.split(r",\s*%?", mb.group(1)):
+                        calls[name].append((callee, trip))
+            else:
+                mb = _CALL_ATTR.search(line)
+                if mb:
+                    for callee in re.split(r",\s*%?", mb.group(1)):
+                        calls[name].append((callee, 1))
+        direct[name] = dict(d)
+        counts[name] = dict(cnt)
+
+    memo: dict[str, dict[str, float]] = {}
+    memo_cnt: dict[str, dict[str, float]] = {}
+    visiting: set[str] = set()
+
+    def total(name: str) -> tuple[dict[str, float], dict[str, float]]:
+        if name in memo:
+            return memo[name], memo_cnt[name]
+        if name in visiting or name not in comps:
+            return {}, {}
+        visiting.add(name)
+        agg = defaultdict(float, direct.get(name, {}))
+        agg_c = defaultdict(float, counts.get(name, {}))
+        for callee, mult in calls.get(name, []):
+            sub, sub_c = total(callee)
+            for k, v in sub.items():
+                agg[k] += mult * v
+            for k, v in sub_c.items():
+                agg_c[k] += mult * v
+        visiting.discard(name)
+        memo[name] = dict(agg)
+        memo_cnt[name] = dict(agg_c)
+        return memo[name], memo_cnt[name]
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else ""
+
+    bytes_out, counts_out = total(entry)
+    result = {c: float(bytes_out.get(c, 0.0)) for c in _COLLECTIVES}
+    result["counts"] = {c: int(counts_out.get(c, 0)) for c in _COLLECTIVES}
+    return result

@@ -1,0 +1,129 @@
+"""Roofline synthesis: three terms per (arch x shape x mesh) cell.
+
+Inputs: the dry-run JSON artifacts (collective bytes parsed loop-aware
+from the compiled HLO, memory analysis, compile status) + the analytic
+FLOP/HBM models of ``analysis.flops`` (XLA cost_analysis counts scan
+bodies once -- see flops.py docstring; raw values are still recorded).
+
+    compute    = FLOPs / (chips * 197e12 bf16 FLOP/s)
+    memory     = HBM bytes per device / 819e9 B/s
+    collective = per-device collective bytes / 50e9 B/s ICI
+                 (the SPMD HLO is the per-device program, so parsed
+                 bytes are already per-chip; 'pod'-crossing traffic is
+                 charged at DCN 25 GB/s)
+
+Reported per cell: all three terms (seconds), the dominant term, the
+MODEL_FLOPS/total ratio, and projected MFU = MODEL_FLOPS /
+(chips * peak * max-term).
+
+Usage:  python -m repro.analysis.roofline --artifacts artifacts/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from ..configs import SHAPES, get_config
+from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from .flops import cell_flops, cell_hbm_bytes
+
+DCN_BW = 25e9      # inter-pod bytes/s per chip (conservative)
+MICRO = 4          # must match dryrun build_cell default
+
+
+def analyze_cell(art: dict) -> dict | None:
+    if art.get("status") != "ok":
+        return None
+    cfg = get_config(art["arch"])
+    shape = SHAPES[art["shape"]]
+    chips = art["devices"]
+    multi_pod = art["mesh"].startswith("2x")
+
+    micro = art.get("microbatches", MICRO)
+    rep = cell_flops(cfg, shape, microbatches=micro)
+    hbm = cell_hbm_bytes(cfg, shape, chips, microbatches=micro)
+
+    t_compute = rep.total / (chips * PEAK_FLOPS_BF16)
+    t_memory = hbm["total"] / HBM_BW
+    # ring all-reduce moves ~2x the payload (reduce-scatter + all-gather
+    # phases); other collectives ~1x of their output bytes.
+    coll_bytes = sum((2.0 if k == "all-reduce" else 1.0) * v
+                     for k, v in art["collective_bytes"].items())
+    link_bw = DCN_BW if multi_pod else ICI_BW
+    # ICI carries intra-pod collectives even in multi-pod runs; charging
+    # everything at the slower DCN rate upper-bounds the term.
+    t_coll = coll_bytes / link_bw
+
+    t_step = max(t_compute, t_memory, t_coll)
+    dominant = {t_compute: "compute", t_memory: "memory",
+                t_coll: "collective"}[t_step]
+    mfu = rep.model_flops / (chips * PEAK_FLOPS_BF16 * t_step) \
+        if t_step else 0.0
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "opts": art.get("opts", []), "microbatches": micro,
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "t_step_s": t_step,
+        "dominant": dominant,
+        "analytic_flops": rep.total,
+        "model_flops": rep.model_flops,
+        "useful_ratio": rep.useful_ratio,
+        "projected_mfu": mfu,
+        "hbm_breakdown": hbm,
+        "collective_bytes": art["collective_bytes"],
+        "hlo_flops_raw": art.get("flops"),
+        "memory_analysis": art.get("memory", {}),
+    }
+
+
+def load_artifacts(art_dir: Path) -> list[dict]:
+    out = []
+    for f in sorted(art_dir.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | coll (s) | "
+           "dominant | useful ratio | proj. MFU |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['projected_mfu'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", type=Path, default=Path("artifacts/dryrun"))
+    ap.add_argument("--out", type=Path, default=Path("artifacts/roofline.json"))
+    ap.add_argument("--mesh", default="16x16",
+                    help="restrict table to one mesh (16x16 per assignment)")
+    args = ap.parse_args()
+
+    arts = load_artifacts(args.artifacts)
+    rows, skipped = [], []
+    for a in arts:
+        if a.get("status") == "skipped":
+            skipped.append(a)
+            continue
+        r = analyze_cell(a)
+        if r:
+            rows.append(r)
+    table_rows = [r for r in rows if r["mesh"] == args.mesh]
+    print(markdown_table(table_rows))
+    print(f"\n{len(skipped)} skipped cells (long_500k on quadratic archs)")
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(rows, indent=2))
+    print(f"wrote {args.out} ({len(rows)} analyzed cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""End-to-end coded matrix computation in JAX.
+
+This is the paper's pipeline as a composable JAX module:
+
+    partition -> encode (weight-omega linear combinations)
+              -> per-worker compute (vmap locally / shard_map on a mesh)
+              -> straggler selection (fastest-k mask)
+              -> decode (k x k solve)
+
+Two execution styles are provided:
+
+  * ``coded_matvec`` / ``coded_matmat``: functional one-shot APIs that
+    encode on the fly (the "edge server dispatches coded submatrices"
+    picture).
+  * ``CodedOperator``: pre-encoded operator, the form used by the model
+    layers (``repro.parallel.coded_layer``) where weights are encoded
+    once at init/checkpoint-load and reused every step.
+
+Everything is jit-compatible; the straggler mask is a runtime input so a
+single compiled executable serves any straggler pattern (essential on a
+real cluster where the straggler set changes per step).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .assignment import MMScheme, MVScheme
+from .decoding import system_matrix
+from .encoding import mm_encoding_matrices, mv_encoding_matrix
+
+
+# ---------------------------------------------------------------------------
+# Partitioning helpers
+# ---------------------------------------------------------------------------
+
+
+def pad_to_multiple(x: jnp.ndarray, axis: int, k: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % k
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def split_block_columns(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(t, r) -> (k, t, r/k) stacked block-columns (pads r if needed)."""
+    x = pad_to_multiple(x, 1, k)
+    t, r = x.shape
+    return jnp.moveaxis(x.reshape(t, k, r // k), 1, 0)
+
+
+def merge_block_columns(blocks: jnp.ndarray, r: int) -> jnp.ndarray:
+    """(k, t, c) -> (t, k*c)[:, :r] inverse of split_block_columns."""
+    k, t, c = blocks.shape
+    return jnp.moveaxis(blocks, 0, 1).reshape(t, k * c)[:, :r]
+
+
+# ---------------------------------------------------------------------------
+# Fastest-k selection as a differentiable-friendly gather
+# ---------------------------------------------------------------------------
+
+
+def fastest_k_rows(done: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Indices of the first k set bits of ``done`` (n,) -> (k,) int32.
+
+    jit-safe: uses a stable sort on (!done, index).  If fewer than k
+    workers completed the result repeats alive workers; callers should
+    check ``jnp.sum(done) >= k`` upstream (the trainer does).
+    """
+    n = done.shape[0]
+    order = jnp.argsort(jnp.where(done, 0, 1) * n + jnp.arange(n))
+    return order[:k]
+
+
+# ---------------------------------------------------------------------------
+# Matrix-vector
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _mv_compute_decode(coded: jnp.ndarray, x: jnp.ndarray, done: jnp.ndarray,
+                       k: int, G: jnp.ndarray) -> jnp.ndarray:
+    # coded: (n, t, c); per-worker products y_i = coded_i^T x : (n, c)
+    y = jnp.einsum("ntc,t->nc", coded, x)
+    rows = fastest_k_rows(done, k)
+    sub = G[rows]                        # (k, k)
+    ysub = y[rows]                       # (k, c)
+    u = jnp.linalg.solve(sub, ysub)      # (k, c) unknowns A_q^T x
+    return u
+
+
+def coded_matvec(A: jnp.ndarray, x: jnp.ndarray, scheme: MVScheme,
+                 seed: int = 0, done: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Compute A^T x through the coded pipeline; returns (r,)."""
+    t, r = A.shape
+    k = scheme.k_A
+    R = jnp.asarray(mv_encoding_matrix(scheme, seed))
+    blocks = split_block_columns(A, k)               # (k, t, c)
+    coded = jnp.einsum("nk,ktc->ntc", R, blocks)     # (n_tasks, t, c)
+    if done is None:
+        done = jnp.ones(coded.shape[0], dtype=bool)
+    G = jnp.asarray(system_matrix(scheme, seed))
+    u = _mv_compute_decode(coded, x, done, k, G)     # (k, c) = stacked A_q^T x
+    return u.reshape(-1)[:r]
+
+
+# ---------------------------------------------------------------------------
+# Matrix-matrix
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _mm_compute_decode(coded_a: jnp.ndarray, coded_b: jnp.ndarray,
+                       done: jnp.ndarray, k: int, G: jnp.ndarray) -> jnp.ndarray:
+    # per-worker products P_i = coded_a_i^T coded_b_i : (n, ca, cb)
+    p = jnp.einsum("ntc,ntd->ncd", coded_a, coded_b)
+    rows = fastest_k_rows(done, k)
+    sub = G[rows]                                     # (k, k)
+    ysub = p[rows].reshape(k, -1)                     # (k, ca*cb)
+    u = jnp.linalg.solve(sub, ysub)                   # (k, ca*cb)
+    return u.reshape((k,) + p.shape[1:])
+
+
+def coded_matmat(A: jnp.ndarray, B: jnp.ndarray, scheme: MMScheme,
+                 seed: int = 0, done: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Compute A^T B through the coded pipeline; returns (r, w)."""
+    t, r = A.shape
+    _, w = B.shape
+    ka, kb = scheme.k_A, scheme.k_B
+    ra, rb = mm_encoding_matrices(scheme, seed)
+    blocks_a = split_block_columns(A, ka)            # (ka, t, ca)
+    blocks_b = split_block_columns(B, kb)            # (kb, t, cb)
+    coded_a = jnp.einsum("nk,ktc->ntc", jnp.asarray(ra), blocks_a)
+    coded_b = jnp.einsum("nk,ktc->ntc", jnp.asarray(rb), blocks_b)
+    if done is None:
+        done = jnp.ones(scheme.n, dtype=bool)
+    G = jnp.asarray(system_matrix(scheme, seed))     # (n, ka*kb)
+    u = _mm_compute_decode(coded_a, coded_b, done, ka * kb, G)   # (k, ca, cb)
+    ca, cb = u.shape[1], u.shape[2]
+    out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3).reshape(ka * ca, kb * cb)
+    return out[:r, :w]
+
+
+# ---------------------------------------------------------------------------
+# Pre-encoded operator (weights encoded once, reused per step)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CodedOperator:
+    """A^T-apply operator with straggler resilience.
+
+    Encodes A's block-columns once; ``apply(x, done)`` then computes
+    A^T x for activation batches x (t,) or (batch, t) while tolerating
+    up to s stragglers indicated by the ``done`` mask.
+    """
+
+    scheme: MVScheme
+    coded: jnp.ndarray        # (n_tasks, t, c) encoded block-columns
+    G: jnp.ndarray            # (n_tasks, k) system matrix
+    r: int                    # original output dim
+
+    @staticmethod
+    def build(A: jnp.ndarray, scheme: MVScheme, seed: int = 0) -> "CodedOperator":
+        R = jnp.asarray(mv_encoding_matrix(scheme, seed))
+        blocks = split_block_columns(A, scheme.k_A)
+        coded = jnp.einsum("nk,ktc->ntc", R, blocks)
+        return CodedOperator(scheme=scheme, coded=coded,
+                             G=jnp.asarray(system_matrix(scheme, seed)),
+                             r=A.shape[1])
+
+    def apply(self, x: jnp.ndarray, done: jnp.ndarray | None = None) -> jnp.ndarray:
+        squeeze = x.ndim == 1
+        xb = x[None, :] if squeeze else x             # (b, t)
+        if done is None:
+            done = jnp.ones(self.coded.shape[0], dtype=bool)
+        y = jnp.einsum("ntc,bt->nbc", self.coded, xb)  # per-worker results
+        rows = fastest_k_rows(done, self.scheme.k_A)
+        sub = self.G[rows]
+        ysub = y[rows].reshape(self.scheme.k_A, -1)
+        u = jnp.linalg.solve(sub, ysub)                # (k, b*c)
+        b = xb.shape[0]
+        u = u.reshape(self.scheme.k_A, b, -1).transpose(1, 0, 2).reshape(b, -1)
+        out = u[:, : self.r]
+        return out[0] if squeeze else out
+
+    def worker_nnz(self) -> np.ndarray:
+        c = np.asarray(self.coded)
+        return (np.abs(c) > 0).reshape(c.shape[0], -1).sum(axis=1)

@@ -1,0 +1,156 @@
+"""Encoding-weight bounds and weight selection (Paper Sec. III).
+
+Implements Proposition 1 (the lower bound on the homogeneous encoding
+weight), Corollary 1 (its regimes in terms of ``s`` and ``k``), and the
+weight-selection routine used by Alg. 2 (factor the target weight into
+``omega_A * omega_B`` under divisibility preferences).
+
+All functions here are tiny host-side integer computations (numpy-free);
+they drive the structure of the encoding, not the numerics.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def min_weight(n: int, s: int) -> int:
+    """Proposition 1: minimum homogeneous weight for resilience to ``s``
+    stragglers out of ``n`` devices.
+
+        omega_hat = ceil((n - s)(s + 1) / n)
+
+    Derivation: each of the k = n - s unknowns must appear in >= s + 1
+    devices, so n * omega >= k (s + 1).
+    """
+    if not 0 <= s < n:
+        raise ValueError(f"need 0 <= s < n, got n={n}, s={s}")
+    k = n - s
+    return math.ceil(k * (s + 1) / n)
+
+
+def mv_weight(n: int, k_A: int) -> int:
+    """Alg. 1 weight: omega_A = ceil(k_A (s+1) / (k_A + s)) with s = n - k_A.
+
+    This equals ``min_weight(n, n - k_A)`` since n = k_A + s.
+    """
+    s = n - k_A
+    if s < 0:
+        raise ValueError(f"need n >= k_A, got n={n}, k_A={k_A}")
+    return math.ceil(k_A * (s + 1) / (k_A + s)) if s > 0 else 1
+
+
+def weight_regime(n: int, s: int) -> str:
+    """Corollary 1 regime classification for the optimal weight.
+
+    (i)  k > s^2        -> omega_hat == s + 1
+    (ii) s <= k <= s^2  -> ceil((s+1)/2) <= omega_hat <= s
+    """
+    k = n - s
+    if s == 0:
+        return "trivial"
+    if k > s * s:
+        return "i"  # omega_hat = s + 1
+    if s <= k <= s * s:
+        return "ii"
+    return "degenerate"  # k < s: more than half the devices straggle
+
+
+def _divisors(x: int) -> list[int]:
+    return [d for d in range(1, x + 1) if x % d == 0]
+
+
+@dataclass(frozen=True)
+class MMWeights:
+    """Chosen (omega_A, omega_B) for Alg. 2 plus provenance flags."""
+
+    omega_A: int
+    omega_B: int
+    omega: int          # omega_A * omega_B
+    omega_hat: int      # Prop. 1 lower bound
+    divisible: bool     # omega_A | k_A and omega_B | k_B (Lemma 2 regime)
+    meets_bound: bool   # omega == omega_hat
+
+
+def choose_mm_weights(n: int, k_A: int, k_B: int) -> MMWeights:
+    """Pick (omega_A, omega_B) for Alg. 2 (paper Sec. V).
+
+    Selection rule (matching the paper's experiments): minimise the
+    product omega_A * omega_B >= omega_hat with omega_A <= omega_B and
+    omega_A >= 2 (a weight-1 A-encoding breaks the covering/Hall
+    condition); among equal products prefer divisible pairs
+    (omega_A | k_A, omega_B | k_B -- the regime Lemma 2 proves), then
+    balanced factors.
+
+    Examples: n=42, k=36, s=6 -> (2, 3);  n=20, k=16, s=4 -> (2, 2);
+    n=36, s=8 (omega_hat = 7 prime, Fig. 5(a)) -> (2, 4), product 8,
+    non-divisible -- the paper explicitly accepts the slightly higher
+    weight rather than jumping to a larger divisible product.
+    """
+    k = k_A * k_B
+    s = n - k
+    if s < 0:
+        raise ValueError(f"need n >= k_A*k_B, got n={n}, k={k}")
+    if s > k:
+        raise ValueError(f"paper assumes s <= k (at most half stragglers); got s={s}, k={k}")
+    omega_hat = min_weight(n, s)
+    if s == 0:  # no resilience requested: uncoded weight-1 assignment
+        return MMWeights(omega_A=1, omega_B=1, omega=1, omega_hat=1,
+                         divisible=True, meets_bound=True)
+
+    wa_min = 2 if k_A >= 2 else 1
+    cands = []
+    for wa in range(wa_min, k_A + 1):
+        for wb in range(wa, k_B + 1):
+            prod = wa * wb
+            if prod < omega_hat:
+                continue
+            div = (k_A % wa == 0) and (k_B % wb == 0)
+            cands.append((prod, not div, wb - wa, wa, wb))
+    if not cands:
+        raise ValueError(f"no feasible (omega_A, omega_B) for n={n}, k_A={k_A}, k_B={k_B}")
+    prod, notdiv, _, wa, wb = min(cands)
+    return MMWeights(
+        omega_A=wa, omega_B=wb, omega=prod, omega_hat=omega_hat,
+        divisible=not notdiv, meets_bound=(prod == omega_hat),
+    )
+
+
+def cyclic31_mv_weight(n: int, k_A: int) -> int:
+    """Weight used by the cyclic-code baseline [31]: min(s+1, k_A)."""
+    s = n - k_A
+    return min(s + 1, k_A)
+
+
+def cyclic31_mm_weights(n: int, k_A: int, k_B: int) -> MMWeights:
+    """Baseline [31] for matrix-matrix: weight >= s + 1 factored into
+    omega_A * omega_B (no tighter Prop.-1-style bound).
+
+    E.g. n=42, k_A=k_B=6, s=6 -> needs >= 7 -> (omega_A, omega_B) = (4, 2)
+    per the paper's Sec. VI discussion (product 8).  We reproduce that
+    selection rule: smallest product >= s+1 with omega_A | k_A, omega_B |
+    k_B if possible, preferring the larger factor on A (as reported).
+    """
+    k = k_A * k_B
+    s = n - k
+    target = min(s + 1, k)
+    # our assignment engine (shared with Alg. 2) needs both factors >= 2
+    # to decode; [31]'s published configurations (s >= 2) always satisfy
+    # this, so the modelled baseline matches the paper's numbers.
+    w_min = 2 if (s >= 1 and min(k_A, k_B) >= 2) else 1
+    best = None
+    for wa in range(w_min, k_A + 1):
+        for wb in range(w_min, k_B + 1):
+            prod = wa * wb
+            if prod < target:
+                continue
+            div = (k_A % wa == 0) and (k_B % wb == 0)
+            key = (prod, not div, -wa)
+            if best is None or key < best[0]:
+                best = (key, wa, wb)
+    _, wa, wb = best
+    return MMWeights(omega_A=wa, omega_B=wb, omega=wa * wb,
+                     omega_hat=min_weight(n, s),
+                     divisible=(k_A % wa == 0 and k_B % wb == 0),
+                     meets_bound=False)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the coded-computation hot spots.
+
+Three kernels, each with a jit wrapper in ``ops.py`` and a pure-jnp
+oracle in ``ref.py``:
+
+  * ``bcsr_matmul``   -- block-sparse worker matmul C = A^T B (the
+    paper's per-worker compute, adapted to MXU tile sparsity)
+  * ``cyclic_encode`` -- weight-omega encoding gather/accumulate
+  * ``decode_matmul`` -- fastest-k decode U = Hinv @ Y
+
+All validated in interpret mode on CPU; compiled path targets TPU.
+"""
+
+from .bcsr_matmul import bcsr_matmul, bcsr_matmul_jit  # noqa: F401
+from .cyclic_encode import cyclic_encode, cyclic_encode_jit  # noqa: F401
+from .decode_matmul import decode_matmul, decode_matmul_jit  # noqa: F401
+from .ops import coded_worker_matmul, decode_unknowns, encode_submatrices  # noqa: F401
+from .ref import pack_bcsr  # noqa: F401

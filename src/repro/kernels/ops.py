@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for the kernels package.
+
+``interpret`` defaults to True when no TPU is present so the whole test
+suite and the CPU examples exercise the kernel bodies; on a real TPU
+deployment the flag flips to compiled mode automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bcsr_matmul import bcsr_matmul
+from .cyclic_encode import cyclic_encode
+from .decode_matmul import decode_matmul
+from .ref import pack_bcsr
+
+
+def _default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def coded_worker_matmul(a_dense, b, *, bk: int = 128, bm: int = 128,
+                        bn: int = 128, interpret: bool | None = None):
+    """Worker-side C = A^T B for a block-sparse coded submatrix A.
+
+    Packs A on host (the edge server does this once when dispatching the
+    coded task), then runs the block-skipping Pallas kernel.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    a_np = np.asarray(a_dense)
+    a_data, a_idx, _ = pack_bcsr(a_np, bk, bm)
+    return bcsr_matmul(jnp.asarray(a_data), jnp.asarray(a_idx),
+                       jnp.asarray(b), bn=bn, interpret=interpret)
+
+
+def encode_submatrices(blocks, sup, coef, *, bt: int = 128,
+                       interpret: bool | None = None):
+    """Server-side encoding of stacked block-columns (Alg. 1/2)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return cyclic_encode(jnp.asarray(blocks), jnp.asarray(sup, dtype=jnp.int32),
+                         jnp.asarray(coef, dtype=jnp.float32),
+                         bt=bt, interpret=interpret)
+
+
+def decode_unknowns(hinv, y, *, bp: int = 512, interpret: bool | None = None):
+    """Server-side decode U = Hinv @ Y for a fixed straggler pattern."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return decode_matmul(jnp.asarray(hinv), jnp.asarray(y), bp=bp,
+                         interpret=interpret)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here that is
+(a) written with plain jnp ops only, (b) shape/dtype-polymorphic, and
+(c) used by the test suite's assert_allclose sweeps.  The references
+compute from the *logical* operands (dense matrices, support tables), so
+they are independent of the kernels' packing/tiling decisions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# bcsr_matmul: C = A^T @ B with block-sparse A
+# ---------------------------------------------------------------------------
+
+
+def bcsr_matmul_ref(a_dense: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the block-sparse worker matmul: plain dense A^T B in f32."""
+    return jnp.dot(a_dense.astype(jnp.float32).T, b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def bcsr_matmul_packed_ref(a_data: jnp.ndarray, a_idx: jnp.ndarray,
+                           b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle operating on the packed representation (used to validate the
+    packer separately from the kernel): gather-accumulate in pure jnp.
+
+    a_data : (Mb, J, bk, bm)   per-output-block-column padded nonzero blocks
+    a_idx  : (Mb, J) int32     K-block row index of each slot (pad -> 0 data)
+    b      : (K, N)
+    """
+    mb, j, bk, bm = a_data.shape
+    n = b.shape[1]
+    bblocks = b.reshape(-1, bk, n).astype(jnp.float32)     # (Kb, bk, N)
+    gathered = bblocks[a_idx]                              # (Mb, J, bk, N)
+    out = jnp.einsum("mjkc,mjkn->mcn", a_data.astype(jnp.float32), gathered)
+    return out.reshape(mb * bm, n)
+
+
+# ---------------------------------------------------------------------------
+# cyclic_encode: coded[i] = sum_j coef[i, j] * blocks[sup[i, j]]
+# ---------------------------------------------------------------------------
+
+
+def cyclic_encode_ref(blocks: jnp.ndarray, sup: jnp.ndarray,
+                      coef: jnp.ndarray) -> jnp.ndarray:
+    """blocks (k, T, C), sup (n, w) int32, coef (n, w) -> coded (n, T, C)."""
+    gathered = blocks[sup]                   # (n, w, T, C)
+    return jnp.einsum("nw,nwtc->ntc", coef.astype(jnp.float32),
+                      gathered.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# decode_matmul: U = Hinv @ Y
+# ---------------------------------------------------------------------------
+
+
+def decode_matmul_ref(hinv: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """hinv (k, k), y (k, P) -> (k, P) in f32."""
+    return jnp.dot(hinv.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Packing helper used by both ref and ops (host-side, numpy)
+# ---------------------------------------------------------------------------
+
+
+def pack_bcsr(a_dense: np.ndarray, bk: int, bm: int,
+              max_nnz: int | None = None) -> tuple[np.ndarray, np.ndarray, int]:
+    """Pack a dense (K, M) matrix into per-block-column gathered form.
+
+    Returns (a_data (Mb, J, bk, bm), a_idx (Mb, J) int32, max_nnz J).
+    A block is stored iff it has any non-zero entry.  Rows are padded to
+    the max nnz-block count with zero blocks pointing at K-block 0.
+    """
+    a = np.asarray(a_dense)
+    K, M = a.shape
+    if K % bk or M % bm:
+        raise ValueError(f"dims must divide block size: {(K, M)} vs {(bk, bm)}")
+    kb, mb = K // bk, M // bm
+    blocks = a.reshape(kb, bk, mb, bm).transpose(2, 0, 1, 3)  # (mb, kb, bk, bm)
+    nz = np.abs(blocks).max(axis=(2, 3)) > 0                   # (mb, kb)
+    counts = nz.sum(axis=1)
+    j = int(counts.max()) if max_nnz is None else max_nnz
+    j = max(j, 1)
+    a_data = np.zeros((mb, j, bk, bm), dtype=a.dtype)
+    a_idx = np.zeros((mb, j), dtype=np.int32)
+    for m in range(mb):
+        ks = np.nonzero(nz[m])[0][:j]
+        a_data[m, : len(ks)] = blocks[m, ks]
+        a_idx[m, : len(ks)] = ks
+    return a_data, a_idx, j

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the REAL step function -- full train step
+(loss + grad + AdamW update) for train shapes, ``prefill`` / one-token
+``decode_step`` for serving shapes -- with production shardings, then:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(**input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())
+        print(compiled.cost_analysis())
+
+All inputs are ShapeDtypeStructs: nothing is allocated.  Collective
+bytes are parsed from the optimized HLO and written, together with the
+cost/memory analyses, to one JSON artifact per cell (consumed by
+benchmarks/roofline.py and EXPERIMENTS.md).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod both --out artifacts/
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.models import (  # noqa: E402
+    build_model,
+    decode_specs,
+    prefill_specs,
+    supports_shape,
+    train_batch_specs,
+)
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state  # noqa: E402
+import contextlib     # noqa: E402
+
+from repro.parallel.ctx import activation_sharding, expert_parallel  # noqa: E402
+from repro.parallel.sharding import (  # noqa: E402
+    batch_shardings,
+    cache_shardings,
+    make_activation_sharder,
+    param_shardings,
+    replicated,
+    zero1_shardings,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes", "peak_memory_in_bytes")
+    return {k: int(getattr(mem, k)) for k in keys if hasattr(mem, k)}
+
+
+def build_cell(arch: str, shape_name: str, mesh, dtype=jnp.bfloat16,
+               microbatches: int = 4, cfg=None,
+               opts: frozenset = frozenset()):
+    """Returns (step_fn, arg_specs, in_shardings, out_shardings)."""
+    cfg = cfg or get_config(arch)
+    if "remat_dots" in opts:
+        cfg = cfg.with_(remat="dots")
+    shape = SHAPES[shape_name]
+    model = build_model(cfg, dtype)
+    pspecs = jax.eval_shape(model.init, jax.random.key(0))
+    pshard = param_shardings(mesh, pspecs)
+    sharder = make_activation_sharder(mesh, opts)
+
+    def env():
+        from repro.parallel.sharding import dp_axes  # noqa: PLC0415
+        st = contextlib.ExitStack()
+        st.enter_context(activation_sharding(sharder))
+        if "moe_ep" in opts:
+            st.enter_context(expert_parallel(mesh, dp_axes(mesh), "model"))
+        return st
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16")
+        ospecs = jax.eval_shape(lambda: init_state(opt_cfg, pspecs))
+        oshard = {"step": replicated(mesh, ospecs["step"]),
+                  "m": zero1_shardings(mesh, ospecs["m"]),
+                  "v": zero1_shardings(mesh, ospecs["v"])}
+        bspecs = train_batch_specs(cfg, shape, dtype)
+        bshard = batch_shardings(mesh, bspecs, shape.global_batch)
+        # gradient accumulation: bounds live activations (global batch
+        # stays 256; the optimizer step sees the mean gradient)
+        micro = microbatches
+
+        def train_step(params, opt_state, batch):
+            with env():
+                if micro > 1:
+                    def mb_step(acc, mb):
+                        l, g = jax.value_and_grad(model.train_loss)(
+                            params, mb)
+                        acc = jax.tree.map(
+                            lambda a, b: a + b.astype(a.dtype),
+                            acc, {"l": l, "g": g})
+                        return acc, None
+
+                    zero = {"l": jnp.zeros((), jnp.float32),
+                            "g": jax.tree.map(
+                                lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)}
+                    mbs = jax.tree.map(
+                        lambda x: x.reshape(
+                            (micro, x.shape[0] // micro) + x.shape[1:]),
+                        batch)
+                    acc, _ = jax.lax.scan(mb_step, zero, mbs)
+                    loss = acc["l"] / micro
+                    grads = jax.tree.map(lambda g: g / micro, acc["g"])
+                else:
+                    loss, grads = jax.value_and_grad(model.train_loss)(
+                        params, batch)
+            params, opt_state, metrics = apply_updates(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, loss
+
+        return (train_step,
+                (pspecs, ospecs, bspecs),
+                (pshard, oshard, bshard),
+                (pshard, oshard, replicated(mesh, jax.ShapeDtypeStruct((), jnp.float32))))
+
+    if shape.kind == "prefill":
+        bspecs = prefill_specs(cfg, shape, dtype)
+        bshard = batch_shardings(mesh, bspecs, shape.global_batch)
+
+        def prefill_step(params, batch):
+            with env():
+                return model.prefill(params, batch["tokens"],
+                                     max_len=shape.seq_len,
+                                     **{k: v for k, v in batch.items()
+                                        if k != "tokens"})
+
+        out_struct = jax.eval_shape(prefill_step, pspecs, bspecs)
+        logits_shard = replicated(mesh, out_struct[0])
+        cache_shard = cache_shardings(mesh, out_struct[1],
+                                      shape.global_batch)
+        return (prefill_step, (pspecs, bspecs), (pshard, bshard),
+                (logits_shard, cache_shard))
+
+    # decode
+    dspecs = decode_specs(cfg, shape, dtype)
+    cshard = cache_shardings(mesh, dspecs["cache"], shape.global_batch)
+    tshard = batch_shardings(mesh, dspecs["tokens"], shape.global_batch)
+
+    def decode_step(params, cache, tokens):
+        with env():
+            return model.decode_step(params, cache, tokens)
+
+    out_struct = jax.eval_shape(decode_step, pspecs, dspecs["cache"],
+                                dspecs["tokens"])
+    return (decode_step, (pspecs, dspecs["cache"], dspecs["tokens"]),
+            (pshard, cshard, tshard),
+            (replicated(mesh, out_struct[0]), cshard))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path | None = None, verbose: bool = True,
+             opts: frozenset = frozenset(),
+             microbatches: int = 4) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = supports_shape(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "opts": sorted(opts), "microbatches": microbatches,
+              "status": "skipped", "reason": reason}
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} x {shape_name} ({mesh_name}): {reason}")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    try:
+        with mesh:
+            step_fn, arg_specs, in_sh, out_sh = build_cell(
+                arch, shape_name, mesh, microbatches=microbatches, opts=opts)
+            lowered = jax.jit(step_fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*arg_specs)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            from repro.analysis.hlo import collective_bytes_loop_aware
+            coll = collective_bytes_loop_aware(compiled.as_text())
+        n_dev = mesh.devices.size
+        result.update({
+            "status": "ok",
+            "devices": int(n_dev),
+            "compile_s": round(time.perf_counter() - t0, 2),
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "memory": _mem_dict(mem),
+            "collective_bytes": {k: v for k, v in coll.items()
+                                 if k != "counts"},
+            "collective_counts": coll.get("counts", {}),
+            "model_params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+        })
+        if verbose:
+            print(f"[ok]   {arch} x {shape_name} ({mesh_name}): "
+                  f"compile {result['compile_s']}s  "
+                  f"flops {result['flops']:.3e}  "
+                  f"bytes {result['bytes_accessed']:.3e}")
+            print(f"       memory_analysis: {result['memory']}")
+            print(f"       collectives: "
+                  f"{ {k: f'{v:.2e}' for k, v in result['collective_bytes'].items() if v} }")
+    except Exception as e:  # noqa: BLE001
+        result.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} ({mesh_name}): {e}")
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = ("__" + "+".join(sorted(opts))) if opts else ""
+        if microbatches != 4:
+            suffix += f"__mb{microbatches}"
+        fname = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        (out_dir / fname).write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("off", "on", "both"),
+                    default="off")
+    ap.add_argument("--out", type=Path, default=Path("artifacts/dryrun"))
+    ap.add_argument("--opts", default="",
+                    help="comma list: attn_batch_only,moe_gather_weights,seq_par")
+    ap.add_argument("--microbatches", type=int, default=4)
+    args = ap.parse_args()
+    opts = frozenset(o for o in args.opts.split(",") if o)
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in pods:
+            r = run_cell(arch, shape, mp, out_dir=args.out, opts=opts,
+                         microbatches=args.microbatches)
+            failures += r["status"] == "error"
+    print(f"\ndry-run complete: {len(cells) * len(pods)} cells, "
+          f"{failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Public model API: build_model + per-(arch, shape) input specs.
+
+``input_specs`` returns ShapeDtypeStructs for every step-function input
+(the multi-pod dry-run lowers against these; nothing is allocated).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .transformer import TransformerLM
+from .whisper import WhisperLM
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.bfloat16):
+    if cfg.family == "audio":
+        return WhisperLM(cfg, dtype=dtype)
+    return TransformerLM(cfg, dtype=dtype)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return {
+            "frames": _sds((b, cfg.encoder.n_frames, cfg.d_model), dtype),
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        v = cfg.vision_tokens
+        return {
+            "image_embeds": _sds((b, v, cfg.d_model), dtype),
+            "tokens": _sds((b, s - v), jnp.int32),
+            "labels": _sds((b, s - v), jnp.int32),
+        }
+    return {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig,
+                  dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((b, s if cfg.family != "vlm" else s - cfg.vision_tokens),
+                          jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = _sds((b, cfg.encoder.n_frames, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds((b, cfg.vision_tokens, cfg.d_model), dtype)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 dtype=jnp.bfloat16) -> dict:
+    """Specs for decode_step: a cache filled to seq_len plus one token."""
+    b, s = shape.global_batch, shape.seq_len
+    model = build_model(cfg, dtype)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"cache": cache, "tokens": _sds((b, 1), jnp.int32)}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether the (arch, shape) cell is runnable; reason if not.
+
+    long_500k requires sub-quadratic attention (SSM / hybrid / mostly-
+    local); pure full-attention archs skip it per the assignment.
+    """
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (quadratic)"
+    return True, ""

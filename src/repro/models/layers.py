@@ -1,0 +1,311 @@
+"""Neural-net building blocks shared by the model zoo (pure JAX).
+
+Parameters are plain pytrees (nested dicts of jnp arrays) so the same
+code paths serve jax.eval_shape (dry-run, no allocation), pjit
+(distributed), and tiny CPU smoke tests.
+
+Attention comes in two implementations:
+  * ``plain``    -- full-score einsum with mask; used for short
+                    sequences and single-token decode.
+  * ``chunked``  -- flash-style online-softmax double scan over query /
+                    key chunks; O(S * chunk) live memory, the default
+                    for long-context training/prefill.
+Both support GQA (grouped einsum, no KV repetition), causal masking,
+sliding windows and qk-norm.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import AttnConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms, activations, embeddings
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w).astype(dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_up, w_down) -> jnp.ndarray:
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(
+        jnp.einsum("...d,df->...f", x, w_up)), w_down)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D), positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attn_params(key, d_model: int, a: AttnConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h, kv, hd = a.n_heads, a.n_kv_heads, a.head_dim
+    scale = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d_model, h * hd), dtype) * scale,
+        "wk": jax.random.normal(k2, (d_model, kv * hd), dtype) * scale,
+        "wv": jax.random.normal(k3, (d_model, kv * hd), dtype) * scale,
+        "wo": jax.random.normal(k4, (h * hd, d_model), dtype) * scale,
+    }
+    if a.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, x: jnp.ndarray, a: AttnConfig, positions: jnp.ndarray,
+                 eps: float):
+    from ..parallel.ctx import shard  # noqa: PLC0415
+
+    b, s, _ = x.shape
+    h, kv, hd = a.n_heads, a.n_kv_heads, a.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kv, hd)
+    # sharding cut point: without an explicit constraint GSPMD tries to
+    # keep the (heads*hd) column-parallel sharding through the
+    # (kv, groups, hd) reshape and re-resolves it inside every attention
+    # chunk (see EXPERIMENTS.md SPerf) -- the hook pins the layout once.
+    q, k, v = shard("attn_q", q), shard("attn_kv", k), shard("attn_kv", v)
+    if a.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    q = rope(q, positions, a.rope_theta)
+    k = rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Plain attention (short sequences, bidirectional encoder, decode)
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: int | None):
+    """(..., Sq, Sk) additive bias from position tensors."""
+    ok = jnp.ones(jnp.broadcast_shapes(qpos[..., :, None].shape,
+                                       kpos[..., None, :].shape), bool)
+    if causal:
+        ok &= kpos[..., None, :] <= qpos[..., :, None]
+    if window is not None:
+        ok &= qpos[..., :, None] - kpos[..., None, :] < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention_plain(q, k, v, qpos, kpos, causal=True, window=None):
+    """q (B,Sq,H,D), k/v (B,Sk,KV,D) -> (B,Sq,H,D).  GQA via grouping."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    # bf16 operands, f32 accumulation: keeps HBM/ICI traffic at 2 bytes
+    # while preserving f32 softmax numerics.
+    scores = jnp.einsum("bqkgd,bpkd->bkgqp", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    bias = _mask_bias(qpos, kpos, causal, window)      # (B?, Sq, Sk)
+    scores = scores + bias[..., None, None, :, :] if bias.ndim == 3 \
+        else scores + bias[None, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqp,bpkd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (training / prefill at long context)
+# ---------------------------------------------------------------------------
+
+
+def attention_chunked(q, k, v, causal=True, window=None, chunk=512):
+    """Online-softmax double-scan.  q (B,S,H,D), k/v (B,S,KV,D).
+
+    Memory per step: one (B, KV, G, qc, kc) score tile.  The inner scan
+    covers all key chunks with masking (upper-triangle compute is wasted
+    for causal attention -- an acknowledged baseline inefficiency that
+    the perf log attacks with per-chunk bounds).
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qc = min(chunk, s)
+    if s % qc:
+        raise ValueError(f"S={s} not a multiple of chunk={qc}")
+    nq = s // qc
+    scale = d ** -0.5
+
+    qg = q.reshape(b, nq, qc, kvh, g, d)
+    kc_ = k.reshape(b, nq, qc, kvh, d)
+    vc_ = v.reshape(b, nq, qc, kvh, d)
+
+    def q_step(_, qi):
+        qblk, iq = qi                                   # (b,qc,kv,g,d), scalar
+        qpos = iq * qc + jnp.arange(qc)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk, vblk, jk = kj
+            kpos = jk * qc + jnp.arange(qc)
+            sc = jnp.einsum("bqkgd,bpkd->bkgqp", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            ok = kpos[None, :] <= qpos[:, None] if causal else \
+                jnp.ones((qc, qc), bool)
+            if window is not None:
+                ok &= qpos[:, None] - kpos[None, :] < window
+            sc = jnp.where(ok[None, None, None], sc, -jnp.inf)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sc - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqp,bpkd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc_.transpose(1, 0, 2, 3, 4), vc_.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nq)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)    # (b,kv,g,qc,d)
+        return None, out.transpose(0, 3, 1, 2, 4)       # (b,qc,kv,g,d)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qg.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (train/prefill path)
+# ---------------------------------------------------------------------------
+
+
+def attention_block(p: dict, x: jnp.ndarray, a: AttnConfig, *, eps: float,
+                    impl: str = "auto", chunk: int = 512,
+                    window: int | None = None) -> jnp.ndarray:
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, a, positions, eps)
+    use_chunked = impl == "chunked" or (impl == "auto" and s > 2048)
+    if use_chunked and s % min(chunk, s) == 0:
+        out = attention_chunked(q, k, v, causal=a.causal, window=window,
+                                chunk=chunk)
+    else:
+        pos = jnp.arange(s)
+        out = attention_plain(q, k, v, pos, pos, causal=a.causal, window=window)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention with KV cache (full-context and ring-buffer window)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, max_len: int, a: AttnConfig, window: int | None,
+                  dtype=jnp.float32) -> dict:
+    length = min(window, max_len) if window else max_len
+    shape = (batch, length, a.n_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(p: dict, x: jnp.ndarray, cache: dict, step: jnp.ndarray,
+                     a: AttnConfig, *, eps: float,
+                     window: int | None = None) -> tuple[jnp.ndarray, dict]:
+    """One-token attention.  x (B,1,d); ``step`` scalar = current position.
+
+    Full-context layers index the cache at ``step``; window layers use a
+    ring buffer of size W with slot = step mod W.
+    """
+    from ..parallel.ctx import shard  # noqa: PLC0415
+
+    b = x.shape[0]
+    positions = jnp.full((b, 1), step)
+    q, k_new, v_new = _project_qkv(p, x, a, positions, eps)
+    length = cache["k"].shape[1]
+    slot = step % length if window else step
+    ck = shard("attn_kv", jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0)))
+    cv = shard("attn_kv", jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)))
+
+    idx = jnp.arange(length)
+    if window:
+        # absolute position of ring slot j after writing at `slot`
+        kpos = jnp.where(idx <= slot, step - slot + idx,
+                         step - slot - length + idx)
+        valid = kpos >= jnp.maximum(0, step - length + 1)
+        kpos = jnp.where(valid, kpos, step + 1)   # invalid -> future -> masked
+    else:
+        kpos = jnp.where(idx <= step, idx, step + 1)
+    out = attention_plain(q, ck, cv, positions[:, :1] * 0 + step,
+                          kpos[None, :].repeat(b, 0),
+                          causal=True, window=window)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# FFN params
+# ---------------------------------------------------------------------------
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, act: str,
+                    dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    scale_in, scale_out = d_model ** -0.5, d_ff ** -0.5
+    if act == "swiglu":
+        return {
+            "w_gate": jax.random.normal(ks[0], (d_model, d_ff), dtype) * scale_in,
+            "w_up": jax.random.normal(ks[1], (d_model, d_ff), dtype) * scale_in,
+            "w_down": jax.random.normal(ks[2], (d_ff, d_model), dtype) * scale_out,
+        }
+    return {
+        "w_up": jax.random.normal(ks[0], (d_model, d_ff), dtype) * scale_in,
+        "w_down": jax.random.normal(ks[1], (d_ff, d_model), dtype) * scale_out,
+    }
+
+
+def mlp_block(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    return gelu_mlp(x, p["w_up"], p["w_down"])

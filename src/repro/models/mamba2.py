@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD, state-space duality) block in pure JAX.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060):
+intra-chunk quadratic attention-like term + inter-chunk state
+recurrence, expressed as one ``lax.scan`` over chunks so live memory is
+O(chunk^2) per head rather than O(S^2).  Single-token recurrent decode
+maintains (conv_state, ssd_state) -- the constant-size "KV cache" that
+makes the SSM archs eligible for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMConfig
+from .layers import rms_norm
+
+
+def init_mamba_params(key, d_model: int, s: SSMConfig, dtype=jnp.float32) -> dict:
+    d_in = s.expand * d_model
+    n_h = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state
+    ks = jax.random.split(key, 4)
+    si = d_model ** -0.5
+    return {
+        # projections: [z, x, B, C, dt]
+        "w_in": jax.random.normal(ks[0], (d_model, 2 * d_in + 2 * s.d_state + n_h),
+                                  dtype) * si,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_ch), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_h)).astype(jnp.float32),
+        "D": jnp.ones((n_h,), jnp.float32),
+        "dt_bias": jnp.zeros((n_h,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_out": jax.random.normal(ks[2], (d_in, d_model), dtype) * d_in ** -0.5,
+    }
+
+
+def _split_proj(proj, d_in, n, n_h):
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: 2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    assert dt.shape[-1] == n_h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, xbc (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_scan(xdt, dA, B, C, chunk: int, state0=None):
+    """Chunked SSD.  xdt (b,S,h,p) [= x*dt], dA (b,S,h), B/C (b,S,n).
+
+    Returns (y (b,S,h,p), final_state (b,h,p,n)).
+    """
+    b, s_len, h, p = xdt.shape
+    n = B.shape[-1]
+    q = min(chunk, s_len)
+    if s_len % q:
+        raise ValueError(f"S={s_len} not a multiple of chunk={q}")
+    nc = s_len // q
+
+    xc = xdt.reshape(b, nc, q, h, p)
+    dac = dA.reshape(b, nc, q, h)
+    bc = B.reshape(b, nc, q, n)
+    cc = C.reshape(b, nc, q, n)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def step(state, inp):
+        x_c, da_c, b_c, c_c = inp                 # (b,q,h,p),(b,q,h),(b,q,n)x2
+        acum = jnp.cumsum(da_c, axis=1)           # (b,q,h)
+        # intra-chunk: L[qi,pj] = exp(acum[qi] - acum[pj]) for qi >= pj.
+        # double-where keeps exp's argument finite on the masked triangle
+        # (exp(+large) -> inf would leak NaN into gradients otherwise).
+        diff = acum[:, :, None, :] - acum[:, None, :, :]           # (b,q,p,h)
+        mask = tri[None, :, :, None]
+        ldec = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+        scores = jnp.einsum("bqn,bpn->bqp", c_c, b_c)              # (b,q,p)
+        y_diag = jnp.einsum("bqp,bqph,bphd->bqhd", scores, ldec, x_c)
+        # carry-in contribution
+        y_off = jnp.einsum("bqn,bhdn,bqh->bqhd", c_c, state,
+                           jnp.exp(acum))
+        # state update
+        decay_to_end = jnp.exp(acum[:, -1:, :] - acum)             # (b,q,h)
+        contrib = jnp.einsum("bqh,bqn,bqhd->bhdn", decay_to_end, b_c, x_c)
+        state_new = state * jnp.exp(acum[:, -1])[:, :, None, None] + contrib
+        return state_new, y_diag + y_off
+
+    state, y = jax.lax.scan(
+        step, state0,
+        (xc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         dac.transpose(1, 0, 2, 3).astype(jnp.float32),
+         bc.transpose(1, 0, 2, 3).astype(jnp.float32),
+         cc.transpose(1, 0, 2, 3).astype(jnp.float32)))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s_len, h, p)
+    return y, state
+
+
+def mamba_block(params: dict, u: jnp.ndarray, s: SSMConfig, *, eps: float
+                ) -> jnp.ndarray:
+    """Training/prefill forward.  u (B, S, d_model) -> (B, S, d_model)."""
+    b, sl, d_model = u.shape
+    d_in = s.expand * d_model
+    n, n_h, p = s.d_state, (s.expand * d_model) // s.head_dim, s.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", u, params["w_in"])
+    z, xbc, dt = _split_proj(proj, d_in, n, n_h)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x = xbc[..., :d_in].reshape(b, sl, n_h, p)
+    bmat = xbc[..., d_in: d_in + n]
+    cmat = xbc[..., d_in + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                        # (h,)
+    da = dt * a                                          # (b,s,h)
+    y, _ = _ssd_scan(x.astype(jnp.float32) * dt[..., None], da, bmat, cmat,
+                     s.chunk)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, sl, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], eps)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(batch: int, d_model: int, s: SSMConfig,
+                     dtype=jnp.float32) -> dict:
+    d_in = s.expand * d_model
+    n_h = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, n_h, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(params: dict, u: jnp.ndarray, cache: dict, s: SSMConfig,
+                      *, eps: float) -> tuple[jnp.ndarray, dict]:
+    """u (B, 1, d_model) -> (y (B, 1, d_model), new cache)."""
+    b, _, d_model = u.shape
+    d_in = s.expand * d_model
+    n, n_h, p = s.d_state, (s.expand * d_model) // s.head_dim, s.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", u, params["w_in"])[:, 0]   # (b, e)
+    z, xbc_new, dt = _split_proj(proj, d_in, n, n_h)
+    # conv over [cache window, new]
+    win = jnp.concatenate([cache["conv"], xbc_new[:, None, :]], axis=1)
+    xbc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win, params["conv_w"]) + params["conv_b"])
+    new_conv = win[:, 1:]
+
+    x = xbc[:, :d_in].reshape(b, n_h, p)
+    bmat = xbc[:, d_in: d_in + n]
+    cmat = xbc[:, d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,h)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a)                                  # (b,h)
+
+    contrib = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None],
+                         bmat.astype(jnp.float32))
+    state = cache["state"] * da[:, :, None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], eps)
+    out = jnp.einsum("be,ed->bd", y, params["w_out"])[:, None, :]
+    return out, {"conv": new_conv, "state": state}

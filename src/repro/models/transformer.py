@@ -1,0 +1,383 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+families of the assignment.
+
+The layer stack is expressed as a repeating *pattern* scanned over
+``n_groups`` (stacked params), e.g.:
+
+  dense (qwen3, phi3):   ("A",) x n_layers
+  gemma3:                ("L","L","L","L","L","G") x 8   (5:1 local:global)
+  mamba2:                ("M",) x 48
+  zamba2:                ("M","M","M","M","M","S") x 9   (S = shared block)
+
+Scan-over-groups keeps the compiled HLO size O(pattern), which is what
+makes 61-layer trillion-parameter dry-runs compile in seconds.  Shared
+blocks ("S") close over unstacked params: identical weights at every
+occurrence (Zamba2 semantics), but per-occurrence KV caches.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.ctx import shard
+from .layers import (
+    attention_block,
+    attention_decode,
+    init_attn_params,
+    init_kv_cache,
+    init_mlp_params,
+    mlp_block,
+    rms_norm,
+)
+from .mamba2 import (
+    init_mamba_cache,
+    init_mamba_params,
+    mamba_block,
+    mamba_decode_step,
+)
+from .moe import init_moe_params, moe_apply, moe_block
+
+
+# ---------------------------------------------------------------------------
+# Per-kind layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    d = cfg.d_model
+    if kind == "M":
+        k1, = jax.random.split(key, 1)
+        return {"norm": jnp.ones((d,), dtype),
+                "mamba": init_mamba_params(k1, d, cfg.ssm, dtype)}
+    # attention kinds: A (full), L (local window), G (global), S (shared)
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": jnp.ones((d,), dtype),
+         "norm2": jnp.ones((d,), dtype),
+         "attn": init_attn_params(k1, d, cfg.attn, dtype)}
+    if cfg.moe is not None and kind != "S":
+        p["moe"] = init_moe_params(k2, d, cfg.moe, dtype)
+    else:
+        p["mlp"] = init_mlp_params(k2, d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _layer_window(cfg: ModelConfig, kind: str) -> int | None:
+    return cfg.attn.window if kind == "L" else None
+
+
+def _apply_layer_train(p: dict, x, cfg: ModelConfig, kind: str):
+    """Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "M":
+        x = x + mamba_block(p["mamba"], rms_norm(x, p["norm"], cfg.norm_eps),
+                            cfg.ssm, eps=cfg.norm_eps)
+        return x, aux
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    x = x + attention_block(p["attn"], h, cfg.attn, eps=cfg.norm_eps,
+                            impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+                            window=_layer_window(cfg, kind))
+    x = shard("resid", x)
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_apply(p["moe"], h, cfg.moe)
+        x = x + y
+    else:
+        x = x + mlp_block(p["mlp"], h, cfg.act)
+    return shard("resid", x), aux
+
+
+def _init_layer_cache(batch: int, max_len: int, cfg: ModelConfig, kind: str,
+                      dtype) -> dict:
+    if kind == "M":
+        return init_mamba_cache(batch, cfg.d_model, cfg.ssm, dtype)
+    return init_kv_cache(batch, max_len, cfg.attn,
+                         _layer_window(cfg, kind), dtype)
+
+
+def _apply_layer_decode(p: dict, x, cache: dict, step, cfg: ModelConfig,
+                        kind: str):
+    if kind == "M":
+        y, cache = mamba_decode_step(
+            p["mamba"], rms_norm(x, p["norm"], cfg.norm_eps), cache,
+            cfg.ssm, eps=cfg.norm_eps)
+        return x + y, cache
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    y, cache = attention_decode(p["attn"], h, cache, step, cfg.attn,
+                                eps=cfg.norm_eps,
+                                window=_layer_window(cfg, kind))
+    x = x + y
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if "moe" in p:
+        y, _ = moe_apply(p["moe"], h, cfg.moe)
+        x = x + y
+    else:
+        x = x + mlp_block(p["mlp"], h, cfg.act)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Sharded cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def sharded_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """CE that never materialises/gathers full log-softmax.
+
+    All vocab-dim reductions (max, sumexp, label pick via one-hot
+    multiply-reduce) stay shard-local under a vocab-sharded logits
+    layout; GSPMD only inserts tiny (B, S) partial-sum collectives --
+    vs the take_along_axis formulation which all-gathers the full
+    (B, S, V) f32 log-probs (measured in EXPERIMENTS.md SPerf).
+    """
+    logits = logits.astype(jnp.float32)
+    zmax = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - zmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + zmax[..., 0]
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    ce = lse - label_logit
+    mask = (labels >= 0).astype(jnp.float32)
+    return (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Activation checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, mode: str):
+    """Per-layer-group activation checkpointing for the training path.
+
+    "full" recomputes the whole group in the backward pass (only the
+    residual stream crosses group boundaries: S*d per token live);
+    "dots" keeps matmul outputs (less recompute, more memory).
+    """
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TransformerLM:
+    cfg: ModelConfig
+    dtype: jnp.dtype = jnp.float32
+
+    # -------------------- params --------------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        pattern = cfg.pattern
+        k_emb, k_groups, k_shared, k_head = jax.random.split(key, 4)
+
+        def init_group(k):
+            ks = jax.random.split(k, len(pattern))
+            return {f"l{i}": _init_layer(ks[i], cfg, kind, self.dtype)
+                    for i, kind in enumerate(pattern) if kind != "S"}
+
+        params = {
+            "embed": jax.random.normal(
+                k_emb, (cfg.vocab, cfg.d_model), self.dtype) * 0.02,
+            "groups": jax.vmap(init_group)(
+                jax.random.split(k_groups, cfg.n_groups)),
+            "final_norm": jnp.ones((cfg.d_model,), self.dtype),
+        }
+        if "S" in pattern:
+            params["shared"] = _init_layer(k_shared, cfg, "S", self.dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = jax.random.normal(
+                k_head, (cfg.d_model, cfg.vocab), self.dtype) * 0.02
+        return params
+
+    def param_specs(self):
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # -------------------- forward --------------------
+
+    def _embed(self, params, tokens, image_embeds=None):
+        x = params["embed"][tokens].astype(self.dtype)
+        if self.cfg.vision_tokens and image_embeds is not None:
+            x = jnp.concatenate([image_embeds.astype(self.dtype), x], axis=1)
+        return shard("resid", x)
+
+    def _logits(self, params, x):
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        head = params["embed"].T if self.cfg.tie_embeddings else params["head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        return shard("logits", logits.astype(jnp.float32))
+
+    def forward(self, params, tokens, image_embeds=None):
+        """Full forward -> (logits (B, S_total, V), aux)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, image_embeds)
+        pattern = cfg.pattern
+        shared = params.get("shared")
+
+        def group_fn(carry, gp):
+            x, aux = carry
+            for i, kind in enumerate(pattern):
+                p = shared if kind == "S" else gp[f"l{i}"]
+                x, a = _apply_layer_train(p, x, cfg, kind)
+                aux = aux + a
+            return (x, aux), None
+
+        group_fn = _maybe_remat(group_fn, cfg.remat)
+        (x, aux), _ = jax.lax.scan(
+            group_fn, (x, jnp.zeros((), jnp.float32)), params["groups"])
+        return self._logits(params, x), aux / cfg.n_layers
+
+    def train_loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("image_embeds"))
+        labels = batch["labels"]
+        v = self.cfg.vision_tokens if batch.get("image_embeds") is not None else 0
+        logits = logits[:, v:]
+        ce = sharded_cross_entropy(logits, labels)
+        return ce + 0.01 * aux
+
+    # -------------------- serving --------------------
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        pattern = cfg.pattern
+
+        def one_group(_):
+            return {f"l{i}": _init_layer_cache(batch, max_len, cfg, kind,
+                                               self.dtype)
+                    for i, kind in enumerate(pattern)}
+
+        caches = jax.vmap(one_group)(jnp.arange(cfg.n_groups))
+        return {"layers": caches, "step": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, tokens, max_len: int, image_embeds=None):
+        """Process a full prompt, build the decode cache.
+
+        Implemented as the train-mode forward (chunked attention) plus a
+        cache-population pass per layer; returns (last_logits, cache).
+        """
+        cfg = self.cfg
+        b, s_tok = tokens.shape
+        x = self._embed(params, tokens, image_embeds)
+        s = x.shape[1]
+        pattern = cfg.pattern
+        shared = params.get("shared")
+        from .layers import _project_qkv  # noqa: PLC0415
+
+        def group_fn(carry, gp):
+            x, aux = carry
+            cache_out = {}
+            for i, kind in enumerate(pattern):
+                p = shared if kind == "S" else gp[f"l{i}"]
+                if kind == "M":
+                    from .mamba2 import _causal_conv, _split_proj, _ssd_scan  # noqa: PLC0415
+                    h = rms_norm(x, p["norm"], cfg.norm_eps)
+                    mp = p["mamba"]
+                    d_in = cfg.ssm.expand * cfg.d_model
+                    n = cfg.ssm.d_state
+                    n_h = d_in // cfg.ssm.head_dim
+                    proj = jnp.einsum("bsd,de->bse", h, mp["w_in"])
+                    z, xbc_raw, dt = _split_proj(proj, d_in, n, n_h)
+                    xbc = _causal_conv(xbc_raw, mp["conv_w"], mp["conv_b"])
+                    xs = xbc[..., :d_in].reshape(b, s, n_h, cfg.ssm.head_dim)
+                    bmat, cmat = xbc[..., d_in:d_in + n], xbc[..., d_in + n:]
+                    dtf = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"])
+                    da = dtf * (-jnp.exp(mp["A_log"]))
+                    y, state = _ssd_scan(xs.astype(jnp.float32) * dtf[..., None],
+                                         da, bmat, cmat, cfg.ssm.chunk)
+                    y = y + mp["D"][None, None, :, None] * xs.astype(jnp.float32)
+                    y = y.reshape(b, s, d_in).astype(x.dtype)
+                    y = rms_norm(y * jax.nn.silu(z), mp["norm_w"], cfg.norm_eps)
+                    x = x + jnp.einsum("bse,ed->bsd", y, mp["w_out"])
+                    pad = cfg.ssm.d_conv - 1
+                    conv_tail = xbc_raw[:, -pad:] if s >= pad else jnp.pad(
+                        xbc_raw, ((0, 0), (pad - s, 0), (0, 0)))
+                    cache_out[f"l{i}"] = {"conv": conv_tail, "state": state}
+                else:
+                    window = _layer_window(cfg, kind)
+                    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+                    positions = jnp.arange(s)[None, :]
+                    q, kk, vv = _project_qkv(p["attn"], h, cfg.attn, positions,
+                                             cfg.norm_eps)
+                    from .layers import attention_chunked, attention_plain  # noqa: PLC0415
+                    use_chunked = (cfg.attn_impl == "chunked"
+                                   or (cfg.attn_impl == "auto" and s > 2048))
+                    if use_chunked and s % min(cfg.attn_chunk, s) == 0:
+                        o = attention_chunked(q, kk, vv, causal=True,
+                                              window=window,
+                                              chunk=cfg.attn_chunk)
+                    else:
+                        pos = jnp.arange(s)
+                        o = attention_plain(q, kk, vv, pos, pos, causal=True,
+                                            window=window)
+                    x = x + jnp.einsum(
+                        "bse,ed->bsd", o.reshape(b, s, -1), p["attn"]["wo"])
+                    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+                    if "moe" in p:
+                        y, a = moe_apply(p["moe"], h2, cfg.moe)
+                        x, aux = x + y, aux + a
+                    else:
+                        x = x + mlp_block(p["mlp"], h2, cfg.act)
+                    # populate the cache (ring layout for window layers)
+                    length = min(window, max_len) if window else max_len
+                    ck = jnp.zeros((b, length, cfg.attn.n_kv_heads,
+                                    cfg.attn.head_dim), self.dtype)
+                    cv = jnp.zeros_like(ck)
+                    if window and s > length:
+                        src_k, src_v = kk[:, -length:], vv[:, -length:]
+                        roll = s % length
+                        src_k = jnp.roll(src_k, roll, axis=1)
+                        src_v = jnp.roll(src_v, roll, axis=1)
+                        ck = src_k.astype(self.dtype)
+                        cv = src_v.astype(self.dtype)
+                    else:
+                        upto = min(s, length)
+                        ck = jax.lax.dynamic_update_slice(
+                            ck, kk[:, :upto].astype(self.dtype), (0, 0, 0, 0))
+                        cv = jax.lax.dynamic_update_slice(
+                            cv, vv[:, :upto].astype(self.dtype), (0, 0, 0, 0))
+                    cache_out[f"l{i}"] = {"k": shard("kv", ck),
+                                          "v": shard("kv", cv)}
+                x = shard("resid", x)
+            return (x, aux), cache_out
+
+        (x, _), caches = jax.lax.scan(
+            group_fn, (x, jnp.zeros((), jnp.float32)), params["groups"])
+        logits = self._logits(params, x[:, -1:, :])
+        return logits[:, 0], {"layers": caches,
+                              "step": jnp.asarray(s, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        """One-token step.  tokens (B, 1) -> (logits (B, V), new cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.dtype)
+        step = cache["step"]
+        pattern = cfg.pattern
+        shared = params.get("shared")
+
+        def group_fn(x, scanned):
+            gp, gcache = scanned
+            new_cache = {}
+            for i, kind in enumerate(pattern):
+                p = shared if kind == "S" else gp[f"l{i}"]
+                x, c = _apply_layer_decode(p, x, gcache[f"l{i}"], step, cfg,
+                                           kind)
+                new_cache[f"l{i}"] = c
+            return x, new_cache
+
+        x, new_layer_caches = jax.lax.scan(
+            group_fn, x, (params["groups"], cache["layers"]))
+        logits = self._logits(params, x)
+        return logits[:, 0], {"layers": new_layer_caches, "step": step + 1}

@@ -1,0 +1,84 @@
+"""Gradient compression for bandwidth-bound data parallelism.
+
+Two compositional distributed-optimization tricks:
+
+  * int8 quantized gradient exchange with per-tensor scale -- 4x
+    all-reduce bytes reduction; combined with error feedback (EF-SGD,
+    Karimireddy et al. 2019) the quantization error is re-injected next
+    step so convergence is preserved.
+  * top-k sparsification with error feedback -- for extreme ratios; the
+    sparse residual connects directly to the paper's theme (transmit
+    fewer non-zeros).
+
+The trainer applies compress/decompress around the gradient all-reduce
+point (crossing the 'data'+'pod' axes); in single-host tests the round
+trip is exercised without a mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    mode: str = "none"               # none | int8 | topk
+    topk_ratio: float = 0.01
+    error_feedback: bool = True
+
+
+def quantize_int8(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(g: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, int(flat.shape[0] * ratio))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_tree(cfg: CompressionConfig, grads, residual):
+    """Apply compression with error feedback.
+
+    Returns (compressed_grads_for_allreduce, new_residual).  The
+    compressed grads are already dequantized (value-compressed) so the
+    caller's all-reduce stays dtype-uniform; byte savings are realized
+    by the int8 collective in the sharded trainer.
+    """
+    if cfg.mode == "none":
+        return grads, residual
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (r if r is not None else 0.0)
+        if cfg.mode == "int8":
+            q, s = quantize_int8(gf)
+            out = dequantize_int8(q, s)
+        elif cfg.mode == "topk":
+            out = gf * topk_mask(gf, cfg.topk_ratio)
+        else:
+            raise ValueError(cfg.mode)
+        new_r = (gf - out) if cfg.error_feedback else jnp.zeros_like(gf)
+        return out.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual) if residual is not None \
+        else [None] * len(flat_g)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_residual(cfg: CompressionConfig, params):
+    if cfg.mode == "none" or not cfg.error_feedback:
+        return None
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

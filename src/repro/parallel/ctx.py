@@ -1,0 +1,56 @@
+"""Activation-sharding context.
+
+Model code stays mesh-agnostic: it calls ``shard(name, x)`` at canonical
+cut points (residual stream, logits, kv-cache, moe buffers).  The
+launcher installs a sharder that maps names to
+``jax.lax.with_sharding_constraint`` specs for the active mesh; outside
+a mesh the hook is the identity, so smoke tests and single-host runs are
+untouched.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable
+
+_state = threading.local()
+
+
+def _identity(name: str, x):
+    return x
+
+
+def shard(name: str, x):
+    fn: Callable = getattr(_state, "sharder", _identity)
+    return fn(name, x)
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Callable):
+    prev = getattr(_state, "sharder", _identity)
+    _state.sharder = fn
+    try:
+        yield
+    finally:
+        _state.sharder = prev
+
+
+# --- expert-parallel execution context -------------------------------------
+# When set, MoE layers run through the shard_map EP path (local dispatch
+# per data shard, expert weights gathered over 'data', psum combine over
+# 'model') instead of the pjit/GSPMD-propagated path.
+
+
+def ep_context():
+    return getattr(_state, "ep", None)
+
+
+@contextlib.contextmanager
+def expert_parallel(mesh, dp_axes: tuple[str, ...], model_axis: str):
+    prev = getattr(_state, "ep", None)
+    _state.ep = (mesh, tuple(dp_axes), model_axis)
+    try:
+        yield
+    finally:
+        _state.ep = prev

@@ -1,0 +1,257 @@
+"""Sharding rules: DP / TP / EP / ZeRO across the production mesh.
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model')
+multi-pod.  'pod' composes with 'data' as the data-parallel dimension.
+
+Parameter placement policy (keypath-pattern rules):
+
+  * embeddings / lm head        : vocab dim over 'model'
+  * attention qkv / o           : Megatron column/row parallel over
+                                  'model' (all assigned archs have
+                                  heads*head_dim % 16 == 0)
+  * dense FFN                   : column/row parallel over 'model'
+  * MoE experts                 : expert axis over 'model' (EP) and the
+                                  d_model axis over 'data' (fully-
+                                  sharded params, FSDP-style) -- this is
+                                  what lets the 1T kimi config fit
+  * mamba / conv / norms / scalars : replicated (SSM archs are <3B;
+                                  ZeRO-1 still shards their moments)
+  * optimizer moments (m, v)    : parameter spec + 'data' added on the
+                                  largest evenly-divisible free dim
+                                  (ZeRO-1)
+
+Activation cut points (installed via ``repro.parallel.ctx``):
+  resid  : (batch over 'pod'+'data')
+  logits : batch over DP axes, vocab over 'model'
+  kv     : batch over DP axes when batch divides; else sequence over
+           'data' (context-parallel cache for the long_500k cell)
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def _divides(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(mesh: Mesh, path: str, shape: tuple[int, ...]) -> P:
+    def ok(dim_idx, axes) -> bool:
+        return _divides(shape[dim_idx], mesh, axes)
+
+    # --- embeddings & head ---
+    if path.endswith("['embed']"):
+        return P("model", None) if ok(0, "model") else P(None, None)
+    if path.endswith("['head']"):
+        return P(None, "model") if ok(1, "model") else P(None, None)
+
+    # --- MoE experts: EP over 'model' + FSDP over 'data' ---
+    # 'data' goes on the d_model dim: dim 1 for (E, d, h) up/gate
+    # projections, dim 2 for (E, h, d) down projections -- keeping the
+    # FSDP axis consistent with the shard_map EP path's in_specs.
+    if "['moe']" in path:
+        if path.endswith("['router']"):
+            return P(None, None)
+        if len(shape) == 3:  # (E, d_in, d_out)
+            spec = ["model" if ok(0, "model") else None, None, None]
+            fsdp_dim = 2 if path.endswith("['w_down']") else 1
+            if spec[0] == "model" and ok(fsdp_dim, "data"):
+                spec[fsdp_dim] = "data"
+            return P(*spec)
+        if len(shape) == 2:  # shared expert
+            return P(None, "model") if ok(1, "model") else P(None, None)
+
+    # --- attention ---
+    if "['attn']" in path or "['xattn']" in path:
+        if path.endswith("['wo']"):
+            return P("model", None) if ok(0, "model") else P(None, None)
+        if len(shape) == 2:  # wq / wk / wv
+            return P(None, "model") if ok(1, "model") else P(None, None)
+        return P(None)       # qk norm scales
+
+    # --- dense FFN ---
+    if "['mlp']" in path:
+        if path.endswith("['w_down']"):
+            return P("model", None) if ok(0, "model") else P(None, None)
+        return P(None, "model") if ok(1, "model") else P(None, None)
+
+    # --- mamba & everything else: replicated ---
+    return P(*([None] * len(shape)))
+
+
+def _with_group_dim(spec: P, path: str, shape) -> P:
+    """Stacked group params carry a leading n_groups dim (from the scan);
+    prepend None for it."""
+    if "['groups']" in path or "['enc']" in path:
+        return P(*((None,) + tuple(spec)))
+    return spec
+
+
+def param_shardings(mesh: Mesh, param_tree):
+    """Pytree of NamedSharding matching ``param_tree`` (of SDS/arrays)."""
+
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        if "['groups']" in key or "['enc']" in key:
+            inner = _param_spec(mesh, key, shape[1:])
+            spec = _with_group_dim(inner, key, shape)
+        else:
+            spec = _param_spec(mesh, key, shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def zero1_shardings(mesh: Mesh, param_tree):
+    """Optimizer-moment placement: param spec + 'data' on the largest
+    free (unsharded) dim that divides evenly -- ZeRO-1."""
+
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        offset = 0
+        if "['groups']" in key or "['enc']" in key:
+            base = tuple(_with_group_dim(
+                _param_spec(mesh, key, shape[1:]), key, shape))
+        else:
+            base = tuple(_param_spec(mesh, key, shape))
+        base = list(base) + [None] * (len(shape) - len(base))
+        if "data" not in base:
+            # choose largest divisible free dim
+            cands = [(shape[i], i) for i in range(offset, len(shape))
+                     if base[i] is None and _divides(shape[i], mesh, "data")]
+            if cands:
+                _, i = max(cands)
+                base[i] = "data"
+        return NamedSharding(mesh, P(*base))
+
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, batch_tree, global_batch: int):
+    dp = dp_axes(mesh)
+    bspec = dp if global_batch % _axis_size(mesh, tuple(dp)) == 0 else None
+
+    def one(leaf):
+        spec = [bspec] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree, batch: int):
+    """KV caches: batch over DP if divisible, else context-parallel on
+    the sequence dim ('data')."""
+    dp = dp_axes(mesh)
+    batch_ok = batch % _axis_size(mesh, tuple(dp)) == 0
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        key = jax.tree_util.keystr(path)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        # layer caches are stacked with a leading group dim
+        bdim = 1 if "['layers']" in key else 0
+        if len(shape) > bdim:
+            if batch_ok and shape[bdim] == batch:
+                spec[bdim] = dp
+            elif ("['k']" in key or "['v']" in key) and \
+                    len(shape) > bdim + 1 and \
+                    _divides(shape[bdim + 1], mesh, "data"):
+                # context-parallel cache (batch too small to shard)
+                spec[bdim + 1] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def make_activation_sharder(mesh: Mesh, opts: frozenset[str] = frozenset()):
+    """Installable hook for repro.parallel.ctx.activation_sharding.
+
+    ``opts`` enables the SPerf optimisation variants:
+      attn_batch_only   pin q/k/v (and decode caches) to batch-only
+                        sharding -- attention computed model-replicated,
+                        killing the per-chunk partial-sum all-reduces
+                        GSPMD otherwise emits for GQA head counts that
+                        don't divide the model axis.
+      moe_gather_weights  regather FSDP-sharded expert weights once per
+                        layer (classic FSDP) instead of contracting over
+                        the sharded d_model dim.
+      seq_par           sequence-shard the residual stream over 'model'
+                        (activation-memory reduction; adds boundary
+                        collectives).
+    """
+    dp = dp_axes(mesh)
+
+    def batch_spec(x):
+        if x.shape[0] % _axis_size(mesh, tuple(dp)) == 0:
+            return P(dp, *([None] * (x.ndim - 1)))
+        return None
+
+    def sharder(name: str, x):
+        try:
+            spec = None
+            if name == "resid" and x.ndim >= 2:
+                spec = batch_spec(x)
+                if spec is not None and "seq_par" in opts and x.ndim == 3 \
+                        and x.shape[1] % mesh.shape["model"] == 0:
+                    spec = P(dp, "model", None)
+            elif name == "logits" and x.ndim == 3:
+                bspec = dp if x.shape[0] % _axis_size(mesh, tuple(dp)) == 0 \
+                    else None
+                vspec = "model" if x.shape[-1] % mesh.shape["model"] == 0 \
+                    else None
+                spec = P(bspec, None, vspec)
+            elif name == "kv" and x.ndim >= 2:
+                spec = batch_spec(x)
+            elif name in ("attn_q", "attn_kv") and \
+                    "attn_batch_only" in opts and x.ndim >= 2:
+                spec = batch_spec(x)
+            elif name == "moe_w" and "moe_gather_weights" in opts:
+                # expert weights: keep EP over 'model', gather over 'data'
+                spec = P("model", *([None] * (x.ndim - 1))) \
+                    if x.shape[0] % mesh.shape["model"] == 0 else \
+                    P(*([None] * x.ndim))
+            elif name == "moe_xe" and "moe_gather_weights" in opts:
+                spec = P("model", *([None] * (x.ndim - 1))) \
+                    if x.shape[0] % mesh.shape["model"] == 0 else None
+            if spec is None:
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        except (ValueError, TypeError):
+            return x
+
+    return sharder
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda leaf: NamedSharding(
+        mesh, P(*([None] * getattr(leaf, "ndim", 0)))), tree)

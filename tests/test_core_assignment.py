@@ -1,0 +1,169 @@
+"""Tests for Alg. 1 / Alg. 2 assignment structure (Lemmas 1-2, Hall condition)."""
+
+import itertools
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    MV_SCHEMES,
+    appearances,
+    alg1_supports,
+    cyclic31_mm,
+    make_hetero_system,
+    mm_unknown_supports,
+    proposed_mm,
+    proposed_mv,
+    scs_mv,
+    union_cover_count,
+)
+from repro.core.weights import choose_mm_weights
+
+
+def mv_cases():
+    return [(6, 4), (12, 9), (10, 7), (20, 16), (30, 21), (9, 6), (8, 4)]
+
+
+class TestAlg1Structure:
+    def test_example1_fig1(self):
+        assert alg1_supports(6, 4) == [
+            (0, 1), (1, 2), (2, 3), (3, 0), (0, 1), (2, 3)]
+
+    def test_example3_fig2(self):
+        sup = alg1_supports(12, 9)
+        assert sup[:9] == [tuple((i + j) % 9 for j in range(3)) for i in range(9)]
+        assert sup[9:] == [(0, 1, 2), (3, 4, 5), (6, 7, 8)]
+
+    def test_weight_is_homogeneous_and_minimal(self):
+        for n, k in mv_cases():
+            sch = proposed_mv(n, k)
+            assert all(len(t) == sch.omega_A for t in sch.supports)
+
+    def test_appearance_count(self):
+        """Prop. 1 proof ingredient: every unknown appears in >= s+1 workers."""
+        for n, k in mv_cases():
+            sch = proposed_mv(n, k)
+            cnt = appearances(sch.supports, k)
+            assert cnt.min() >= sch.s + 1, (n, k, cnt)
+
+    def test_lemma1_hall_condition_exhaustive_small(self):
+        """Lemma 1: any m <= k_A workers cover >= m unknowns (exhaustive)."""
+        for n, k in [(6, 4), (9, 6), (10, 7), (8, 4)]:
+            sch = proposed_mv(n, k)
+            for m in range(1, k + 1):
+                for combo in itertools.combinations(range(n), m):
+                    assert union_cover_count(sch.supports, list(combo)) >= m
+
+    @given(st.integers(2, 40), st.data())
+    @settings(max_examples=120, deadline=None)
+    def test_lemma1_hall_condition_sampled(self, s, data):
+        k = data.draw(st.integers(s, min(3 * s * s + 3, 60)))
+        n = k + s
+        sch = proposed_mv(n, k)
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+        m = int(data.draw(st.integers(1, k)))
+        combo = rng.choice(n, size=m, replace=False).tolist()
+        assert union_cover_count(sch.supports, combo) >= m
+
+
+class TestAlg2Structure:
+    def test_fig4_allocation(self):
+        sch = proposed_mm(20, 4, 4)
+        assert sch.omega_A == sch.omega_B == 2
+        # W_0 group: A-support cyclic, B-support per j=floor(i/k_A)
+        assert sch.supports_A[0] == (0, 1) and sch.supports_B[0] == (0, 1)
+        assert sch.supports_A[5] == (1, 2) and sch.supports_B[5] == (1, 2)
+        # extra workers 16..19 (checked against Alg. 2 lines 9-11)
+        assert sch.supports_A[16] == (0, 1) and sch.supports_B[16] == (0, 1)
+        assert sch.supports_A[17] == (2, 3) and sch.supports_B[17] == (0, 1)
+        assert sch.supports_A[18] == (0, 1) and sch.supports_B[18] == (2, 3)
+        assert sch.supports_A[19] == (2, 3) and sch.supports_B[19] == (2, 3)
+
+    def test_class_structure(self):
+        """Sec. V-1: within class M_i (i mod k_A), A-supports identical."""
+        sch = proposed_mm(42, 6, 6)
+        k = 36
+        for i in range(sch.k_A):
+            cls = [w for w in range(k) if w % sch.k_A == i]
+            sups = {sch.supports_A[w] for w in cls}
+            assert len(sups) == 1
+
+    def test_mm_appearance_count(self):
+        for n, ka, kb in [(20, 4, 4), (42, 6, 6), (38, 6, 6), (18, 4, 4)]:
+            sch = proposed_mm(n, ka, kb)
+            unk = mm_unknown_supports(sch)
+            cnt = appearances(unk, ka * kb)
+            assert cnt.min() >= sch.s + 1, (n, ka, kb, int(cnt.min()))
+
+    def test_lemma2_hall_condition_sampled(self):
+        rng = np.random.default_rng(0)
+        for n, ka, kb in [(20, 4, 4), (42, 6, 6), (40, 6, 6)]:
+            sch = proposed_mm(n, ka, kb)
+            unk = mm_unknown_supports(sch)
+            k = ka * kb
+            for _ in range(300):
+                m = int(rng.integers(1, k + 1))
+                combo = rng.choice(n, size=m, replace=False).tolist()
+                assert union_cover_count(unk, combo) >= m
+
+    def test_weight_homogeneous(self):
+        sch = proposed_mm(42, 6, 6)
+        assert all(len(a) == 2 and len(b) == 3
+                   for a, b in zip(sch.supports_A, sch.supports_B))
+        assert sch.weight() == 6
+
+    def test_cyclic31_weight_higher(self):
+        ours = proposed_mm(42, 6, 6).weight()
+        theirs = cyclic31_mm(42, 6, 6).weight()
+        assert theirs == 8 and ours == 6
+
+
+class TestBaselines:
+    def test_dense_schemes_full_weight(self):
+        for name in ("poly", "orthopoly", "rkrp"):
+            sch = MV_SCHEMES[name](12, 9)
+            assert sch.omega_A == 9
+            assert all(len(t) == 9 for t in sch.supports)
+
+    def test_scs_delta_partition(self):
+        sch = scs_mv(42, 6)
+        assert sch.k_A == 42  # lcm(42, 6) unknowns
+        assert sch.tasks_per_worker == 7  # Delta / k_A
+        assert len(sch.supports) == 42 * 7
+        sch2 = scs_mv(12, 9)
+        assert sch2.k_A == 36  # lcm(12, 9)
+        assert sch2.tasks_per_worker == 4
+        assert len(sch2.supports) == 48
+
+    def test_scs_and_class_recover(self):
+        from repro.core import class_based_mv, verify_full_recovery
+        for fn in (scs_mv, class_based_mv):
+            ok, chk, fail = verify_full_recovery(fn(42, 6), seed=0,
+                                                 max_patterns=40)
+            assert ok, (fn.__name__, fail, chk)
+
+    def test_repetition_not_threshold_optimal(self):
+        sch = MV_SCHEMES["repetition"](6, 4)
+        assert not sch.threshold_optimal
+
+
+class TestHetero:
+    def test_example4(self):
+        """Example 4: capacities (3,2,2,1,1,1,1,1) -> n=12 virtual."""
+        sys = make_hetero_system([3, 2, 2, 1, 1, 1, 1, 1])
+        assert sys.n == 12 and sys.n_bar == 8
+        assert sys.virtual_of[0] == (0, 1, 2)
+        assert sys.virtual_of[1] == (3, 4)
+        # k_A = sum of first 5 capacities = 9, s = 3 (paper's numbers)
+        k_A = sum(sys.capacities[:5])
+        s = sum(sys.capacities[5:])
+        assert (k_A, s) == (9, 3)
+
+    @given(st.lists(st.integers(1, 4), min_size=3, max_size=10))
+    @settings(max_examples=60, deadline=None)
+    def test_virtualisation_partition(self, caps):
+        sys = make_hetero_system(caps)
+        flat = [v for grp in sys.virtual_of for v in grp]
+        assert flat == list(range(sys.n))
+        assert sorted(sys.capacities, reverse=True) == list(sys.capacities)

@@ -1,0 +1,168 @@
+"""Recovery-threshold (Theorems 1-2) and numerics tests for decoding."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CodedOperator,
+    coded_matmat,
+    coded_matvec,
+    cyclic31_mv,
+    decode,
+    is_recoverable,
+    proposed_mm,
+    proposed_mv,
+    repetition_mv,
+    stability_report,
+    system_matrix,
+    verify_full_recovery,
+)
+
+
+class TestTheorem1:
+    """Alg. 1 is resilient to ANY s = n - k_A stragglers."""
+
+    @pytest.mark.parametrize("n,k", [(6, 4), (12, 9), (10, 7), (9, 6), (8, 4)])
+    def test_exhaustive_recovery(self, n, k):
+        sch = proposed_mv(n, k)
+        G = system_matrix(sch, seed=3)
+        for pat in itertools.combinations(range(n), n - k):
+            alive = [w for w in range(n) if w not in pat][:k]
+            assert is_recoverable(G, alive), (n, k, pat)
+
+    @given(st.integers(1, 8), st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_sampled_recovery_property(self, s, data):
+        k = data.draw(st.integers(max(s, 2), min(s * s + s + 4, 24)))
+        n = k + s
+        sch = proposed_mv(n, k)
+        ok, checked, failed = verify_full_recovery(sch, seed=11, max_patterns=200)
+        assert ok, (n, k, failed, checked)
+
+    def test_repetition_fails_some_pattern(self):
+        """Sanity: the weight-1 repetition scheme is NOT resilient to all
+        patterns (it misses when both copies of a block straggle)."""
+        sch = repetition_mv(8, 4)
+        G = system_matrix(sch, seed=0)
+        bad = [0, 4]  # both copies of block 0
+        alive = [w for w in range(8) if w not in bad][:4]
+        assert not is_recoverable(G, alive)
+
+
+class TestTheorem2:
+    @pytest.mark.parametrize("n,ka,kb", [(20, 4, 4), (18, 4, 4), (12, 3, 3),
+                                         (11, 3, 3), (42, 6, 6)])
+    def test_recovery(self, n, ka, kb):
+        sch = proposed_mm(n, ka, kb)
+        ok, checked, failed = verify_full_recovery(sch, seed=5, max_patterns=600)
+        assert ok, (n, ka, kb, failed, checked)
+
+    def test_exhaustive_small(self):
+        sch = proposed_mm(11, 3, 3)  # C(11,2) = 55 patterns
+        G = system_matrix(sch, seed=1)
+        for pat in itertools.combinations(range(11), 2):
+            alive = [w for w in range(11) if w not in pat][:9]
+            assert is_recoverable(G, alive)
+
+
+class TestDecodeNumerics:
+    def test_decode_exact_square(self):
+        rng = np.random.default_rng(0)
+        sch = proposed_mv(12, 9)
+        G = system_matrix(sch, seed=2)
+        U = rng.standard_normal((9, 17))
+        Y = G @ U
+        rows = list(range(1, 10))
+        rec = decode(G, rows, Y)
+        np.testing.assert_allclose(rec, U, rtol=1e-8, atol=1e-10)
+
+    def test_decode_overdetermined(self):
+        rng = np.random.default_rng(1)
+        sch = proposed_mv(12, 9)
+        G = system_matrix(sch, seed=2)
+        U = rng.standard_normal((9, 5))
+        Y = G @ U
+        rec = decode(G, list(range(12)), Y)
+        np.testing.assert_allclose(rec, U, rtol=1e-8, atol=1e-10)
+
+    def test_kappa_orders(self):
+        """Sparse random coding is far better conditioned than the
+        Vandermonde polynomial code (Table III trend)."""
+        from repro.core import poly_mv
+        n, k = 16, 12
+        prop = stability_report(proposed_mv(n, k), seed=0, max_patterns=128)
+        poly = stability_report(poly_mv(n, k), seed=0, max_patterns=128)
+        assert prop.kappa_worst < poly.kappa_worst / 10
+
+
+class TestEndToEndJax:
+    def test_matvec_all_patterns(self):
+        rng = np.random.default_rng(0)
+        sch = proposed_mv(6, 4)
+        A = jnp.asarray(rng.standard_normal((24, 20)).astype(np.float64))
+        x = jnp.asarray(rng.standard_normal(24))
+        expected = np.asarray(A.T @ x)
+        for pat in itertools.combinations(range(6), 2):
+            done = np.ones(6, bool)
+            done[list(pat)] = False
+            y = coded_matvec(A, x, sch, seed=4, done=jnp.asarray(done))
+            np.testing.assert_allclose(np.asarray(y), expected, rtol=2e-4, atol=1e-5)
+
+    def test_matmat_with_padding(self):
+        """Non-divisible dims are zero-padded and cropped transparently."""
+        rng = np.random.default_rng(2)
+        sch = proposed_mm(20, 4, 4)
+        A = jnp.asarray(rng.standard_normal((30, 27)))   # 27 % 4 != 0
+        B = jnp.asarray(rng.standard_normal((30, 18)))   # 18 % 4 != 0
+        done = np.ones(20, bool)
+        done[[3, 7, 12, 16]] = False
+        out = coded_matmat(A, B, sch, seed=0, done=jnp.asarray(done))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(A.T @ B),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_operator_batched(self):
+        rng = np.random.default_rng(3)
+        sch = proposed_mv(12, 9)
+        A = jnp.asarray(rng.standard_normal((36, 45)))
+        op = CodedOperator.build(A, sch, seed=1)
+        xb = jnp.asarray(rng.standard_normal((5, 36)))
+        done = np.ones(12, bool)
+        done[[0, 5, 9]] = False
+        yb = op.apply(xb, jnp.asarray(done))
+        np.testing.assert_allclose(np.asarray(yb), np.asarray(xb @ A),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_cyclic31_also_recovers_but_heavier(self):
+        """Both schemes recover; ours uses strictly lower weight."""
+        rng = np.random.default_rng(4)
+        ours, theirs = proposed_mv(12, 9), cyclic31_mv(12, 9)
+        assert ours.omega_A == 3 and theirs.omega_A == 4
+        A = jnp.asarray(rng.standard_normal((18, 18)))
+        x = jnp.asarray(rng.standard_normal(18))
+        done = np.ones(12, bool)
+        done[[1, 2, 3]] = False
+        for sch in (ours, theirs):
+            y = coded_matvec(A, x, sch, seed=0, done=jnp.asarray(done))
+            np.testing.assert_allclose(np.asarray(y), np.asarray(A.T @ x),
+                                       rtol=2e-4, atol=1e-5)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_property_random_pattern_mv(self, seed):
+        """Property: for ANY straggler pattern of size s, decode is exact."""
+        rng = np.random.default_rng(seed)
+        sch = proposed_mv(10, 7)
+        A = jnp.asarray(rng.standard_normal((16, 14)))
+        x = jnp.asarray(rng.standard_normal(16))
+        pat = rng.choice(10, size=3, replace=False)
+        done = np.ones(10, bool)
+        done[pat] = False
+        y = coded_matvec(A, x, sch, seed=seed % 17, done=jnp.asarray(done))
+        # fp32 decode of a random k x k system: allow conditioning noise
+        np.testing.assert_allclose(np.asarray(y), np.asarray(A.T @ x),
+                                   rtol=2e-2, atol=2e-2)

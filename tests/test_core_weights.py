@@ -1,0 +1,125 @@
+"""Unit + property tests for the weight bounds (paper Sec. III)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    choose_mm_weights,
+    cyclic31_mm_weights,
+    cyclic31_mv_weight,
+    min_weight,
+    mv_weight,
+    weight_regime,
+)
+
+
+class TestProp1:
+    def test_paper_values(self):
+        # Sec. VI: n=42, s=6 -> 6 ; Fig. 5(a): n=36, s=8 -> 7 ;
+        # Fig. 5(b): n=56, s=14 -> 12 ; Example 1: n=6, s=2 -> 2.
+        assert min_weight(42, 6) == 6
+        assert min_weight(36, 8) == 7
+        assert min_weight(56, 14) == 12
+        assert min_weight(6, 2) == 2
+        assert min_weight(12, 3) == 3  # Example 3
+
+    def test_zero_stragglers(self):
+        assert min_weight(10, 0) == 1
+
+    @given(st.integers(2, 300), st.data())
+    @settings(max_examples=200, deadline=None)
+    def test_bound_formula_and_range(self, n, data):
+        s = data.draw(st.integers(0, n - 1))
+        w = min_weight(n, s)
+        k = n - s
+        # counting bound satisfied with equality-ceiling
+        assert n * w >= k * (s + 1)
+        assert n * (w - 1) < k * (s + 1)
+        # always within [1, s+1]
+        assert 1 <= w <= s + 1
+
+    @given(st.integers(1, 50), st.data())
+    @settings(max_examples=150, deadline=None)
+    def test_corollary1_regimes(self, s, data):
+        k = data.draw(st.integers(s, max(s, s * s + 10)))
+        n = k + s
+        w = min_weight(n, s)
+        regime = weight_regime(n, s)
+        if k > s * s:
+            assert regime == "i" and w == s + 1
+        elif s <= k <= s * s:
+            assert regime == "ii"
+            assert math.ceil((s + 1) / 2) <= w <= s
+
+    @given(st.integers(2, 200), st.data())
+    @settings(max_examples=150, deadline=None)
+    def test_nondecreasing_in_k(self, s, data):
+        """Eq. (1): omega_hat is non-decreasing in k for fixed s."""
+        k = data.draw(st.integers(s, 4 * s + 4))
+        w1 = min_weight(k + s, s)
+        w2 = min_weight(k + 1 + s, s)
+        assert w2 >= w1
+
+
+class TestMVWeight:
+    def test_matches_prop1(self):
+        for n, k in [(6, 4), (12, 9), (30, 21), (42, 36), (17, 11)]:
+            assert mv_weight(n, k) == min_weight(n, n - k)
+
+    def test_cyclic31_never_below_ours(self):
+        """Remark 1: [31]'s weight min(s+1, k_A) >= ours, strictly when
+        s <= k_A <= s^2."""
+        for n, k in [(12, 9), (30, 21), (6, 4), (20, 16)]:
+            s = n - k
+            ours, theirs = mv_weight(n, k), cyclic31_mv_weight(n, k)
+            assert theirs >= ours
+            if s <= k <= s * s:
+                assert theirs > ours
+
+
+class TestMMWeights:
+    def test_paper_choices(self):
+        w = choose_mm_weights(42, 6, 6)
+        assert (w.omega_A, w.omega_B) == (2, 3) and w.meets_bound and w.divisible
+        w = choose_mm_weights(20, 4, 4)
+        assert (w.omega_A, w.omega_B) == (2, 2) and w.meets_bound and w.divisible
+
+    def test_prime_bound_case(self):
+        # Fig. 5 system (a): n=36, s=8, omega_hat=7 (prime) -> weight 8
+        w = choose_mm_weights(36, 4, 7)
+        assert w.omega_hat == 7 and w.omega == 8 and not w.meets_bound
+
+    def test_fig5_system_b(self):
+        # Fig. 5 system (b): n=56, s=14 -> meets the bound (12)
+        w = choose_mm_weights(56, 6, 7)
+        assert w.omega_hat == 12 and w.omega == 12 and w.meets_bound
+
+    def test_cyclic31_weights(self):
+        assert (cyclic31_mm_weights(42, 6, 6).omega_A,
+                cyclic31_mm_weights(42, 6, 6).omega_B) == (4, 2)
+        assert (cyclic31_mm_weights(20, 4, 4).omega_A,
+                cyclic31_mm_weights(20, 4, 4).omega_B) == (3, 2)
+
+    @given(st.integers(3, 8), st.integers(3, 8), st.integers(2, 20))
+    @settings(max_examples=200, deadline=None)
+    def test_feasible_and_bounded(self, k_A, k_B, s):
+        # Lemma 2 domain: k_A, k_B >= 3 (and 2 <= s <= k, the published
+        # comparison regime)
+        if k_A > k_B or s > k_A * k_B:
+            return
+        n = k_A * k_B + s
+        w = choose_mm_weights(n, k_A, k_B)
+        assert w.omega >= w.omega_hat
+        assert 1 <= w.omega_A <= k_A and 1 <= w.omega_B <= k_B
+        assert w.omega_A <= w.omega_B
+        # ours never exceeds [31]'s selection (Remark 2)
+        assert w.omega <= cyclic31_mm_weights(n, k_A, k_B).omega
+
+    def test_invalid_inputs(self):
+        with pytest.raises(ValueError):
+            min_weight(5, 5)
+        with pytest.raises(ValueError):
+            choose_mm_weights(10, 4, 4)  # n < k

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+For every assigned arch: one forward/train step asserting output shapes
+and finiteness, one gradient step, and prefill/decode-vs-forward logits
+consistency (the strongest cache-correctness check).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build_model
+
+B, S = 2, 32
+PROMPT = 8
+
+
+def make_batch(cfg, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder.n_frames, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+def extra_kwargs(cfg, batch):
+    if cfg.family == "audio":
+        return {"frames": batch["frames"]}
+    if cfg.family == "vlm":
+        return {"image_embeds": batch["image_embeds"]}
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg, dtype=jnp.float32)
+        params = model.init(jax.random.key(0))
+        batch = make_batch(cfg, np.random.default_rng(1))
+        loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+        assert np.isfinite(float(loss))
+        flat, _ = jax.tree.flatten(grads)
+        assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+        # a full forward emits (B, S_total, V) finite logits
+        logits, _ = model.forward(params, batch["tokens"],
+                                  batch.get("image_embeds")) \
+            if cfg.family != "audio" else \
+            model.forward(params, batch["tokens"], batch["frames"])
+        v = cfg.vision_tokens if cfg.family == "vlm" else 0
+        assert logits.shape == (B, S + v, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_prefill_decode_consistency(self, arch):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg, dtype=jnp.float32)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(2)
+        batch = make_batch(cfg, rng)
+        prompt = batch["tokens"][:, :PROMPT]
+        logits_pf, cache = model.prefill(params, prompt, max_len=S,
+                                         **extra_kwargs(cfg, batch))
+        l1, cache = model.decode_step(params, cache,
+                                      batch["tokens"][:, PROMPT:PROMPT + 1])
+        l2, cache = model.decode_step(params, cache,
+                                      batch["tokens"][:, PROMPT + 1:PROMPT + 2])
+        full_logits, _ = model.forward(
+            params, batch["tokens"][:, :PROMPT + 2],
+            batch.get("image_embeds")) if cfg.family != "audio" else \
+            model.forward(params, batch["tokens"][:, :PROMPT + 2],
+                          batch["frames"])
+        v = cfg.vision_tokens if cfg.family == "vlm" else 0
+        for got, ref in [(logits_pf, full_logits[:, v + PROMPT - 1]),
+                         (l1, full_logits[:, v + PROMPT]),
+                         (l2, full_logits[:, v + PROMPT + 1])]:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=5e-3, atol=5e-3)
+
+    def test_full_config_well_formed(self, arch):
+        cfg = get_config(arch)
+        assert cfg.n_groups >= 1
+        assert cfg.param_count() > 0
+        if cfg.family in ("moe",):
+            assert cfg.active_param_count() < cfg.param_count()
+
+
+class TestParamScale:
+    """Full configs hit their nameplate parameter counts (+-20%)."""
+
+    @pytest.mark.parametrize("arch,nominal_b", [
+        ("qwen3-14b", 14), ("phi3-medium-14b", 14), ("gemma3-12b", 12),
+        ("phi3-mini-3.8b", 3.8), ("mamba2-1.3b", 1.3),
+        ("phi-3-vision-4.2b", 4.2), ("granite-moe-1b-a400m", 1.3),
+        ("kimi-k2-1t-a32b", 1000),
+    ])
+    def test_nameplate(self, arch, nominal_b):
+        count = get_config(arch).param_count() / 1e9
+        assert 0.75 * nominal_b <= count <= 1.35 * nominal_b, count
+
+    def test_kimi_active(self):
+        active = get_config("kimi-k2-1t-a32b").active_param_count() / 1e9
+        assert 25 <= active <= 40, active
