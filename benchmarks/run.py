@@ -11,6 +11,10 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
   job_completion  -- end-to-end coded-job wall time under the shifted-
                      exponential straggler model (fastest-k order stat)
   decode_overhead -- server decode cost vs direct matmul (framework)
+  runtime_backends-- reference (dense einsum over all n + per-call
+                     solve) vs the packed-sparse executor
+                     (repro.runtime) at 95/98/99% block sparsity;
+                     also writes machine-readable BENCH_runtime.json
 
 Default sizes are scaled from the paper's AWS experiment (20000x15000 /
 20000x12000) by --scale (default 0.25) to keep CPU runtime in minutes;
@@ -249,6 +253,105 @@ def decode_overhead(scale: float, seed: int = 2):
 
 
 # ---------------------------------------------------------------------------
+# Runtime executor backends (framework bench, tracked via BENCH_runtime.json)
+# ---------------------------------------------------------------------------
+
+
+def runtime_backends(scale: float, seed: int = 3, reps: int = 50,
+                     json_path: str = "BENCH_runtime.json"):
+    """Coded apply latency: reference dense-einsum path vs the packed
+    block-sparse executor, at the paper's sparsity levels.
+
+    Sparsity is block-structured (whole (8, 8) tiles zeroed) -- the unit
+    of skippable work in the TPU adaptation; the packed path's win is
+    the nonzero-tile count scaling with omega (see repro.runtime).  The
+    packed layout/backends are first validated against the reference
+    backend at a small size in Pallas interpret mode; the recorded
+    ``max_abs_err`` fields in the JSON carry that evidence.
+    """
+    import json as _json  # noqa: PLC0415
+
+    import jax  # noqa: PLC0415
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.core import CodedOperator  # noqa: PLC0415
+
+    n, k, b = 12, 9, 8
+    t = max(int(8192 * scale) // 128 * 128, 256)
+    r = max(int(4608 * scale) // (k * 8) * (k * 8), k * 8)
+    rng = np.random.default_rng(seed)
+    sch = proposed_mv(n, k)
+
+    def block_sparse(t_, r_, zeros, bs=8):
+        mask = rng.random((t_ // bs, r_ // bs)) >= zeros
+        a = rng.standard_normal((t_, r_)).astype(np.float32)
+        return a * np.kron(mask, np.ones((bs, bs), np.float32))
+
+    done = np.ones(n, bool)
+    done[[1, 5, 9]] = False
+    done = jnp.asarray(done)
+
+    # interpret-mode validation at a small size: the kernel path and the
+    # packed host path must both reproduce the reference numerics
+    a_small = block_sparse(512, r, 0.98)
+    x_small = jnp.asarray(rng.standard_normal((b, 512)), jnp.float32)
+    ref_small = CodedOperator.build(jnp.asarray(a_small), sch, seed=0,
+                                    backend="reference").apply(x_small, done)
+    validation = {"t": 512, "r": r, "zeros": 0.98}
+    for backend in ("packed", "pallas-interpret"):
+        out = CodedOperator.build(jnp.asarray(a_small), sch, seed=0,
+                                  backend=backend).apply(x_small, done)
+        validation[f"max_abs_err_{backend}"] = float(
+            jnp.abs(out - ref_small).max())
+
+    x = jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+    results = []
+    for zeros in (0.95, 0.98, 0.99):
+        A = jnp.asarray(block_sparse(t, r, zeros))
+        timings = {}
+        for backend in ("reference", "packed"):
+            op = CodedOperator.build(A, sch, seed=0, backend=backend)
+            fn = jax.jit(op.apply) if backend == "reference" else op.apply
+            fn(x, done).block_until_ready()          # warmup / compile
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = fn(x, done)
+            out.block_until_ready()
+            us = (time.perf_counter() - t0) / reps * 1e6
+            timings[backend] = us
+            tiles = op.worker_tile_counts()
+            ex = op.executor()
+            row = {
+                "zeros": zeros, "backend": backend, "us_per_call": us,
+                "max_worker_tiles": int(tiles.max()),
+                "dense_worker_tiles": (t // 8) * (r // 8) // k,
+            }
+            if backend == "packed":
+                row["speedup_vs_reference"] = timings["reference"] / us
+                row["decode_cache"] = {"hits": ex.cache.hits,
+                                       "misses": ex.cache.misses}
+            results.append(row)
+            derived = (f"tiles={int(tiles.max())}"
+                       if backend == "packed" else "dense_all_n")
+            emit(f"runtime/{backend}/mu{int(zeros * 100)}", us, derived)
+        emit(f"runtime/speedup/mu{int(zeros * 100)}", 0.0,
+             f"packed_vs_reference="
+             f"{timings['reference'] / timings['packed']:.2f}x")
+
+    payload = {
+        "bench": "runtime_backends",
+        "config": {"n": n, "k": k, "t": t, "r": r, "batch": b,
+                   "reps": reps, "stragglers": 3,
+                   "omega": sch.omega_A, "seed": seed},
+        "validation": validation,
+        "results": results,
+    }
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("runtime/json", 0.0, f"wrote={json_path}")
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -267,6 +370,7 @@ def main() -> None:
         "fig6": lambda: fig6_kappa(args.patterns),
         "job": lambda: job_completion(args.scale),
         "decode": lambda: decode_overhead(args.scale),
+        "runtime": lambda: runtime_backends(args.scale),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -62,6 +62,10 @@ class CodedConfig:
     stragglers: int = 2
     layers: tuple[str, ...] = ("lm_head",)   # which matmuls are coded
     seed: int = 0
+    # execution backend for the coded engine (repro.runtime):
+    # None = platform default (pallas on TPU, reference elsewhere);
+    # the REPRO_CODED_BACKEND env var overrides everything.
+    backend: str | None = None
 
 
 @dataclass(frozen=True)

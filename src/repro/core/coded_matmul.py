@@ -11,25 +11,34 @@ Two execution styles are provided:
 
   * ``coded_matvec`` / ``coded_matmat``: functional one-shot APIs that
     encode on the fly (the "edge server dispatches coded submatrices"
-    picture).
+    picture).  One-shot means exactly that: each call re-encodes, and
+    on a sparse backend re-packs and re-plans -- hot loops over a fixed
+    matrix should use ``CodedOperator``, which amortises all of it.
   * ``CodedOperator``: pre-encoded operator, the form used by the model
     layers (``repro.parallel.coded_layer``) where weights are encoded
-    once at init/checkpoint-load and reused every step.
+    once at init/checkpoint-load and reused every step; its executor
+    (packing + decode-plan cache) is built once and cached.
 
-Everything is jit-compatible; the straggler mask is a runtime input so a
-single compiled executable serves any straggler pattern (essential on a
-real cluster where the straggler set changes per step).
+Both styles route through the ``repro.runtime`` coded executor, which
+dispatches to a sparsity-aware backend (packed block-sparse / Pallas
+kernels) when inputs are concrete and to the pure-jnp reference path
+under a trace -- so everything stays jit-compatible: the straggler mask
+is a runtime input and a single compiled executable serves any
+straggler pattern (essential on a real cluster where the straggler set
+changes per step), while eager hot loops get the weight-omega fast
+path and the cached-inverse decode.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime import CodedExecutor, encode_blocks, resolve_backend, support_tables
 from .assignment import MMScheme, MVScheme
 from .decoding import system_matrix
 from .encoding import mm_encoding_matrices, mv_encoding_matrix
@@ -98,18 +107,29 @@ def _mv_compute_decode(coded: jnp.ndarray, x: jnp.ndarray, done: jnp.ndarray,
 
 
 def coded_matvec(A: jnp.ndarray, x: jnp.ndarray, scheme: MVScheme,
-                 seed: int = 0, done: jnp.ndarray | None = None) -> jnp.ndarray:
+                 seed: int = 0, done: jnp.ndarray | None = None,
+                 backend: str | None = None) -> jnp.ndarray:
     """Compute A^T x through the coded pipeline; returns (r,)."""
     t, r = A.shape
     k = scheme.k_A
-    R = jnp.asarray(mv_encoding_matrix(scheme, seed))
+    backend = resolve_backend(backend)
+    if isinstance(A, jax.core.Tracer):
+        backend = "reference"                        # host packing needs data
+    R = mv_encoding_matrix(scheme, seed)
     blocks = split_block_columns(A, k)               # (k, t, c)
-    coded = jnp.einsum("nk,ktc->ntc", R, blocks)     # (n_tasks, t, c)
-    if done is None:
-        done = jnp.ones(coded.shape[0], dtype=bool)
     G = jnp.asarray(system_matrix(scheme, seed))
-    u = _mv_compute_decode(coded, x, done, k, G)     # (k, c) = stacked A_q^T x
-    return u.reshape(-1)[:r]
+    if backend == "reference":
+        coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R), blocks)
+        if done is None:
+            done = jnp.ones(coded.shape[0], dtype=bool)
+        u = _mv_compute_decode(coded, x, done, k, G)  # (k, c) stacked A_q^T x
+        return u.reshape(-1)[:r]
+    # sparsity-preserving path: weight-omega encode + packed worker
+    # compute on the fastest k + cached-inverse decode
+    sup, coef = support_tables(scheme.supports, R)
+    coded = encode_blocks(blocks, sup, coef, backend)
+    ex = CodedExecutor(coded, G, k, r, backend=backend)
+    return ex.matvec(x, done)
 
 
 # ---------------------------------------------------------------------------
@@ -130,20 +150,32 @@ def _mm_compute_decode(coded_a: jnp.ndarray, coded_b: jnp.ndarray,
 
 
 def coded_matmat(A: jnp.ndarray, B: jnp.ndarray, scheme: MMScheme,
-                 seed: int = 0, done: jnp.ndarray | None = None) -> jnp.ndarray:
+                 seed: int = 0, done: jnp.ndarray | None = None,
+                 backend: str | None = None) -> jnp.ndarray:
     """Compute A^T B through the coded pipeline; returns (r, w)."""
     t, r = A.shape
     _, w = B.shape
     ka, kb = scheme.k_A, scheme.k_B
+    backend = resolve_backend(backend)
+    if isinstance(A, jax.core.Tracer) or isinstance(B, jax.core.Tracer):
+        backend = "reference"                        # host packing needs data
     ra, rb = mm_encoding_matrices(scheme, seed)
     blocks_a = split_block_columns(A, ka)            # (ka, t, ca)
     blocks_b = split_block_columns(B, kb)            # (kb, t, cb)
-    coded_a = jnp.einsum("nk,ktc->ntc", jnp.asarray(ra), blocks_a)
-    coded_b = jnp.einsum("nk,ktc->ntc", jnp.asarray(rb), blocks_b)
-    if done is None:
-        done = jnp.ones(scheme.n, dtype=bool)
     G = jnp.asarray(system_matrix(scheme, seed))     # (n, ka*kb)
-    u = _mm_compute_decode(coded_a, coded_b, done, ka * kb, G)   # (k, ca, cb)
+    if backend == "reference":
+        coded_a = jnp.einsum("nk,ktc->ntc", jnp.asarray(ra), blocks_a)
+        coded_b = jnp.einsum("nk,ktc->ntc", jnp.asarray(rb), blocks_b)
+        if done is None:
+            done = jnp.ones(scheme.n, dtype=bool)
+        u = _mm_compute_decode(coded_a, coded_b, done, ka * kb, G)
+    else:
+        sup_a, coef_a = support_tables(scheme.supports_A, ra)
+        sup_b, coef_b = support_tables(scheme.supports_B, rb)
+        coded_a = encode_blocks(blocks_a, sup_a, coef_a, backend)
+        coded_b = encode_blocks(blocks_b, sup_b, coef_b, backend)
+        ex = CodedExecutor(coded_a, G, ka * kb, r, backend=backend)
+        u = ex.matmat(coded_b, done)                 # (k, ca, cb)
     ca, cb = u.shape[1], u.shape[2]
     out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3).reshape(ka * ca, kb * cb)
     return out[:r, :w]
@@ -161,37 +193,57 @@ class CodedOperator:
     Encodes A's block-columns once; ``apply(x, done)`` then computes
     A^T x for activation batches x (t,) or (batch, t) while tolerating
     up to s stragglers indicated by the ``done`` mask.
+
+    ``apply`` routes through a ``repro.runtime.CodedExecutor``: with a
+    sparse backend (``packed`` / ``pallas``) and concrete inputs, only
+    the fastest-k workers' nonzero tiles are multiplied and the decode
+    reuses a cached k x k inverse per straggler pattern; under a trace
+    (or with the ``reference`` backend) it runs the original dense
+    einsum + solve path, so jit/grad callers are unaffected.
     """
 
     scheme: MVScheme
     coded: jnp.ndarray        # (n_tasks, t, c) encoded block-columns
     G: jnp.ndarray            # (n_tasks, k) system matrix
     r: int                    # original output dim
+    backend: str | None = None
+    _executor: CodedExecutor | None = field(
+        default=None, repr=False, compare=False)
 
     @staticmethod
-    def build(A: jnp.ndarray, scheme: MVScheme, seed: int = 0) -> "CodedOperator":
-        R = jnp.asarray(mv_encoding_matrix(scheme, seed))
+    def build(A: jnp.ndarray, scheme: MVScheme, seed: int = 0,
+              backend: str | None = None) -> "CodedOperator":
+        R = mv_encoding_matrix(scheme, seed)
         blocks = split_block_columns(A, scheme.k_A)
-        coded = jnp.einsum("nk,ktc->ntc", R, blocks)
+        if resolve_backend(backend) == "reference":
+            coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R), blocks)
+        else:
+            sup, coef = support_tables(scheme.supports, R)
+            coded = encode_blocks(blocks, sup, coef, backend)
         return CodedOperator(scheme=scheme, coded=coded,
                              G=jnp.asarray(system_matrix(scheme, seed)),
-                             r=A.shape[1])
+                             r=A.shape[1], backend=backend)
+
+    def executor(self) -> CodedExecutor:
+        if isinstance(self.coded, jax.core.Tracer):
+            # operator built inside a trace: use a throwaway reference
+            # executor; caching it would leak the tracer across traces
+            return CodedExecutor(self.coded, self.G, self.scheme.k_A,
+                                 self.r, backend="reference")
+        if self._executor is None:
+            self._executor = CodedExecutor(
+                self.coded, self.G, self.scheme.k_A, self.r,
+                backend=self.backend)
+        return self._executor
 
     def apply(self, x: jnp.ndarray, done: jnp.ndarray | None = None) -> jnp.ndarray:
-        squeeze = x.ndim == 1
-        xb = x[None, :] if squeeze else x             # (b, t)
-        if done is None:
-            done = jnp.ones(self.coded.shape[0], dtype=bool)
-        y = jnp.einsum("ntc,bt->nbc", self.coded, xb)  # per-worker results
-        rows = fastest_k_rows(done, self.scheme.k_A)
-        sub = self.G[rows]
-        ysub = y[rows].reshape(self.scheme.k_A, -1)
-        u = jnp.linalg.solve(sub, ysub)                # (k, b*c)
-        b = xb.shape[0]
-        u = u.reshape(self.scheme.k_A, b, -1).transpose(1, 0, 2).reshape(b, -1)
-        out = u[:, : self.r]
-        return out[0] if squeeze else out
+        return self.executor().matvec(x, done)
 
     def worker_nnz(self) -> np.ndarray:
         c = np.asarray(self.coded)
         return (np.abs(c) > 0).reshape(c.shape[0], -1).sum(axis=1)
+
+    def worker_tile_counts(self) -> np.ndarray:
+        """Nonzero (bk x bm) tiles per worker under the packed layout --
+        proportional to the per-apply MXU work (scales with omega)."""
+        return self.executor().worker_tile_counts()

@@ -2,8 +2,8 @@
 
 This is the compute hot-spot of the paper: an edge worker multiplying
 its *sparsity-preserved* coded submatrix.  The paper's AWS workers use
-scalar CSR sparsity on CPUs; the TPU-native adaptation (see DESIGN.md
-"Hardware adaptation") is **block**-sparsity: the MXU consumes
+scalar CSR sparsity on CPUs; the TPU-native adaptation is
+**block**-sparsity: the MXU consumes
 (bk x bm) tiles, so the unit of skippable work is a tile, and the
 low-weight encoding guarantees each coded block-column touches at most
 ``omega`` source columns' tiles -> the nonzero-tile count (and hence

@@ -21,6 +21,7 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..configs.base import CodedConfig
 from ..models import build_model
+from ..runtime import BACKENDS
 from ..serve import Request, ServeEngine
 
 
@@ -37,6 +38,9 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=6)
     ap.add_argument("--stragglers", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--coded-backend", choices=BACKENDS, default=None,
+                    help="coded-execution backend for the LM head "
+                         "(default: platform choice, see repro.runtime)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -45,7 +49,8 @@ def main() -> None:
     model = build_model(cfg, dtype=jnp.float32 if args.smoke else jnp.bfloat16)
     params = model.init(jax.random.key(args.seed))
     coded = CodedConfig(enabled=True, n_workers=args.workers,
-                        stragglers=args.stragglers) if args.coded else None
+                        stragglers=args.stragglers,
+                        backend=args.coded_backend) if args.coded else None
     engine = ServeEngine(model, params, cfg, batch_size=args.batch,
                          max_len=args.max_len, coded=coded)
 

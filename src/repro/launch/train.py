@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..data import DataConfig, make_pipeline
 from ..models import build_model
 from ..optim import AdamWConfig, CompressionConfig
+from ..runtime import BACKENDS, ENV_BACKEND, resolve_backend
 from ..train import TrainConfig, Trainer
 
 
@@ -41,14 +43,20 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--coded-backend", choices=BACKENDS, default=None,
+                    help="force the coded-execution backend for every "
+                         "coded component in this run (repro.runtime)")
     args = ap.parse_args()
+
+    if args.coded_backend:
+        os.environ[ENV_BACKEND] = args.coded_backend
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family in ("audio",):
         raise SystemExit("use examples/train_lm.py for enc-dec training")
     model = build_model(cfg, dtype=jnp.float32 if args.smoke else jnp.bfloat16)
     print(f"arch={cfg.name} params~{cfg.param_count() / 1e6:.1f}M "
-          f"devices={len(jax.devices())}")
+          f"devices={len(jax.devices())} coded_backend={resolve_backend()}")
 
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.batch, seed=args.seed)

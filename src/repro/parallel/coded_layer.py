@@ -15,6 +15,12 @@ Execution modes:
     and computes its product locally; decode happens after an
     all-gather of the n partial results (k x k solve, negligible).
 
+All hot methods route through a ``repro.runtime.CodedExecutor``: the
+sparse backends (``packed`` / ``pallas`` / ``pallas-interpret``) run
+only the fastest-k workers' nonzero tiles and decode against a cached
+per-pattern inverse; traced callers (jit/grad/shard_map) and the
+``reference`` backend keep the original dense einsum + solve numerics.
+
 Storage/computation overhead vs an uncoded TP layer is omega/k_A (the
 paper's whole point: omega ~= s+1 << k_A), while tolerating any s
 straggling devices per matmul.
@@ -22,18 +28,17 @@ straggling devices per matmul.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.assignment import MVScheme, proposed_mv
-from ..core.coded_matmul import fastest_k_rows, split_block_columns
+from ..core.coded_matmul import split_block_columns
 from ..core.decoding import system_matrix
 from ..core.encoding import mv_encoding_matrix
 from ..core.stability import find_good_coefficients
+from ..runtime import CodedExecutor, encode_blocks, resolve_backend, support_tables
 
 
 @dataclass
@@ -42,11 +47,14 @@ class CodedLinear:
     coded: jnp.ndarray       # (n, d_in, c) coded block-columns of W
     G: jnp.ndarray           # (n, k) decode system matrix
     d_out: int
+    backend: str | None = None
+    _executor: CodedExecutor | None = field(
+        default=None, repr=False, compare=False)
 
     @staticmethod
     def build(w: jnp.ndarray, n_workers: int, stragglers: int,
-              seed: int | None = None, stability_trials: int = 0
-              ) -> "CodedLinear":
+              seed: int | None = None, stability_trials: int = 0,
+              backend: str | None = None) -> "CodedLinear":
         """Encode a (d_in, d_out) weight for n workers / s stragglers."""
         k = n_workers - stragglers
         scheme = proposed_mv(n_workers, k)
@@ -56,39 +64,53 @@ class CodedLinear:
                     scheme, trials=stability_trials, max_patterns=64).best_seed
             else:
                 seed = 0
-        R = jnp.asarray(mv_encoding_matrix(scheme, seed), w.dtype)
+        R = mv_encoding_matrix(scheme, seed)
         blocks = split_block_columns(w, k)          # (k, d_in, c)
-        coded = jnp.einsum("nk,ktc->ntc", R, blocks)
+        if resolve_backend(backend) == "reference":
+            coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R, w.dtype), blocks)
+        else:
+            sup, coef = support_tables(scheme.supports, R)
+            coded = encode_blocks(blocks, sup, coef, backend).astype(w.dtype)
         return CodedLinear(scheme=scheme, coded=coded,
                            G=jnp.asarray(system_matrix(scheme, seed),
                                          jnp.float32),
-                           d_out=w.shape[1])
+                           d_out=w.shape[1], backend=backend)
 
     # ------------------------------------------------------------------
 
+    def executor(self) -> CodedExecutor:
+        if isinstance(self.coded, jax.core.Tracer):
+            # layer built inside a trace: use a throwaway reference
+            # executor; caching it would leak the tracer across traces
+            return CodedExecutor(self.coded, self.G, self.scheme.k_A,
+                                 self.d_out, backend="reference")
+        if self._executor is None:
+            self._executor = CodedExecutor(
+                self.coded, self.G, self.scheme.k_A, self.d_out,
+                backend=self.backend)
+        return self._executor
+
     def worker_compute(self, x: jnp.ndarray) -> jnp.ndarray:
-        """All-worker products: x (..., d_in) -> (n, ..., c)."""
+        """All-worker products: x (..., d_in) -> (n, ..., c).
+
+        The all-n contract exists for the shard_map path and the tests;
+        the fused fastest-k fast path lives in ``apply``.
+        """
         return jnp.einsum("ntc,...t->n...c", self.coded, x)
 
     def decode(self, y: jnp.ndarray, done: jnp.ndarray | None) -> jnp.ndarray:
         """y (n, ..., c) worker results -> (..., d_out)."""
-        k = self.scheme.k_A
-        if done is None:
-            done = jnp.ones(self.scheme.n, bool)
-        rows = fastest_k_rows(done, k)
-        sub = self.G[rows]                              # (k, k)
-        ysub = y[rows].astype(jnp.float32)              # (k, ..., c)
-        flat = ysub.reshape(k, -1)
-        u = jnp.linalg.solve(sub, flat)                 # (k, prod*c)
-        u = u.reshape((k,) + ysub.shape[1:])            # (k, ..., c)
-        u = jnp.moveaxis(u, 0, -2)                      # (..., k, c)
-        out = u.reshape(u.shape[:-2] + (k * u.shape[-1],))[..., : self.d_out]
-        return out.astype(y.dtype)
+        return self.executor().decode(y, done)
 
     def apply(self, x: jnp.ndarray, done: jnp.ndarray | None = None
               ) -> jnp.ndarray:
         """Single-device (vmap-style virtual workers) coded apply."""
-        return self.decode(self.worker_compute(x), done)
+        ex = self.executor()
+        if ex.backend == "reference" or isinstance(x, jax.core.Tracer):
+            return self.decode(self.worker_compute(x), done)
+        lead = x.shape[:-1]
+        out = ex.matvec(x.reshape(-1, x.shape[-1]), done)
+        return out.reshape(lead + (self.d_out,)).astype(x.dtype)
 
     # ------------------------------------------------------------------
 
@@ -121,8 +143,3 @@ class CodedLinear:
             check_vma=False,
         )
         return fn(self.coded, x, done)
-
-
-@partial(jax.jit, static_argnums=(0,))
-def _noop(x):  # pragma: no cover - keeps jit cache warm in examples
-    return x

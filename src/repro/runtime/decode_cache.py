@@ -1,0 +1,83 @@
+"""Decode planner: per-straggler-pattern decode plans, LRU-cached.
+
+The server-side decode solves ``G[rows] @ U = Y[rows]`` for the k
+unknowns, where ``rows`` are the fastest-k completed tasks.  The k x k
+factorisation depends *only* on the straggler pattern -- on a real
+cluster the same handful of patterns recurs step after step (usually
+the all-alive pattern), yet the dense reference path re-runs
+``jnp.linalg.solve`` on every single apply.
+
+``DecodeCache`` keys the precomputed inverse on the ``done`` mask
+bytes: a hit costs a dict lookup, a miss costs one host-side k x k
+inversion (k is at most a few dozen).  The hot loop then reduces to a
+skinny matmul ``U = Hinv @ Y`` dispatched to the ``decode_matmul``
+Pallas kernel (or its jnp oracle), never a per-call solve.
+
+Plans require a *concrete* mask (the cache lives on the host); traced
+masks fall back to the reference solve path in the executor.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    """Precomputed decode for one straggler pattern."""
+
+    key: bytes                 # canonical done-mask bytes
+    rows: np.ndarray           # (k,) fastest-k task rows (host ints)
+    hinv: np.ndarray           # (k, k) f32 inverse of G[rows] (host)
+    hinv_dev: jnp.ndarray      # same, device-resident for the kernels
+
+
+class DecodeCache:
+    """LRU cache of ``DecodePlan`` keyed on the done mask."""
+
+    def __init__(self, G, k: int, maxsize: int = 64):
+        self._G = np.asarray(G, dtype=np.float64)
+        if self._G.shape[1] != k:
+            raise ValueError(f"G has {self._G.shape[1]} unknowns, expected {k}")
+        self.k = k
+        self.maxsize = maxsize
+        self._plans: OrderedDict[bytes, DecodePlan] = OrderedDict()
+        self.hits = 0
+        self.misses = 0   # == number of host-side k x k inversions run
+
+    def plan(self, done) -> DecodePlan:
+        mask = np.asarray(done, dtype=bool)
+        if mask.ndim != 1 or mask.shape[0] != self._G.shape[0]:
+            raise ValueError(
+                f"done mask shape {mask.shape} incompatible with "
+                f"{self._G.shape[0]} tasks")
+        key = np.packbits(mask).tobytes()
+        cached = self._plans.get(key)
+        if cached is not None:
+            self._plans.move_to_end(key)
+            self.hits += 1
+            return cached
+
+        rows = np.flatnonzero(mask)[: self.k]
+        if rows.shape[0] < self.k:
+            raise ValueError(
+                f"only {rows.shape[0]} tasks done, need k={self.k}")
+        hinv = np.linalg.inv(self._G[rows]).astype(np.float32)
+        plan = DecodePlan(key=key, rows=rows, hinv=hinv,
+                          hinv_dev=jnp.asarray(hinv))
+        self._plans[key] = plan
+        self.misses += 1
+        if len(self._plans) > self.maxsize:
+            self._plans.popitem(last=False)
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.hits = self.misses = 0

@@ -8,6 +8,12 @@ budget.  With ``coded`` enabled, the final logits matmul runs through
 ``CodedLinear`` with a per-step straggler mask (simulated here; on a
 real edge deployment the mask comes from worker heartbeats) -- the
 response is bit-identical regardless of which <= s workers are lost.
+
+The coded head executes on the ``repro.runtime`` executor: per-step
+masks hit the decode-plan cache (the same straggler pattern never pays
+for a second solve) and, on a sparse backend, only the fastest-k
+workers' nonzero tiles are multiplied.  ``CodedConfig.backend`` or the
+``REPRO_CODED_BACKEND`` env var selects the backend.
 """
 
 from __future__ import annotations
@@ -47,7 +53,7 @@ class ServeEngine:
                     else params["head"])
             self.coded = CodedLinear.build(
                 jnp.asarray(head), coded.n_workers, coded.stragglers,
-                seed=coded.seed)
+                seed=coded.seed, backend=coded.backend)
             self.s = coded.stragglers
         self._prefill = jax.jit(
             lambda p, toks: model.prefill(p, toks, max_len=self.max_len))

@@ -1,0 +1,113 @@
+"""Minimal stand-in for ``hypothesis`` so the suite runs without it.
+
+The real package is an optional dependency (see pyproject's ``test``
+extra).  When it is missing, ``conftest.py`` installs this module under
+``sys.modules['hypothesis']`` / ``['hypothesis.strategies']`` before
+collection, so ``from hypothesis import given, settings`` keeps working.
+
+Semantics are deliberately tiny: ``@given`` re-runs the test over a
+deterministic seeded sweep of examples (no shrinking, no database).
+That keeps the property tests meaningful -- many seeded examples per
+run -- while staying dependency-free.  Only the API surface the test
+suite uses is provided: ``given``, ``settings``, ``strategies.integers``,
+``strategies.lists`` and ``strategies.data``.
+"""
+
+from __future__ import annotations
+
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    """A strategy is just a sampler from a seeded numpy Generator."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class _DataStrategy(_Strategy):
+    """Marker for ``st.data()``: sampled to an interactive draw object."""
+
+    def __init__(self):
+        super().__init__(_DataObject)
+
+
+class _DataObject:
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy.sample(self._rng)
+
+
+class strategies:  # noqa: N801 - mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        # hypothesis bounds are inclusive
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int | None = None) -> _Strategy:
+        hi = max_size if max_size is not None else min_size + 10
+
+        def sample(rng):
+            size = int(rng.integers(min_size, hi + 1))
+            return [elements.sample(rng) for _ in range(size)]
+
+        return _Strategy(sample)
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _DataStrategy()
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records max_examples on the test for ``given`` to pick up; every
+    other hypothesis setting (deadline, ...) is irrelevant here."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies_args: _Strategy):
+    """Deterministic sweep: run the test once per generated example.
+
+    The RNG seed mixes the test's qualified name with the example
+    index, so failures reproduce run-to-run.
+    """
+
+    def deco(fn):
+        base = zlib.crc32(fn.__qualname__.encode())
+
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_compat_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng((base, i))
+                generated = [s.sample(rng) for s in strategies_args]
+                fn(*args, *generated, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # hide the generated parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[: len(params) - len(strategies_args)]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco
