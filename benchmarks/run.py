@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
                      solve) vs the packed-sparse executor
                      (repro.runtime) at 95/98/99% block sparsity;
                      also writes machine-readable BENCH_runtime.json
+  plan            -- compile-once (repro.api.compile_plan) vs per-call
+                     construction amortization -> BENCH_plan.json
 
 Default sizes are scaled from the paper's AWS experiment (20000x15000 /
 20000x12000) by --scale (default 0.25) to keep CPU runtime in minutes;
@@ -34,9 +36,8 @@ sys.path.insert(0, "src")
 
 from scipy import sparse  # noqa: E402
 
+from repro.api import make_scheme  # noqa: E402
 from repro.core import (  # noqa: E402
-    MM_SCHEMES,
-    MV_SCHEMES,
     ShiftedExponential,
     find_good_coefficients,
     mm_encoding_matrices,
@@ -90,7 +91,7 @@ def table2_worker(scale: float, seed: int = 0):
         a_blocks = [_sparse_block(rng, t, r // ka, density) for _ in range(ka)]
         b_blocks = [_sparse_block(rng, t, w // kb, density) for _ in range(kb)]
         for name in ("poly", "rkrp", "cyclic31", "proposed"):
-            sch = MM_SCHEMES[name](n, ka, kb)
+            sch = make_scheme(name, n=n, k_A=ka, k_B=kb)
             ra, rb = mm_encoding_matrices(sch, seed=1)
             i = 0  # time worker 0 (homogeneous system)
             sup_a = sch.supports_A[i]
@@ -113,7 +114,7 @@ def table2_worker(scale: float, seed: int = 0):
 def table3_kappa(patterns: int = 200, trials: int = 10):
     n, ka, kb = 42, 6, 6
     for name in ("poly", "orthopoly", "rkrp", "cyclic31", "proposed"):
-        sch = MM_SCHEMES[name](n, ka, kb)
+        sch = make_scheme(name, n=n, k_A=ka, k_B=kb)
         res = find_good_coefficients(sch, trials=trials,
                                      max_patterns=patterns)
         emit(f"table3/{name}", res.wall_time_s * 1e6,
@@ -125,7 +126,7 @@ def table3_kappa(patterns: int = 200, trials: int = 10):
     # compare per_pattern_us.  System: n=12, k_A=9 (s=3; Delta=36).
     pat_small = max(8, patterns // 8)
     for name in ("scs36", "class29", "proposed", "cyclic31"):
-        sch = MV_SCHEMES[name](12, 9)
+        sch = make_scheme(name, n=12, k_A=9)
         res = find_good_coefficients(sch, trials=trials,
                                      max_patterns=pat_small)
         per_pattern = res.wall_time_s * 1e6 / (trials * pat_small)
@@ -168,7 +169,7 @@ def fig5_weights():
 def fig6_kappa(patterns: int = 150):
     for n, ka in ((12, 9), (18, 14), (24, 18), (30, 23)):
         for name in ("orthopoly", "rkrp", "cyclic31", "proposed"):
-            sch = MV_SCHEMES[name](n, ka)
+            sch = make_scheme(name, n=n, k_A=ka)
             t0 = time.perf_counter()
             rep = stability_report(sch, seed=3, max_patterns=patterns)
             dt = time.perf_counter() - t0
@@ -197,7 +198,7 @@ def job_completion(scale: float, rounds: int = 200, seed: int = 1):
     base = (sum(b.nnz for b in a_blocks) / ka) * \
         (sum(b.nnz for b in b_blocks) / kb)
     for name in ("poly", "rkrp", "cyclic31", "proposed"):
-        sch = MM_SCHEMES[name](n, ka, kb)
+        sch = make_scheme(name, n=n, k_A=ka, k_B=kb)
         # sparse product cost ~ nnz(A_enc) * nnz(B_enc) / t
         work = np.array(
             [sum(a_blocks[q].nnz for q in sch.supports_A[i])
@@ -352,6 +353,91 @@ def runtime_backends(scale: float, seed: int = 3, reps: int = 50,
 
 
 # ---------------------------------------------------------------------------
+# Plan compilation amortization (framework bench, tracked via BENCH_plan.json)
+# ---------------------------------------------------------------------------
+
+
+def plan_amortization(scale: float, seed: int = 5, reps: int = 30,
+                      json_path: str = "BENCH_plan.json"):
+    """Compile-once vs per-call construction.
+
+    The plan API's pitch is that everything per-operator (encoding,
+    packing, backend pick, decode-cache prewarm) happens once at
+    ``compile_plan`` and the hot loop pays only worker-compute + cached
+    decode.  Measures: compile time, per-call ``plan.matvec``, and the
+    one-shot ``coded_matvec`` (which re-compiles a throwaway plan every
+    call), then derives the break-even call count.
+    """
+    import json as _json  # noqa: PLC0415
+
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.api import compile_plan  # noqa: PLC0415
+    from repro.core import coded_matvec  # noqa: PLC0415
+
+    n, k, b = 12, 9, 8
+    t = max(int(8192 * scale) // 128 * 128, 256)
+    r = max(int(4608 * scale) // (k * 8) * (k * 8), k * 8)
+    rng = np.random.default_rng(seed)
+    # 99% zero tiles: clearly above the packed/reference crossover, so
+    # backend="auto" exercises the packed fast path
+    mask = rng.random((t // 8, r // 8)) >= 0.99
+    A = jnp.asarray((rng.standard_normal((t, r)) *
+                     np.kron(mask, np.ones((8, 8)))).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+    done = np.ones(n, bool)
+    done[[1, 5, 9]] = False
+    done = jnp.asarray(done)
+    sch_kw = dict(scheme="proposed", n=n, k_A=k, backend="auto")
+
+    t0 = time.perf_counter()
+    plan = compile_plan(A, **sch_kw)
+    compile_us = (time.perf_counter() - t0) * 1e6
+    emit("plan/compile", compile_us, f"backend={plan.backend}")
+
+    plan.matvec(x, done).block_until_ready()            # mask now cached
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = plan.matvec(x, done)
+    out.block_until_ready()
+    plan_us = (time.perf_counter() - t0) / reps * 1e6
+    emit("plan/matvec", plan_us, "compiled_once")
+
+    sch = plan.scheme
+    # same batched workload as the plan loop -- apples to apples
+    coded_matvec(A, x, sch, done=done).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = coded_matvec(A, x, sch, done=done)
+    out.block_until_ready()
+    oneshot_us = (time.perf_counter() - t0) / reps * 1e6
+    breakeven = compile_us / max(oneshot_us - plan_us, 1e-9)
+    emit("plan/one_shot", oneshot_us,
+         f"amortization={oneshot_us / plan_us:.1f}x;"
+         f"breakeven_calls={breakeven:.1f}")
+
+    payload = {
+        "bench": "plan_amortization",
+        "config": {"n": n, "k": k, "t": t, "r": r, "batch": b,
+                   "reps": reps, "zeros": 0.99, "seed": seed,
+                   "backend": plan.backend},
+        "results": {
+            "compile_us": compile_us,
+            "matvec_us_per_call": plan_us,
+            "one_shot_us_per_call": oneshot_us,
+            "amortization_vs_one_shot": oneshot_us / plan_us,
+            "breakeven_calls": breakeven,
+            "decode_cache": {"hits": plan.executor.cache.hits,
+                             "misses": plan.executor.cache.misses}
+            if plan.executor.cache is not None else None,
+        },
+    }
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("plan/json", 0.0, f"wrote={json_path}")
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -371,6 +457,7 @@ def main() -> None:
         "job": lambda: job_completion(args.scale),
         "decode": lambda: decode_overhead(args.scale),
         "runtime": lambda: runtime_backends(args.scale),
+        "plan": lambda: plan_amortization(args.scale),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -18,38 +18,34 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    CodedOperator,
-    MV_SCHEMES,
-    ShiftedExponential,
-    hetero_mv,
-    make_hetero_system,
-    proposed_mv,
-    simulate_job,
-)
+from repro.api import compile_plan, make_scheme
+from repro.core import ShiftedExponential, make_hetero_system, simulate_job
 
 rng = np.random.default_rng(0)
 
 # --- Example 4's heterogeneous system --------------------------------------
-system = make_hetero_system([3, 2, 2, 1, 1, 1, 1, 1])
+capacities = [3, 2, 2, 1, 1, 1, 1, 1]
+system = make_hetero_system(capacities)
 k_A = sum(system.capacities[:5])      # 9
 s = system.n - k_A                    # 3
 print(f"physical devices: {system.n_bar}, capacities {system.capacities}")
 print(f"virtual workers: n={system.n}, k_A={k_A}, s={s}")
-scheme = hetero_mv(system, k_A)
-print(f"weight omega_A = {scheme.omega_A} "
-      f"(cyclic[31] would use {min(s + 1, k_A)})\n")
 
-# --- sparse job -------------------------------------------------------------
+# --- sparse job, plan compiled once over the virtualised system -------------
 t, r = 1800, 1350
 A = rng.standard_normal((t, r)) * (rng.random((t, r)) < 0.02)
 x = rng.standard_normal(t)
-op = CodedOperator.build(jnp.asarray(A, jnp.float32), scheme, seed=0)
+op = compile_plan(jnp.asarray(A, jnp.float32), scheme="proposed-hetero",
+                  capacities=capacities, k_A=k_A, seed=0, backend="auto")
+scheme = op.scheme
+print(f"weight omega_A = {scheme.omega_A} "
+      f"(cyclic[31] would use {min(s + 1, k_A)}); "
+      f"backend={op.backend}\n")
 
 # --- full straggler: any one strong device (3 virtual workers) dies ---------
 done = np.ones(system.n, bool)
 done[list(system.virtual_of[0])] = False     # the capacity-3 device dies
-y = op.apply(jnp.asarray(x, jnp.float32), jnp.asarray(done))
+y = op.matvec(jnp.asarray(x, jnp.float32), jnp.asarray(done))
 err = np.max(np.abs(np.asarray(y) - A.T @ x)) / np.max(np.abs(A.T @ x))
 print(f"strong device (3 virtual workers) fails -> rel err {err:.2e}")
 
@@ -59,7 +55,7 @@ done[system.virtual_of[0][2:]] = False       # W0 finishes 2/3
 done[system.virtual_of[1][1:]] = False       # W1 finishes 1/2
 done[system.virtual_of[2][1:]] = False       # W2 finishes 1/2
 assert done.sum() >= k_A
-y = op.apply(jnp.asarray(x, jnp.float32), jnp.asarray(done))
+y = op.matvec(jnp.asarray(x, jnp.float32), jnp.asarray(done))
 err = np.max(np.abs(np.asarray(y) - A.T @ x)) / np.max(np.abs(A.T @ x))
 print(f"partial stragglers (2/3, 1/2, 1/2 done) -> rel err {err:.2e}\n")
 
@@ -69,7 +65,7 @@ nnz_blocks = [(np.abs(A[:, c * (r // k_A):(c + 1) * (r // k_A)]) > 0).sum()
               for c in range(k_A)]
 base = float(np.mean(nnz_blocks))
 for name in ("poly", "rkrp", "cyclic31", "proposed"):
-    sch = MV_SCHEMES[name](system.n, k_A)
+    sch = make_scheme(name, n=system.n, k_A=k_A)
     work = np.array([sum(nnz_blocks[q] for q in sch.supports[i])
                      for i in range(system.n)]) / base
     stats = simulate_job(work, k=k_A, model=ShiftedExponential(),

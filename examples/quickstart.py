@@ -1,9 +1,10 @@
 """Quickstart: sparsity-preserving coded matrix multiplication in 40 lines.
 
 Builds the paper's Alg. 2 scheme for n=20 devices with gamma_A =
-gamma_B = 1/4 (Fig. 4's system), encodes two sparse matrices with the
-minimum weight omega = 4, knocks out the worst-case s = 4 stragglers,
-and recovers A^T B exactly from the fastest 16 workers.
+gamma_B = 1/4 (Fig. 4's system) through the scheme registry, compiles a
+plan once (encoding + packed shards + automatic backend), knocks out
+the worst-case s = 4 stragglers, and recovers A^T B exactly from the
+fastest 16 workers.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,25 +16,32 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coded_matmat, min_weight, proposed_mm
+from repro.api import compile_plan, list_schemes
+from repro.core import min_weight
 
 rng = np.random.default_rng(0)
 
+# --- pick a scheme from the registry ------------------------------------
+print("registered mm schemes:",
+      ", ".join(i.name for i in list_schemes("mm")))
+
 # --- the paper's Fig. 4 system ------------------------------------------
 n, k_A, k_B = 20, 4, 4
-scheme = proposed_mm(n, k_A, k_B)
-s = scheme.s
-print(f"system: n={n} devices, k_A=k_B=4 -> resilient to s={s} stragglers")
-print(f"weight: omega_A*omega_B = {scheme.omega_A}*{scheme.omega_B} "
-      f"= {scheme.weight()} (lower bound {min_weight(n, s)})")
-print(f"dense MDS codes would use weight k_A*k_B = {k_A * k_B}\n")
-
-# --- sparse inputs (95% zeros) -------------------------------------------
 t, r, w = 400, 320, 240
 A = rng.standard_normal((t, r)) * (rng.random((t, r)) < 0.05)
 B = rng.standard_normal((t, w)) * (rng.random((t, w)) < 0.05)
 print(f"A: {A.shape}, density {np.mean(A != 0):.3f}; "
       f"B: {B.shape}, density {np.mean(B != 0):.3f}")
+
+# compile once: scheme + encoding + shards + backend (auto = density pick)
+plan = compile_plan(jnp.asarray(A, jnp.float32), scheme="proposed",
+                    n=n, k_A=k_A, k_B=k_B, backend="auto")
+scheme, s = plan.scheme, plan.s
+print(f"system: n={n} devices, k_A=k_B=4 -> resilient to s={s} stragglers")
+print(f"weight: omega_A*omega_B = {scheme.omega_A}*{scheme.omega_B} "
+      f"= {scheme.weight()} (lower bound {min_weight(n, s)})")
+print(f"dense MDS codes would use weight k_A*k_B = {k_A * k_B}")
+print(f"compiled plan: {plan.describe()}\n")
 
 # each coded submatrix mixes only omega block-columns -> density grows by
 # ~omega, not by k (the paper's whole point)
@@ -47,10 +55,17 @@ stragglers = rng.choice(n, size=s, replace=False)
 done[stragglers] = False
 print(f"stragglers this round: {sorted(stragglers.tolist())}")
 
-out = coded_matmat(jnp.asarray(A, jnp.float32), jnp.asarray(B, jnp.float32),
-                   scheme, seed=0, done=jnp.asarray(done))
+out = plan.matmat(jnp.asarray(B, jnp.float32), jnp.asarray(done))
 err = np.max(np.abs(np.asarray(out) - A.T @ B)) / np.max(np.abs(A.T @ B))
 print(f"recovered A^T B from the fastest {n - s} workers; "
       f"max rel err = {err:.2e}")
 assert err < 1e-3
+
+# the plan is compiled once -- a second round with a different straggler
+# set reuses the encoded shards and hits the decode cache
+done2 = np.ones(n, bool)
+done2[rng.choice(n, size=s, replace=False)] = False
+out2 = plan.matmat(jnp.asarray(B, jnp.float32), jnp.asarray(done2))
+err2 = np.max(np.abs(np.asarray(out2) - A.T @ B)) / np.max(np.abs(A.T @ B))
+assert err2 < 1e-3
 print("OK")

@@ -2,10 +2,11 @@
 
 Serves a wave of requests through the engine, then demonstrates the
 paper's feature end-to-end: the final logits matmul runs through a
-CodedLinear (Alg. 1, n=6 workers, s=2) under fresh random straggler
-masks every step -- outputs are bit-stable regardless of WHICH two
-workers die, and the per-worker compute is omega/k = 2/4 of the logical
-matmul instead of the k/k a dense MDS code would need.
+precompiled CodedPlan (Alg. 1 via the scheme registry, n=6 workers,
+s=2, backend="auto") under fresh random straggler masks every step --
+outputs are bit-stable regardless of WHICH two workers die, and the
+per-worker compute is omega/k = 2/4 of the logical matmul instead of
+the k/k a dense MDS code would need.
 
     PYTHONPATH=src python examples/serve_coded.py
 """
@@ -29,7 +30,9 @@ params = model.init(jax.random.key(0))
 
 engine = ServeEngine(model, params, cfg, batch_size=4, max_len=64,
                      coded=CodedConfig(enabled=True, n_workers=6,
-                                       stragglers=2))
+                                       stragglers=2, scheme="proposed",
+                                       backend="auto"))
+print(f"coded LM head plan: {engine.coded.describe()}")
 
 # --- batched generation ----------------------------------------------------
 reqs = [Request(prompt=[1, 17, 42], max_new=8),
@@ -52,4 +55,7 @@ for trial in range(5):
     err = np.max(np.abs(np.asarray(logits) - ref)) / np.max(np.abs(ref))
     print(f"  trial {trial}: max rel err vs uncoded head = {err:.2e}")
     assert err < 1e-2
+stats = engine.coded.describe().get("decode_cache",
+                                    "n/a (reference backend)")
+print(f"decode cache after 5 trials: {stats}")
 print("OK: any 2 of 6 workers can die; logits unchanged")

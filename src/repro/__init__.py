@@ -1,0 +1,35 @@
+"""repro: sparsity-preserving straggler-optimal coded matrix computation.
+
+Top-level surface (lazy -- ``import repro`` stays cheap):
+
+    from repro import compile_plan, list_schemes, make_scheme
+
+    plan = repro.compile_plan(A, scheme="cyclic31", n=12, s=3)
+    y = plan.matvec(x, done=mask)
+
+The full registry / plan API lives in ``repro.api``; the paper's
+algorithmic core in ``repro.core``; execution backends in
+``repro.runtime``.
+"""
+
+from __future__ import annotations
+
+_API = (
+    "CodedPlan", "SchemeInfo", "block_zero_fraction", "choose_backend",
+    "compile_plan", "list_schemes", "make_scheme", "register_scheme",
+    "scheme_info", "scheme_names",
+)
+
+__all__ = list(_API)
+
+
+def __getattr__(name: str):
+    if name in _API:
+        from . import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,30 @@
+"""Public API: scheme registry + precompiled coded plans.
+
+    from repro.api import compile_plan, list_schemes, make_scheme
+
+    plan = compile_plan(A, scheme="cyclic31", n=12, s=3, backend="auto")
+    y = plan.matvec(x, done=mask)
+
+``schemes``  -- ``@register_scheme`` registry over the paper's family of
+encodings (Alg. 1/2, cyclic, Delta-partition, hetero, dense baselines);
+``backends`` -- density-measured automatic backend choice (the
+BENCH_runtime.json packed/reference crossover, ``pallas`` on TPU);
+``plan``     -- ``compile_plan`` -> ``CodedPlan`` with ``matvec`` /
+``matmat`` / ``aggregate`` and a pre-warmed LRU decode cache.
+"""
+
+from .backends import (  # noqa: F401
+    DEFAULT_DENSITY_CROSSOVER,
+    block_zero_fraction,
+    choose_backend,
+    density_crossover,
+)
+from .plan import CodedPlan, compile_plan  # noqa: F401
+from .schemes import (  # noqa: F401
+    SchemeInfo,
+    list_schemes,
+    make_scheme,
+    register_scheme,
+    scheme_info,
+    scheme_names,
+)

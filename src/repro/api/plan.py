@@ -1,0 +1,292 @@
+"""Plan compilation: scheme + encoding + packed shards + backend, once.
+
+``compile_plan`` is the repo's entry point for coded computation.  It
+fuses everything that is per-*operator* rather than per-*call*:
+
+  * the scheme (via the registry, ``repro.api.schemes``),
+  * the encoding matrices (host numpy, seeded),
+  * the encoded / packed shards (weight-omega encode + block-sparse
+    packing on the sparse backends),
+  * the backend choice (``backend="auto"`` measures the operand's block
+    density and applies the BENCH_runtime.json crossover, see
+    ``repro.api.backends``),
+  * a pre-warmed decode cache (the all-alive pattern -- the common case
+    on a healthy cluster -- never pays a solve).
+
+The compiled ``CodedPlan`` then exposes the three per-call operations:
+
+    plan = compile_plan(A, scheme="cyclic31", n=12, s=3, backend="auto")
+    y = plan.matvec(x, done=mask)        # A^T x, straggler-resilient
+    U = plan.matmat(B, done=mask)        # A^T B   (mm plans)
+    g = plan.aggregate(payloads, done=mask)  # coded gradient sum
+
+Plans compiled without an operand (``compile_plan(scheme=..., n=...)``)
+are aggregation-only: they own the decode machinery (LRU per-pattern
+inverse) but no shards -- that is what ``CodedAggregator`` rides on.
+
+Why one object: it can be built once at init/checkpoint-load, cached on
+the layer, shipped to the serving engine, and re-tuned (re-compiled)
+when the operand's density drifts across the packed/reference crossover.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.assignment import MMScheme, MVScheme
+from ..core.coded_matmul import fastest_k_rows, split_block_columns
+from ..core.decoding import system_matrix
+from ..core.encoding import mm_encoding_matrices, mv_encoding_matrix
+from ..runtime import (
+    CodedExecutor,
+    DecodeCache,
+    encode_blocks,
+    is_concrete as _is_concrete,
+    support_tables,
+)
+from .backends import choose_backend
+from .schemes import make_scheme
+
+
+def _match_dtype(coded, A):
+    """Keep the encoded shards in the operand dtype.
+
+    The weight-omega encoders accumulate in f32; a bf16 operand (LM-head
+    serving) must not silently double the coded shards' footprint --
+    the n/k-redundant shards are the dominant memory cost.
+    """
+    if isinstance(coded, jax.core.Tracer) or coded.dtype == A.dtype:
+        return coded
+    return coded.astype(A.dtype)
+
+
+@dataclass(eq=False)
+class CodedPlan:
+    """A precompiled coded operator (see module docstring).
+
+    Public attributes are read-only by convention; per-call state lives
+    entirely in the LRU decode cache (safe to share across steps).
+    """
+
+    scheme: MVScheme | MMScheme
+    kind: str                       # "mv" | "mm"
+    backend: str                    # concrete backend (auto already resolved)
+    seed: int
+    G: np.ndarray                   # (n_tasks, k) decode system matrix
+    r: int | None = None            # logical output dim (None: aggregation-only)
+    executor: CodedExecutor | None = field(default=None, repr=False)
+    # mm-only: per-call B-side encoding state
+    cache_size: int = 64
+    _rb: np.ndarray | None = field(default=None, repr=False)
+    _sup_b: np.ndarray | None = field(default=None, repr=False)
+    _coef_b: np.ndarray | None = field(default=None, repr=False)
+    _agg_cache: DecodeCache | None = field(default=None, repr=False)
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.scheme.n
+
+    @property
+    def k(self) -> int:
+        return self.scheme.k
+
+    @property
+    def s(self) -> int:
+        return self.scheme.s
+
+    @property
+    def tasks_per_worker(self) -> int:
+        return getattr(self.scheme, "tasks_per_worker", 1)
+
+    @property
+    def n_tasks(self) -> int:
+        return self.G.shape[0]
+
+    def describe(self) -> dict:
+        """Metadata for logs / benchmarks / schedulers."""
+        d = {
+            "scheme": self.scheme.name, "kind": self.kind,
+            "backend": self.backend, "n": self.n, "k": self.k,
+            "s": self.s, "weight": self.scheme.weight(), "seed": self.seed,
+        }
+        if self.executor is not None and self.executor.cache is not None:
+            d["decode_cache"] = {"hits": self.executor.cache.hits,
+                                 "misses": self.executor.cache.misses}
+        return d
+
+    def worker_tile_counts(self) -> np.ndarray:
+        """Nonzero packed tiles per worker (the omega-scaling quantity)."""
+        if self.executor is None:
+            raise ValueError("aggregation-only plan holds no shards")
+        return self.executor.worker_tile_counts()
+
+    # -- done-mask plumbing ----------------------------------------------
+
+    def _task_done(self, done):
+        """Worker-level done mask -> task-row mask (Delta-partition
+        baselines run ``tasks_per_worker`` tasks per worker)."""
+        if done is None:
+            return None
+        per = self.tasks_per_worker
+        if per == 1:
+            return done
+        if _is_concrete(done):
+            return np.repeat(np.asarray(done, bool), per)
+        return jnp.repeat(done, per)
+
+    def _decode_cache(self) -> DecodeCache:
+        if self.executor is not None and self.executor.cache is not None:
+            return self.executor.cache
+        if self._agg_cache is None:
+            self._agg_cache = DecodeCache(self.G, self.k,
+                                          maxsize=self.cache_size)
+        return self._agg_cache
+
+    # -- per-call operations ----------------------------------------------
+
+    def matvec(self, x, done=None):
+        """A^T x for x (t,) or (batch, t); tolerates any s stragglers."""
+        if self.kind != "mv":
+            raise ValueError("matvec needs an mv plan; this plan is "
+                             f"kind={self.kind!r}")
+        if self.executor is None:
+            raise ValueError("plan compiled without an operand; pass A to "
+                             "compile_plan for matvec")
+        return self.executor.matvec(x, self._task_done(done))
+
+    def matmat(self, B, done=None):
+        """A^T B through the paired-encode pipeline; returns (r, w)."""
+        if self.kind != "mm":
+            raise ValueError("matmat needs an mm plan; this plan is "
+                             f"kind={self.kind!r}")
+        if self.executor is None:
+            raise ValueError("plan compiled without an operand; pass A to "
+                             "compile_plan for matmat")
+        sch = self.scheme
+        w = B.shape[1]
+        blocks_b = split_block_columns(B, sch.k_B)
+        if self.backend == "reference" or not _is_concrete(B, done):
+            coded_b = jnp.einsum("nk,ktc->ntc",
+                                 jnp.asarray(self._rb, B.dtype), blocks_b)
+        else:
+            coded_b = encode_blocks(blocks_b, self._sup_b, self._coef_b,
+                                    self.backend)
+        u = self.executor.matmat(coded_b, done)      # (k, ca, cb)
+        ka, kb = sch.k_A, sch.k_B
+        ca, cb = u.shape[1], u.shape[2]
+        out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3)
+        return out.reshape(ka * ca, kb * cb)[: self.r, : w]
+
+    def aggregate(self, payloads, done=None):
+        """Straggler-resilient sum of the k shard-gradients.
+
+        ``payloads`` is the length-n list of worker payload pytrees
+        (each ``sum_q R[i,q] g_q`` over the worker's support; straggler
+        entries may hold garbage -- they are masked by ``done``).  The
+        decode coefficient vector ``a`` (``a^T R[rows] = 1^T``) comes
+        from the LRU-cached per-pattern inverse, so repeated steps under
+        the same done mask never re-run a k x k solve.
+        """
+        if self.kind != "mv":
+            raise ValueError("aggregate needs an mv plan; this plan is "
+                             f"kind={self.kind!r}")
+        k = self.k
+        task_done = self._task_done(done)
+        if task_done is None:
+            task_done = np.ones(self.n_tasks, bool)
+        if _is_concrete(task_done):
+            dplan = self._decode_cache().plan(task_done)
+            # a^T G[rows] = 1^T  <=>  a = (G[rows]^{-1})^T 1 = colsums(hinv)
+            a = jnp.asarray(dplan.hinv.sum(axis=0))
+            rows = dplan.rows
+        else:
+            rows = fastest_k_rows(task_done, k)
+            sub = jnp.asarray(self.G, jnp.float32)[rows]
+            a = jnp.linalg.solve(sub.T, jnp.ones((k,), jnp.float32))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+        return jax.tree.map(
+            lambda st: jnp.einsum("i,i...->...", a, st[rows]), stacked)
+
+    # -- cache management --------------------------------------------------
+
+    def prewarm(self, done=None) -> "CodedPlan":
+        """Precompute the decode plan for a pattern (default all-alive)."""
+        if self.executor is not None and self.executor.cache is None:
+            # reference executor: matvec/matmat solve per call and never
+            # consult a cache -- warming one would be a wasted inversion
+            return self
+        task_done = self._task_done(done)
+        if task_done is None:
+            task_done = np.ones(self.n_tasks, bool)
+        if _is_concrete(task_done):
+            self._decode_cache().plan(np.asarray(task_done, bool))
+        return self
+
+
+def compile_plan(A=None, *, scheme="proposed", n=None, s=None,
+                 k_A=None, k_B=None, capacities=None, seed: int = 0,
+                 backend: str | None = "auto",
+                 cache_size: int = 64) -> CodedPlan:
+    """Compile a ``CodedPlan`` (see module docstring).
+
+    ``scheme`` is a registry name (``repro.api.list_schemes()``) or an
+    already-built ``MVScheme`` / ``MMScheme`` descriptor.  ``backend=
+    "auto"`` (the default) measures A's block density and applies the
+    packed/reference crossover (``pallas`` on TPU); the
+    ``REPRO_CODED_BACKEND`` env var overrides everything, including
+    auto.  Without ``A`` the plan is aggregation-only.
+    """
+    if isinstance(scheme, (MVScheme, MMScheme)):
+        sch = scheme
+    else:
+        sch = make_scheme(scheme, n=n, s=s, k_A=k_A, k_B=k_B,
+                          capacities=capacities)
+    kind = "mm" if isinstance(sch, MMScheme) else "mv"
+    G = np.asarray(system_matrix(sch, seed))
+    resolved = choose_backend(A, backend)
+
+    plan = CodedPlan(scheme=sch, kind=kind, backend=resolved, seed=seed,
+                     G=G, cache_size=cache_size)
+
+    if A is not None:
+        if A.ndim != 2:
+            raise ValueError(f"operand must be 2-D (t, r), got {A.shape}")
+        if kind == "mv":
+            R = mv_encoding_matrix(sch, seed)
+            blocks = split_block_columns(A, sch.k_A)
+            if resolved == "reference":
+                coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R, A.dtype),
+                                   blocks)
+            else:
+                sup, coef = support_tables(sch.supports, R)
+                coded = encode_blocks(blocks, sup, coef, resolved)
+            coded = _match_dtype(coded, A)
+            plan.executor = CodedExecutor(
+                coded, jnp.asarray(G, jnp.float32), sch.k_A, A.shape[1],
+                backend=resolved, cache_size=cache_size)
+        else:
+            ra, rb = mm_encoding_matrices(sch, seed)
+            blocks_a = split_block_columns(A, sch.k_A)
+            if resolved == "reference":
+                coded_a = jnp.einsum("nk,ktc->ntc", jnp.asarray(ra, A.dtype),
+                                     blocks_a)
+            else:
+                sup_a, coef_a = support_tables(sch.supports_A, ra)
+                coded_a = encode_blocks(blocks_a, sup_a, coef_a, resolved)
+                plan._sup_b, plan._coef_b = support_tables(sch.supports_B, rb)
+            plan._rb = rb
+            plan.executor = CodedExecutor(
+                _match_dtype(coded_a, A), jnp.asarray(G, jnp.float32),
+                sch.k, A.shape[1], backend=resolved, cache_size=cache_size)
+        plan.r = A.shape[1]
+        if _is_concrete(A):
+            plan.prewarm()
+    elif kind == "mv":
+        plan.prewarm()      # aggregation-only: warm the all-alive pattern
+    return plan

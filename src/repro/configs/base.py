@@ -62,9 +62,13 @@ class CodedConfig:
     stragglers: int = 2
     layers: tuple[str, ...] = ("lm_head",)   # which matmuls are coded
     seed: int = 0
+    # registered mv scheme name (repro.api.list_schemes("mv")) used for
+    # the coded matmuls; "proposed" is the paper's Alg. 1.
+    scheme: str = "proposed"
     # execution backend for the coded engine (repro.runtime):
-    # None = platform default (pallas on TPU, reference elsewhere);
-    # the REPRO_CODED_BACKEND env var overrides everything.
+    # None/"auto" = density+platform pick at plan compile time
+    # (repro.api.backends); the REPRO_CODED_BACKEND env var overrides
+    # everything, including auto.
     backend: str | None = None
 
 

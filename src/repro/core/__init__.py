@@ -83,3 +83,19 @@ from .weights import (  # noqa: F401
     mv_weight,
     weight_regime,
 )
+
+# the public scheme-registry / plan API, re-exported lazily: repro.api
+# builds on the submodules above, so an eager import here would be
+# circular whenever the import chain enters through repro.api
+_API_EXPORTS = (
+    "CodedPlan", "compile_plan", "list_schemes", "make_scheme",
+    "register_scheme", "scheme_info", "scheme_names",
+)
+
+
+def __getattr__(name: str):
+    if name in _API_EXPORTS:
+        from .. import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

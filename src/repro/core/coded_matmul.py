@@ -7,41 +7,42 @@ This is the paper's pipeline as a composable JAX module:
               -> straggler selection (fastest-k mask)
               -> decode (k x k solve)
 
-Two execution styles are provided:
+Two execution styles are provided, both shims over the plan API
+(``repro.api.compile_plan``):
 
   * ``coded_matvec`` / ``coded_matmat``: functional one-shot APIs that
-    encode on the fly (the "edge server dispatches coded submatrices"
-    picture).  One-shot means exactly that: each call re-encodes, and
-    on a sparse backend re-packs and re-plans -- hot loops over a fixed
-    matrix should use ``CodedOperator``, which amortises all of it.
+    compile a throwaway plan per call (the "edge server dispatches
+    coded submatrices" picture).  One-shot means exactly that: each
+    call re-encodes, re-packs and re-plans -- hot loops over a fixed
+    matrix should compile the plan once (``compile_plan`` directly, or
+    ``CodedOperator`` which wraps one).
   * ``CodedOperator``: pre-encoded operator, the form used by the model
     layers (``repro.parallel.coded_layer``) where weights are encoded
-    once at init/checkpoint-load and reused every step; its executor
-    (packing + decode-plan cache) is built once and cached.
+    once at init/checkpoint-load and reused every step; its plan
+    (packing + decode-plan cache + backend choice) is built once and
+    cached.
 
-Both styles route through the ``repro.runtime`` coded executor, which
-dispatches to a sparsity-aware backend (packed block-sparse / Pallas
-kernels) when inputs are concrete and to the pure-jnp reference path
-under a trace -- so everything stays jit-compatible: the straggler mask
-is a runtime input and a single compiled executable serves any
-straggler pattern (essential on a real cluster where the straggler set
-changes per step), while eager hot loops get the weight-omega fast
-path and the cached-inverse decode.
+Plans execute on the ``repro.runtime`` coded executor, which dispatches
+to a sparsity-aware backend (packed block-sparse / Pallas kernels) when
+inputs are concrete and to the pure-jnp reference path under a trace --
+so everything stays jit-compatible: the straggler mask is a runtime
+input and a single compiled executable serves any straggler pattern
+(essential on a real cluster where the straggler set changes per step),
+while eager hot loops get the weight-omega fast path and the
+cached-inverse decode.  ``backend=None``/"auto" resolves per operator
+from measured block density (``repro.api.backends``).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..runtime import CodedExecutor, encode_blocks, resolve_backend, support_tables
+from ..runtime import CodedExecutor
 from .assignment import MMScheme, MVScheme
-from .decoding import system_matrix
-from .encoding import mm_encoding_matrices, mv_encoding_matrix
 
 
 # ---------------------------------------------------------------------------
@@ -94,42 +95,21 @@ def fastest_k_rows(done: jnp.ndarray, k: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnums=(3,))
-def _mv_compute_decode(coded: jnp.ndarray, x: jnp.ndarray, done: jnp.ndarray,
-                       k: int, G: jnp.ndarray) -> jnp.ndarray:
-    # coded: (n, t, c); per-worker products y_i = coded_i^T x : (n, c)
-    y = jnp.einsum("ntc,t->nc", coded, x)
-    rows = fastest_k_rows(done, k)
-    sub = G[rows]                        # (k, k)
-    ysub = y[rows]                       # (k, c)
-    u = jnp.linalg.solve(sub, ysub)      # (k, c) unknowns A_q^T x
-    return u
-
-
 def coded_matvec(A: jnp.ndarray, x: jnp.ndarray, scheme: MVScheme,
                  seed: int = 0, done: jnp.ndarray | None = None,
                  backend: str | None = None) -> jnp.ndarray:
-    """Compute A^T x through the coded pipeline; returns (r,)."""
-    t, r = A.shape
-    k = scheme.k_A
-    backend = resolve_backend(backend)
-    if isinstance(A, jax.core.Tracer):
-        backend = "reference"                        # host packing needs data
-    R = mv_encoding_matrix(scheme, seed)
-    blocks = split_block_columns(A, k)               # (k, t, c)
-    G = jnp.asarray(system_matrix(scheme, seed))
-    if backend == "reference":
-        coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R), blocks)
-        if done is None:
-            done = jnp.ones(coded.shape[0], dtype=bool)
-        u = _mv_compute_decode(coded, x, done, k, G)  # (k, c) stacked A_q^T x
-        return u.reshape(-1)[:r]
-    # sparsity-preserving path: weight-omega encode + packed worker
-    # compute on the fastest k + cached-inverse decode
-    sup, coef = support_tables(scheme.supports, R)
-    coded = encode_blocks(blocks, sup, coef, backend)
-    ex = CodedExecutor(coded, G, k, r, backend=backend)
-    return ex.matvec(x, done)
+    """Compute A^T x through the coded pipeline; returns (r,).
+
+    One-shot shim over ``repro.api.compile_plan``: each call compiles a
+    throwaway plan (encode + pack + backend pick).  Hot loops over a
+    fixed A should compile the plan once and call ``plan.matvec``.
+    ``backend=None``/"auto" picks packed/reference from A's measured
+    block density (``repro.api.backends``).
+    """
+    from ..api.plan import compile_plan  # noqa: PLC0415 - layering
+
+    plan = compile_plan(A, scheme=scheme, seed=seed, backend=backend)
+    return plan.matvec(x, done)
 
 
 # ---------------------------------------------------------------------------
@@ -137,48 +117,19 @@ def coded_matvec(A: jnp.ndarray, x: jnp.ndarray, scheme: MVScheme,
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnums=(3,))
-def _mm_compute_decode(coded_a: jnp.ndarray, coded_b: jnp.ndarray,
-                       done: jnp.ndarray, k: int, G: jnp.ndarray) -> jnp.ndarray:
-    # per-worker products P_i = coded_a_i^T coded_b_i : (n, ca, cb)
-    p = jnp.einsum("ntc,ntd->ncd", coded_a, coded_b)
-    rows = fastest_k_rows(done, k)
-    sub = G[rows]                                     # (k, k)
-    ysub = p[rows].reshape(k, -1)                     # (k, ca*cb)
-    u = jnp.linalg.solve(sub, ysub)                   # (k, ca*cb)
-    return u.reshape((k,) + p.shape[1:])
-
-
 def coded_matmat(A: jnp.ndarray, B: jnp.ndarray, scheme: MMScheme,
                  seed: int = 0, done: jnp.ndarray | None = None,
                  backend: str | None = None) -> jnp.ndarray:
-    """Compute A^T B through the coded pipeline; returns (r, w)."""
-    t, r = A.shape
-    _, w = B.shape
-    ka, kb = scheme.k_A, scheme.k_B
-    backend = resolve_backend(backend)
-    if isinstance(A, jax.core.Tracer) or isinstance(B, jax.core.Tracer):
-        backend = "reference"                        # host packing needs data
-    ra, rb = mm_encoding_matrices(scheme, seed)
-    blocks_a = split_block_columns(A, ka)            # (ka, t, ca)
-    blocks_b = split_block_columns(B, kb)            # (kb, t, cb)
-    G = jnp.asarray(system_matrix(scheme, seed))     # (n, ka*kb)
-    if backend == "reference":
-        coded_a = jnp.einsum("nk,ktc->ntc", jnp.asarray(ra), blocks_a)
-        coded_b = jnp.einsum("nk,ktc->ntc", jnp.asarray(rb), blocks_b)
-        if done is None:
-            done = jnp.ones(scheme.n, dtype=bool)
-        u = _mm_compute_decode(coded_a, coded_b, done, ka * kb, G)
-    else:
-        sup_a, coef_a = support_tables(scheme.supports_A, ra)
-        sup_b, coef_b = support_tables(scheme.supports_B, rb)
-        coded_a = encode_blocks(blocks_a, sup_a, coef_a, backend)
-        coded_b = encode_blocks(blocks_b, sup_b, coef_b, backend)
-        ex = CodedExecutor(coded_a, G, ka * kb, r, backend=backend)
-        u = ex.matmat(coded_b, done)                 # (k, ca, cb)
-    ca, cb = u.shape[1], u.shape[2]
-    out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3).reshape(ka * ca, kb * cb)
-    return out[:r, :w]
+    """Compute A^T B through the coded pipeline; returns (r, w).
+
+    One-shot shim over ``repro.api.compile_plan`` (see ``coded_matvec``);
+    A is plan-encoded, B is encoded per call exactly as a fixed-A hot
+    loop would via ``plan.matmat``.
+    """
+    from ..api.plan import compile_plan  # noqa: PLC0415 - layering
+
+    plan = compile_plan(A, scheme=scheme, seed=seed, backend=backend)
+    return plan.matmat(B, done)
 
 
 # ---------------------------------------------------------------------------
@@ -190,16 +141,17 @@ def coded_matmat(A: jnp.ndarray, B: jnp.ndarray, scheme: MMScheme,
 class CodedOperator:
     """A^T-apply operator with straggler resilience.
 
-    Encodes A's block-columns once; ``apply(x, done)`` then computes
-    A^T x for activation batches x (t,) or (batch, t) while tolerating
-    up to s stragglers indicated by the ``done`` mask.
+    Thin shim over the plan API (``repro.api.compile_plan``): ``build``
+    compiles a ``CodedPlan`` (scheme + encoding + packed shards +
+    backend, once) and ``apply(x, done)`` routes through it, so hot
+    loops get the weight-omega fast path and the cached-inverse decode.
+    ``backend=None``/"auto" picks packed/reference per operator from A's
+    measured block density (the ROADMAP density crossover); under a
+    trace everything degrades to the jit/grad-safe reference path.
 
-    ``apply`` routes through a ``repro.runtime.CodedExecutor``: with a
-    sparse backend (``packed`` / ``pallas``) and concrete inputs, only
-    the fastest-k workers' nonzero tiles are multiplied and the decode
-    reuses a cached k x k inverse per straggler pattern; under a trace
-    (or with the ``reference`` backend) it runs the original dense
-    einsum + solve path, so jit/grad callers are unaffected.
+    Constructing the dataclass directly from pre-encoded shards (tests,
+    checkpoint restore) still works -- the plan is then built lazily
+    around the existing ``coded``/``G``.
     """
 
     scheme: MVScheme
@@ -209,20 +161,41 @@ class CodedOperator:
     backend: str | None = None
     _executor: CodedExecutor | None = field(
         default=None, repr=False, compare=False)
+    _plan: object | None = field(default=None, repr=False, compare=False)
 
     @staticmethod
     def build(A: jnp.ndarray, scheme: MVScheme, seed: int = 0,
               backend: str | None = None) -> "CodedOperator":
-        R = mv_encoding_matrix(scheme, seed)
-        blocks = split_block_columns(A, scheme.k_A)
-        if resolve_backend(backend) == "reference":
-            coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R), blocks)
-        else:
-            sup, coef = support_tables(scheme.supports, R)
-            coded = encode_blocks(blocks, sup, coef, backend)
-        return CodedOperator(scheme=scheme, coded=coded,
-                             G=jnp.asarray(system_matrix(scheme, seed)),
-                             r=A.shape[1], backend=backend)
+        from ..api.plan import compile_plan  # noqa: PLC0415 - layering
+
+        plan = compile_plan(A, scheme=scheme, seed=seed, backend=backend)
+        op = CodedOperator(scheme=scheme, coded=plan.executor.coded,
+                           G=plan.executor.G, r=plan.r,
+                           backend=plan.backend)
+        if not isinstance(op.coded, jax.core.Tracer):
+            op._executor, op._plan = plan.executor, plan
+        return op
+
+    def plan(self):
+        """The compiled ``CodedPlan`` backing this operator."""
+        if isinstance(self.coded, jax.core.Tracer):
+            from ..api.plan import CodedPlan  # noqa: PLC0415 - layering
+
+            # built inside a trace: throwaway plan, never cached; G may
+            # itself be traced here -- the reference executor never
+            # consults the plan-level G, so pass it through untouched
+            return CodedPlan(scheme=self.scheme, kind="mv",
+                             backend="reference", seed=0,
+                             G=self.G, r=self.r,
+                             executor=self.executor())
+        if self._plan is None:
+            from ..api.plan import CodedPlan  # noqa: PLC0415 - layering
+
+            self._plan = CodedPlan(
+                scheme=self.scheme, kind="mv",
+                backend=self.executor().backend, seed=0,
+                G=np.asarray(self.G), r=self.r, executor=self.executor())
+        return self._plan
 
     def executor(self) -> CodedExecutor:
         if isinstance(self.coded, jax.core.Tracer):
@@ -237,7 +210,10 @@ class CodedOperator:
         return self._executor
 
     def apply(self, x: jnp.ndarray, done: jnp.ndarray | None = None) -> jnp.ndarray:
-        return self.executor().matvec(x, done)
+        # plan() hands back a throwaway reference plan when built inside
+        # a trace; matvec expands worker-level done masks to task rows
+        # for the Delta-partition schemes in both worlds
+        return self.plan().matvec(x, done)
 
     def worker_nnz(self) -> np.ndarray:
         c = np.asarray(self.coded)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.schemes import scheme_names
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..configs.base import CodedConfig
 from ..models import build_model
@@ -38,9 +39,17 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=6)
     ap.add_argument("--stragglers", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--coded-backend", choices=BACKENDS, default=None,
+    ap.add_argument("--scheme",
+                    choices=scheme_names("mv", resilient_only=True),
+                    default="proposed",
+                    help="registered coded scheme for the LM head "
+                         "(repro.api.list_schemes; non-resilient and "
+                         "capacity-based schemes are excluded)")
+    ap.add_argument("--coded-backend", choices=BACKENDS + ("auto",),
+                    default="auto",
                     help="coded-execution backend for the LM head "
-                         "(default: platform choice, see repro.runtime)")
+                         "(auto = density + platform pick at plan "
+                         "compile time, see repro.api.backends)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -49,10 +58,12 @@ def main() -> None:
     model = build_model(cfg, dtype=jnp.float32 if args.smoke else jnp.bfloat16)
     params = model.init(jax.random.key(args.seed))
     coded = CodedConfig(enabled=True, n_workers=args.workers,
-                        stragglers=args.stragglers,
+                        stragglers=args.stragglers, scheme=args.scheme,
                         backend=args.coded_backend) if args.coded else None
     engine = ServeEngine(model, params, cfg, batch_size=args.batch,
                          max_len=args.max_len, coded=coded)
+    if engine.coded is not None:
+        print(f"coded LM head plan: {engine.coded.describe()}")
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=[1] + rng.integers(2, cfg.vocab,

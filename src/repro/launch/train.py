@@ -19,6 +19,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from ..api.schemes import scheme_names
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..data import DataConfig, make_pipeline
 from ..models import build_model
@@ -43,20 +44,35 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--coded-backend", choices=BACKENDS, default=None,
+    ap.add_argument("--scheme",
+                    choices=scheme_names("mv", resilient_only=True),
+                    default="proposed",
+                    help="registered coded scheme recorded in the model "
+                         "config's CodedConfig (consumed wherever the "
+                         "config's coded components are built, e.g. a "
+                         "checkpoint later served with a coded LM head)")
+    ap.add_argument("--coded-backend", choices=BACKENDS + ("auto",),
+                    default=None,
                     help="force the coded-execution backend for every "
-                         "coded component in this run (repro.runtime)")
+                         "coded component in this run ('auto' re-enables "
+                         "the per-plan density pick, see repro.api)")
     args = ap.parse_args()
 
     if args.coded_backend:
         os.environ[ENV_BACKEND] = args.coded_backend
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.scheme != cfg.coded.scheme:
+        import dataclasses  # noqa: PLC0415
+
+        cfg = cfg.with_(coded=dataclasses.replace(cfg.coded,
+                                                  scheme=args.scheme))
     if cfg.family in ("audio",):
         raise SystemExit("use examples/train_lm.py for enc-dec training")
     model = build_model(cfg, dtype=jnp.float32 if args.smoke else jnp.bfloat16)
     print(f"arch={cfg.name} params~{cfg.param_count() / 1e6:.1f}M "
-          f"devices={len(jax.devices())} coded_backend={resolve_backend()}")
+          f"devices={len(jax.devices())} coded_backend={resolve_backend()} "
+          f"coded_scheme={cfg.coded.scheme}")
 
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                       global_batch=args.batch, seed=args.seed)

@@ -52,40 +52,68 @@ def _capacity(tokens: int, moe: MoEConfig) -> int:
     return max(4, -(-c // 4) * 4)    # round up to a multiple of 4
 
 
+def _route_tokens(router: jnp.ndarray, tokens: jnp.ndarray, moe: MoEConfig,
+                  cap: int):
+    """Top-k routing + sort-based slot assignment (integer only).
+
+    Shared by the dense (``moe_block``) and coded (``CodedMoE``) expert
+    paths so the dispatch semantics cannot diverge.  Returns
+    ``(aux, fp, tok_id, keep, dest)``: the Switch load-balancing aux
+    loss, flattened combine weights, token ids, capacity-keep mask and
+    slot destinations (OOB -> dropped).
+    """
+    t = tokens.shape[0]
+    e, k = moe.n_experts, moe.top_k
+    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                  # (t, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch): top-1 share x mean prob
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+    aux = e * jnp.sum(frac_tokens * probs.mean(axis=0))
+
+    fe = top_e.reshape(-1)                                   # (t*k,)
+    fp = top_p.reshape(-1)
+    tok_id = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(fe, stable=True)
+    counts = jnp.bincount(fe, length=e)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    ranks = jnp.arange(t * k) - starts[fe[order]]
+    pos = jnp.zeros(t * k, jnp.int32).at[order].set(ranks.astype(jnp.int32))
+    keep = pos < cap
+    dest = jnp.where(keep, fe * cap + pos, e * cap)          # OOB -> dropped
+    return aux, fp, tok_id, keep, dest
+
+
+def _combine_slots(ye: jnp.ndarray, fp, tok_id, keep, dest, t: int, dtype
+                   ) -> jnp.ndarray:
+    """Expert outputs (E, C, d) -> per-token combine (t, d)."""
+    n_slots = ye.shape[0] * ye.shape[1]
+    y_flat = ye.reshape(n_slots, -1)
+    y_slot = jnp.where(keep[:, None],
+                       y_flat[jnp.minimum(dest, n_slots - 1)], 0.0)
+    return jax.ops.segment_sum(y_slot * fp[:, None].astype(dtype),
+                               tok_id, num_segments=t)
+
+
+def _shared_expert(sp: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    gs = jnp.einsum("td,dh->th", tokens, sp["w_gate"])
+    us = jnp.einsum("td,dh->th", tokens, sp["w_up"])
+    return jnp.einsum("th,hd->td", jax.nn.silu(gs) * us, sp["w_down"])
+
+
 def moe_block(p: dict, x: jnp.ndarray, moe: MoEConfig
               ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
     b, s, d = x.shape
     t = b * s
-    e, k = moe.n_experts, moe.top_k
+    e = moe.n_experts
     cap = _capacity(t, moe)
     tokens = x.reshape(t, d)
 
-    # --- routing -----------------------------------------------------------
-    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32), p["router"])
-    probs = jax.nn.softmax(logits, axis=-1)
-    top_p, top_e = jax.lax.top_k(probs, k)                  # (t, k)
-    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
-
-    # load-balancing auxiliary loss (Switch):
-    frac_tokens = jnp.mean(
-        (jax.nn.one_hot(top_e[:, 0], e)), axis=0)           # top-1 share
-    mean_probs = probs.mean(axis=0)
-    aux = e * jnp.sum(frac_tokens * mean_probs)
-
-    # --- slot assignment (sort-based, integer only) -------------------------
-    fe = top_e.reshape(-1)                                   # (t*k,)
-    fp = top_p.reshape(-1)
-    tok_id = jnp.repeat(jnp.arange(t), k)
-    order = jnp.argsort(fe, stable=True)
-    sorted_e = fe[order]
-    counts = jnp.bincount(fe, length=e)
-    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
-                              jnp.cumsum(counts)[:-1]])
-    ranks = jnp.arange(t * k) - starts[sorted_e]
-    pos = jnp.zeros(t * k, jnp.int32).at[order].set(ranks.astype(jnp.int32))
-    keep = pos < cap
-    dest = jnp.where(keep, fe * cap + pos, e * cap)          # OOB -> dropped
+    aux, fp, tok_id, keep, dest = _route_tokens(p["router"], tokens, moe, cap)
 
     # --- dispatch -> expert FFN -> combine ----------------------------------
     from ..parallel.ctx import shard  # noqa: PLC0415
@@ -102,17 +130,10 @@ def moe_block(p: dict, x: jnp.ndarray, moe: MoEConfig
     g = jnp.einsum("ecd,edh->ech", xe, w_gate)
     u = jnp.einsum("ecd,edh->ech", xe, w_up)
     ye = jnp.einsum("ech,ehd->ecd", jax.nn.silu(g) * u, w_down)
-    y_flat = ye.reshape(e * cap, d)
-    y_slot = jnp.where(keep[:, None],
-                       y_flat[jnp.minimum(dest, e * cap - 1)], 0.0)
-    out = jax.ops.segment_sum(y_slot * fp[:, None].astype(x.dtype),
-                              tok_id, num_segments=t)
+    out = _combine_slots(ye, fp, tok_id, keep, dest, t, x.dtype)
 
     if moe.n_shared_experts:
-        sp = p["shared"]
-        gs = jnp.einsum("td,dh->th", tokens, sp["w_gate"])
-        us = jnp.einsum("td,dh->th", tokens, sp["w_up"])
-        out = out + jnp.einsum("th,hd->td", jax.nn.silu(gs) * us, sp["w_down"])
+        out = out + _shared_expert(p["shared"], tokens)
 
     return out.reshape(b, s, d), aux
 
@@ -229,3 +250,85 @@ def moe_apply(p: dict, x: jnp.ndarray, moe: MoEConfig):
         mesh, dp, model_axis = ep
         return moe_block_ep(p, x, moe, mesh, dp, model_axis)
     return moe_block(p, x, moe)
+
+
+# ---------------------------------------------------------------------------
+# Straggler-resilient expert FFN (coded plan path)
+# ---------------------------------------------------------------------------
+
+
+class CodedMoE:
+    """Expert FFN with straggler resilience: every expert weight matmul
+    runs through a precompiled ``repro.api.CodedPlan``.
+
+    The edge scenario: each expert's three (d x h / h x d) matrices are
+    plan-compiled once (scheme + encoding + packed shards + backend) for
+    ``n_workers`` virtual workers tolerating ``stragglers`` losses per
+    matmul -- the MoE analogue of the coded LM head.  ``backend="auto"``
+    measures each weight's block density, so dense experts run the
+    reference einsum while pruned/sparse experts get the packed
+    block-sparse path for free (the ROADMAP density crossover, per
+    operator).
+
+    Routing (top-k, sort-based slotting, capacity drop) is identical to
+    ``moe_block`` -- integer work that is not worth coding.  Per step a
+    single ``done`` mask applies to all expert matmuls (the workers are
+    the same physical devices); outputs match ``moe_block`` to fp32
+    tolerance under any <= s straggler pattern.
+    """
+
+    def __init__(self, p: dict, moe: MoEConfig, n_workers: int = 6,
+                 stragglers: int = 2, seed: int = 0,
+                 scheme: str = "proposed", backend: str | None = "auto"):
+        from ..api.plan import compile_plan  # noqa: PLC0415 - layering
+        from ..api.schemes import make_scheme  # noqa: PLC0415
+
+        self.p = p
+        self.moe = moe
+        self.n = n_workers
+        self.s = stragglers
+        sch = make_scheme(scheme, n=n_workers, k_A=n_workers - stragglers)
+        e = moe.n_experts
+
+        def plans(w):          # w: (E, din, dout) stacked expert weights
+            return [compile_plan(w[i], scheme=sch, seed=seed + i,
+                                 backend=backend) for i in range(e)]
+
+        self.gate = plans(p["w_gate"])
+        self.up = plans(p["w_up"])
+        self.down = plans(p["w_down"])
+
+    def backends(self) -> list[str]:
+        """Resolved backend per expert-gate plan (density may differ)."""
+        return [pl.backend for pl in self.gate]
+
+    def __call__(self, x: jnp.ndarray, done: jnp.ndarray | None = None
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """x (B, S, d) -> (out, aux); ``done`` masks the coded workers."""
+        p, moe = self.p, self.moe
+        b, s, d = x.shape
+        t = b * s
+        e = moe.n_experts
+        cap = _capacity(t, moe)
+        tokens = x.reshape(t, d)
+
+        aux, fp, tok_id, keep, dest = _route_tokens(
+            p["router"], tokens, moe, cap)
+        buf = jnp.zeros((e * cap, d), x.dtype).at[dest].set(
+            tokens[tok_id], mode="drop")
+        xe = buf.reshape(e, cap, d)
+
+        # --- coded expert FFN: three plan.matvec calls per expert ------
+        outs = []
+        for i in range(e):
+            g = self.gate[i].matvec(xe[i], done)          # (cap, h)
+            u = self.up[i].matvec(xe[i], done)
+            y = self.down[i].matvec(
+                (jax.nn.silu(g) * u).astype(xe.dtype), done)
+            outs.append(y)
+        ye = jnp.stack(outs).astype(x.dtype)              # (e, cap, d)
+        out = _combine_slots(ye, fp, tok_id, keep, dest, t, x.dtype)
+
+        if moe.n_shared_experts:
+            out = out + _shared_expert(p["shared"], tokens)
+        return out.reshape(b, s, d), aux

@@ -10,17 +10,23 @@ argument: per-worker work scales with omega, not with the redundancy a
 dense code would need).
 
 Decode is even cheaper than the matrix case: we only need the SUM of the
-k shard gradients, i.e. a vector a with a^T R[done_k] = 1^T, found by
-one k x k solve; the aggregated gradient is then sum_i a_i g~_i.
+k shard gradients, i.e. a vector a with a^T R[done_k] = 1^T -- one k x k
+factorisation *per straggler pattern*; the aggregated gradient is then
+sum_i a_i g~_i.
 
 ``CodedAggregator`` wraps this for a pytree of gradients; the trainer
 can use it to aggregate microbatch/host gradients while tolerating any
-``s`` straggling workers per step.
+``s`` straggling workers per step.  Decode routes through an
+aggregation-only ``repro.api.CodedPlan``: repeated steps under the same
+done mask hit the LRU-cached per-pattern inverse instead of re-running
+a k x k solve every call (on a real cluster the same handful of
+patterns recurs step after step).  Traced masks fall back to the
+jit-safe solve path.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +43,8 @@ class CodedAggregator:
 
     scheme: MVScheme
     R: jnp.ndarray            # (n, k) encoding matrix
+    seed: int = 0
+    _plan: object | None = field(default=None, repr=False, compare=False)
 
     @staticmethod
     def build(n_workers: int, stragglers: int, seed: int = 0
@@ -45,7 +53,23 @@ class CodedAggregator:
         scheme = proposed_mv(n_workers, k)
         return CodedAggregator(
             scheme=scheme,
-            R=jnp.asarray(mv_encoding_matrix(scheme, seed), jnp.float32))
+            R=jnp.asarray(mv_encoding_matrix(scheme, seed), jnp.float32),
+            seed=seed)
+
+    def plan(self):
+        """Aggregation-only ``CodedPlan`` (owns the LRU decode cache).
+
+        Built around ``self.R`` directly -- R stays the single source of
+        truth even when the dataclass is constructed with a custom
+        encoding matrix rather than through ``build``.
+        """
+        if self._plan is None:
+            from ..api.plan import CodedPlan  # noqa: PLC0415 - layering
+
+            self._plan = CodedPlan(
+                scheme=self.scheme, kind="mv", backend="reference",
+                seed=self.seed, G=np.asarray(self.R, np.float64))
+        return self._plan
 
     @property
     def shard_assignment(self) -> tuple[tuple[int, ...], ...]:
@@ -65,8 +89,16 @@ class CodedAggregator:
         return out
 
     def decode_coeffs(self, done: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """a (k,) with a^T R[rows] = 1^T, plus the chosen rows (k,)."""
+        """a (k,) with a^T R[rows] = 1^T, plus the chosen rows (k,).
+
+        Concrete masks hit the plan's LRU per-pattern inverse (zero
+        solves on repeat patterns); traced masks run the jit-safe solve.
+        """
         k = self.scheme.k_A
+        if not isinstance(done, jax.core.Tracer):
+            dplan = self.plan()._decode_cache().plan(np.asarray(done, bool))
+            # a^T R[rows] = 1^T  <=>  a = (R[rows]^{-1})^T 1 = colsums(hinv)
+            return jnp.asarray(dplan.hinv.sum(axis=0)), dplan.rows
         rows = fastest_k_rows(done, k)
         sub = self.R[rows]                       # (k, k)
         ones = jnp.ones((k,), jnp.float32)
@@ -78,8 +110,7 @@ class CodedAggregator:
 
         ``payloads`` is the length-n list of worker payloads (straggler
         entries may hold garbage -- they are masked by ``done``).
+        Routes through ``plan.aggregate`` (cached-inverse decode for
+        concrete masks, jit-safe solve under a trace).
         """
-        a, rows = self.decode_coeffs(done)
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
-        return jax.tree.map(
-            lambda s: jnp.einsum("i,i...->...", a, s[rows]), stacked)
+        return self.plan().aggregate(payloads, done)

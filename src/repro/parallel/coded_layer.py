@@ -15,11 +15,13 @@ Execution modes:
     and computes its product locally; decode happens after an
     all-gather of the n partial results (k x k solve, negligible).
 
-All hot methods route through a ``repro.runtime.CodedExecutor``: the
-sparse backends (``packed`` / ``pallas`` / ``pallas-interpret``) run
-only the fastest-k workers' nonzero tiles and decode against a cached
-per-pattern inverse; traced callers (jit/grad/shard_map) and the
-``reference`` backend keep the original dense einsum + solve numerics.
+All hot methods route through a compiled ``repro.api.CodedPlan`` (built
+once by ``build`` via ``compile_plan``): the sparse backends (``packed``
+/ ``pallas`` / ``pallas-interpret``) run only the fastest-k workers'
+nonzero tiles and decode against a cached per-pattern inverse; traced
+callers (jit/grad/shard_map) and the ``reference`` backend keep the
+original dense einsum + solve numerics.  ``backend=None``/"auto" picks
+the backend from the weight's measured block density.
 
 Storage/computation overhead vs an uncoded TP layer is omega/k_A (the
 paper's whole point: omega ~= s+1 << k_A), while tolerating any s
@@ -32,13 +34,11 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.assignment import MVScheme, proposed_mv
-from ..core.coded_matmul import split_block_columns
-from ..core.decoding import system_matrix
-from ..core.encoding import mv_encoding_matrix
+from ..core.assignment import MVScheme
 from ..core.stability import find_good_coefficients
-from ..runtime import CodedExecutor, encode_blocks, resolve_backend, support_tables
+from ..runtime import CodedExecutor
 
 
 @dataclass
@@ -50,33 +50,60 @@ class CodedLinear:
     backend: str | None = None
     _executor: CodedExecutor | None = field(
         default=None, repr=False, compare=False)
+    _plan: object | None = field(default=None, repr=False, compare=False)
 
     @staticmethod
     def build(w: jnp.ndarray, n_workers: int, stragglers: int,
               seed: int | None = None, stability_trials: int = 0,
-              backend: str | None = None) -> "CodedLinear":
-        """Encode a (d_in, d_out) weight for n workers / s stragglers."""
+              backend: str | None = None,
+              scheme: str = "proposed") -> "CodedLinear":
+        """Encode a (d_in, d_out) weight for n workers / s stragglers.
+
+        Routes through ``repro.api.compile_plan``: ``scheme`` is any
+        registered mv scheme name and ``backend=None``/"auto" picks
+        packed/reference from the weight's measured block density.
+        """
+        from ..api.plan import compile_plan  # noqa: PLC0415 - layering
+        from ..api.schemes import make_scheme  # noqa: PLC0415
+
         k = n_workers - stragglers
-        scheme = proposed_mv(n_workers, k)
+        sch = make_scheme(scheme, n=n_workers, k_A=k)
         if seed is None:
             if stability_trials > 0:
                 seed = find_good_coefficients(
-                    scheme, trials=stability_trials, max_patterns=64).best_seed
+                    sch, trials=stability_trials, max_patterns=64).best_seed
             else:
                 seed = 0
-        R = mv_encoding_matrix(scheme, seed)
-        blocks = split_block_columns(w, k)          # (k, d_in, c)
-        if resolve_backend(backend) == "reference":
-            coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R, w.dtype), blocks)
-        else:
-            sup, coef = support_tables(scheme.supports, R)
-            coded = encode_blocks(blocks, sup, coef, backend).astype(w.dtype)
-        return CodedLinear(scheme=scheme, coded=coded,
-                           G=jnp.asarray(system_matrix(scheme, seed),
-                                         jnp.float32),
-                           d_out=w.shape[1], backend=backend)
+        plan = compile_plan(w, scheme=sch, seed=seed, backend=backend)
+        # compile_plan keeps the shards in w.dtype (_match_dtype)
+        layer = CodedLinear(scheme=sch, coded=plan.executor.coded,
+                            G=plan.executor.G, d_out=w.shape[1],
+                            backend=plan.backend)
+        if not isinstance(layer.coded, jax.core.Tracer):
+            layer._executor, layer._plan = plan.executor, plan
+        return layer
 
     # ------------------------------------------------------------------
+
+    def plan(self):
+        """The compiled ``CodedPlan`` backing this layer."""
+        from ..api.plan import CodedPlan  # noqa: PLC0415 - layering
+
+        if isinstance(self.coded, jax.core.Tracer):
+            # built inside a trace: throwaway plan, never cached; G may
+            # itself be traced here -- the reference executor never
+            # consults the plan-level G, so pass it through untouched
+            return CodedPlan(scheme=self.scheme, kind="mv",
+                             backend="reference", seed=0,
+                             G=self.G, r=self.d_out,
+                             executor=self.executor())
+        if self._plan is None:
+            self._plan = CodedPlan(
+                scheme=self.scheme, kind="mv",
+                backend=self.executor().backend, seed=0,
+                G=np.asarray(self.G), r=self.d_out,
+                executor=self.executor())
+        return self._plan
 
     def executor(self) -> CodedExecutor:
         if isinstance(self.coded, jax.core.Tracer):
@@ -99,8 +126,13 @@ class CodedLinear:
         return jnp.einsum("ntc,...t->n...c", self.coded, x)
 
     def decode(self, y: jnp.ndarray, done: jnp.ndarray | None) -> jnp.ndarray:
-        """y (n, ..., c) worker results -> (..., d_out)."""
-        return self.executor().decode(y, done)
+        """y (n_tasks, ..., c) worker results -> (..., d_out).
+
+        ``done`` is worker-level; Delta-partition schemes (scs36 /
+        class29 run ``tasks_per_worker`` tasks each) expand it to task
+        rows via the plan.
+        """
+        return self.executor().decode(y, self.plan()._task_done(done))
 
     def apply(self, x: jnp.ndarray, done: jnp.ndarray | None = None
               ) -> jnp.ndarray:
@@ -109,7 +141,7 @@ class CodedLinear:
         if ex.backend == "reference" or isinstance(x, jax.core.Tracer):
             return self.decode(self.worker_compute(x), done)
         lead = x.shape[:-1]
-        out = ex.matvec(x.reshape(-1, x.shape[-1]), done)
+        out = self.plan().matvec(x.reshape(-1, x.shape[-1]), done)
         return out.reshape(lead + (self.d_out,)).astype(x.dtype)
 
     # ------------------------------------------------------------------

@@ -29,6 +29,7 @@ from .executor import (  # noqa: F401
     ENV_BACKEND,
     CodedExecutor,
     encode_blocks,
+    is_concrete,
     resolve_backend,
     support_tables,
 )

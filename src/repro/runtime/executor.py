@@ -53,11 +53,17 @@ _KERNEL_BACKENDS = ("pallas", "pallas-interpret")
 
 
 def resolve_backend(backend: str | None = None) -> str:
-    """Env override > explicit argument > platform default."""
+    """Env override > explicit argument > platform default.
+
+    ``"auto"`` (and None) resolve to the platform default here; the
+    density-aware auto pick lives in ``repro.api.backends.choose_backend``
+    -- plan compilation resolves "auto" *before* reaching this layer, so
+    an "auto" that arrives here simply means "no operand to measure".
+    """
     env = os.environ.get(ENV_BACKEND)
-    if env:
-        backend = env
-    if backend is None:
+    if env and env != "auto":
+        backend = env       # a concrete env backend forces every call site
+    if backend is None or backend == "auto":
         backend = ("pallas" if jax.devices()[0].platform == "tpu"
                    else "reference")
     if backend not in BACKENDS:
@@ -66,9 +72,18 @@ def resolve_backend(backend: str | None = None) -> str:
     return backend
 
 
-def _is_concrete(*vals) -> bool:
+def is_concrete(*vals) -> bool:
+    """True when no argument is a JAX tracer (None entries ignored).
+
+    The sparse backends need concrete inputs (host-side packing, decode
+    cache); every layer above uses this single check to decide between
+    the fast path and the traceable reference fallback.
+    """
     return not any(isinstance(v, jax.core.Tracer)
                    for v in vals if v is not None)
+
+
+_is_concrete = is_concrete
 
 
 def _pick_block(size: int, pref: int) -> int:

@@ -9,11 +9,14 @@ budget.  With ``coded`` enabled, the final logits matmul runs through
 real edge deployment the mask comes from worker heartbeats) -- the
 response is bit-identical regardless of which <= s workers are lost.
 
-The coded head executes on the ``repro.runtime`` executor: per-step
-masks hit the decode-plan cache (the same straggler pattern never pays
-for a second solve) and, on a sparse backend, only the fastest-k
-workers' nonzero tiles are multiplied.  ``CodedConfig.backend`` or the
-``REPRO_CODED_BACKEND`` env var selects the backend.
+The coded head is a precompiled ``repro.api.CodedPlan`` (scheme +
+encoding + packed shards + backend, compiled once at engine build):
+per-step masks hit the plan's LRU decode cache (the same straggler
+pattern never pays for a second solve) and, on a sparse backend, only
+the fastest-k workers' nonzero tiles are multiplied.
+``CodedConfig.scheme`` picks any registered mv scheme;
+``CodedConfig.backend`` (default "auto": density + platform pick) or
+the ``REPRO_CODED_BACKEND`` env var selects the backend.
 """
 
 from __future__ import annotations
@@ -24,9 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.plan import compile_plan
 from ..configs.base import CodedConfig, ModelConfig
 from ..core.straggler import ShiftedExponential
-from ..parallel.coded_layer import CodedLinear
 
 
 @dataclass
@@ -49,11 +52,22 @@ class ServeEngine:
         self.rng = np.random.default_rng(rng_seed)
         self.coded = None
         if coded is not None and coded.enabled:
+            from ..api.schemes import scheme_info, scheme_names  # noqa: PLC0415
+
+            if not scheme_info(coded.scheme, "mv").straggler_resilient:
+                # the engine samples a fresh random straggler set per
+                # step; a non-resilient scheme would silently emit
+                # inf/nan logits on an undecodable pattern
+                raise ValueError(
+                    f"scheme {coded.scheme!r} is not resilient to "
+                    f"arbitrary straggler patterns; pick one of "
+                    f"{scheme_names('mv', resilient_only=True)}")
             head = (params["embed"].T if cfg.tie_embeddings
                     else params["head"])
-            self.coded = CodedLinear.build(
-                jnp.asarray(head), coded.n_workers, coded.stragglers,
-                seed=coded.seed, backend=coded.backend)
+            self.coded = compile_plan(
+                jnp.asarray(head), scheme=coded.scheme,
+                n=coded.n_workers, s=coded.stragglers,
+                seed=coded.seed, backend=coded.backend or "auto")
             self.s = coded.stragglers
         self._prefill = jax.jit(
             lambda p, toks: model.prefill(p, toks, max_len=self.max_len))
@@ -133,4 +147,4 @@ class ServeEngine:
         if self.coded is None:
             raise ValueError("engine built without coded config")
         mask = done if done is not None else self._straggler_mask()
-        return self.coded.apply(hidden, mask)
+        return self.coded.matvec(hidden, mask).astype(hidden.dtype)

@@ -162,7 +162,10 @@ class TestNoRepeatedSolves:
                                    rtol=0, atol=0)
         assert inv_calls["n"] == 1
         ex = op.executor()
-        assert (ex.cache.hits, ex.cache.misses) == (5, 1)
+        # misses == 2: plan compilation pre-warms the all-alive pattern
+        # (one upfront inversion), the straggler mask costs the second;
+        # every repeat under the same mask is a pure cache hit.
+        assert (ex.cache.hits, ex.cache.misses) == (5, 2)
 
 
 # ---------------------------------------------------------------------------
