@@ -17,6 +17,13 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
                      also writes machine-readable BENCH_runtime.json
   plan            -- compile-once (repro.api.compile_plan) vs per-call
                      construction amortization -> BENCH_plan.json
+  cluster         -- the paper's experiment shape over the REAL cluster
+                     runtime (repro.cluster): plans shipped to threaded
+                     workers, shifted-exponential latency injection,
+                     decode at the fastest-k task set; wall-clock +
+                     decode-latency percentiles per scheme and a
+                     partial-straggler exact-parity check
+                     -> BENCH_cluster.json
 
 Default sizes are scaled from the paper's AWS experiment (20000x15000 /
 20000x12000) by --scale (default 0.25) to keep CPU runtime in minutes;
@@ -438,6 +445,127 @@ def plan_amortization(scale: float, seed: int = 5, reps: int = 30,
 
 
 # ---------------------------------------------------------------------------
+# Cluster runtime: real dispatched jobs under injected stragglers
+# (framework bench, tracked via BENCH_cluster.json)
+# ---------------------------------------------------------------------------
+
+
+def cluster_bench(scale: float, rounds: int = 30, seed: int = 7,
+                  json_path: str = "BENCH_cluster.json"):
+    """The paper's AWS experiment shape, actually executed.
+
+    Each scheme's plan is compiled once, sharded to threaded workers
+    (``repro.cluster``), and raced ``rounds`` times under seeded
+    shifted-exponential latency injection whose delays scale with each
+    worker's nnz-proportional work.  Wall-clock is the k-th completion
+    plus decode -- measured, not simulated.  Sparsity-preserving
+    schemes (low omega -> few nonzero tiles -> small injected delay +
+    small compute) beat the dense baseline; the JSON records the
+    ordering plus a partial-straggler parity check (a host serving
+    several virtual workers contributes a strict subset of its task
+    rows, decoded bitwise-identically to the in-process plan).
+    """
+    import json as _json  # noqa: PLC0415
+
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.api import compile_plan  # noqa: PLC0415
+    from repro.cluster import StragglerFaults  # noqa: PLC0415
+
+    n, k, b = 12, 9, 8
+    t = max(int(4096 * scale) // 128 * 128, 256)
+    r = max(int(4608 * scale) // (k * 8) * (k * 8), k * 8)
+    zeros = 0.98
+    time_scale = 0.15          # seconds per normalized work unit
+    rng = np.random.default_rng(seed)
+    mask = rng.random((t // 8, r // 8)) >= zeros
+    A = jnp.asarray((rng.standard_normal((t, r)) *
+                     np.kron(mask, np.ones((8, 8)))).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+    ref = np.asarray(x @ A)
+
+    results = {}
+    for name in ("proposed", "cyclic31", "poly", "repetition"):
+        plan = compile_plan(A, scheme=name, n=n, s=n - k, backend="packed")
+        tiles = plan.worker_tile_counts()
+        with plan.to_cluster(
+                faults=StragglerFaults(time_scale=time_scale,
+                                       seed=seed)) as cl:
+            out = cl.matvec(x)                      # warm workers + cache
+            walls, decs, ndone = [], [], []
+            for _ in range(rounds):
+                out = cl.matvec(x)
+                rep = cl.last_report
+                walls.append(rep.wall_s)
+                decs.append(rep.decode_s)
+                ndone.append(rep.n_done)
+        err = float(np.abs(np.asarray(out) - ref).max())
+        walls, decs = np.asarray(walls), np.asarray(decs)
+        row = {
+            "scheme": name, "rounds": rounds,
+            "wall_p50_s": float(np.percentile(walls, 50)),
+            "wall_p99_s": float(np.percentile(walls, 99)),
+            "decode_p50_us": float(np.percentile(decs, 50) * 1e6),
+            "decode_p99_us": float(np.percentile(decs, 99) * 1e6),
+            "mean_tasks_decoded": float(np.mean(ndone)),
+            "max_worker_tiles": int(tiles.max()),
+            "weight": plan.scheme.weight(),
+            "max_abs_err_vs_direct": err,
+        }
+        results[name] = row
+        emit(f"cluster/{name}", row["wall_p50_s"] * 1e6,
+             f"p99_s={row['wall_p99_s']:.4f};tiles={int(tiles.max())};"
+             f"decoded_from={row['mean_tasks_decoded']:.1f}")
+
+    ordering = {
+        "proposed_speedup_vs_poly":
+            results["poly"]["wall_p50_s"] / results["proposed"]["wall_p50_s"],
+        "cyclic31_speedup_vs_poly":
+            results["poly"]["wall_p50_s"] / results["cyclic31"]["wall_p50_s"],
+    }
+    ordering["sparse_beats_dense"] = bool(
+        ordering["proposed_speedup_vs_poly"] > 1.0
+        and ordering["cyclic31_speedup_vs_poly"] > 1.0)
+    emit("cluster/ordering", 0.0,
+         f"proposed_vs_poly={ordering['proposed_speedup_vs_poly']:.2f}x;"
+         f"cyclic31_vs_poly={ordering['cyclic31_speedup_vs_poly']:.2f}x")
+
+    # partial-straggler parity: 4 physical hosts serve the 12 virtual
+    # workers; host 0 (virtual rows 0, 4, 8) finishes only row 0 --
+    # a strict subset -- and the dispatcher's decode must be bitwise
+    # the in-process packed plan's under the same pattern
+    plan = compile_plan(A, scheme="proposed", n=n, s=n - k, backend="packed")
+    done = np.ones(n, bool)
+    done[[4, 8]] = False
+    with plan.to_cluster(4) as cl:
+        got = np.asarray(cl.matvec(x, done))
+        rep = cl.last_report
+    want = np.asarray(plan.matvec(x, jnp.asarray(done)))
+    partial = {
+        "n_workers": 4, "pattern": done.astype(int).tolist(),
+        "partial_workers": list(rep.partial_workers),
+        "max_abs_err_vs_plan": float(np.abs(got - want).max()),
+    }
+    emit("cluster/partial_parity", 0.0,
+         f"err={partial['max_abs_err_vs_plan']:.1e};"
+         f"partial_workers={partial['partial_workers']}")
+
+    payload = {
+        "bench": "cluster",
+        "config": {"n": n, "k": k, "t": t, "r": r, "batch": b,
+                   "zeros": zeros, "rounds": rounds, "seed": seed,
+                   "time_scale_s": time_scale, "backend": "packed",
+                   "worker_backend": "thread"},
+        "results": list(results.values()),
+        "ordering": ordering,
+        "partial_parity": partial,
+    }
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("cluster/json", 0.0, f"wrote={json_path}")
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -447,6 +575,8 @@ def main() -> None:
     ap.add_argument("--patterns", type=int, default=200)
     ap.add_argument("--trials", type=int, default=10)
     ap.add_argument("--only", default=None)
+    ap.add_argument("--cluster-rounds", type=int, default=30,
+                    help="dispatched rounds per scheme in the cluster bench")
     args = ap.parse_args()
 
     benches = {
@@ -458,6 +588,8 @@ def main() -> None:
         "decode": lambda: decode_overhead(args.scale),
         "runtime": lambda: runtime_backends(args.scale),
         "plan": lambda: plan_amortization(args.scale),
+        "cluster": lambda: cluster_bench(args.scale,
+                                         rounds=args.cluster_rounds),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

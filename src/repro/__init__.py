@@ -20,7 +20,9 @@ _API = (
     "scheme_info", "scheme_names",
 )
 
-__all__ = list(_API)
+_CLUSTER = ("ClusterPlan", "ClusterReport", "dumps_plan", "loads_plan")
+
+__all__ = list(_API + _CLUSTER)
 
 
 def __getattr__(name: str):
@@ -28,6 +30,10 @@ def __getattr__(name: str):
         from . import api
 
         return getattr(api, name)
+    if name in _CLUSTER:
+        from . import cluster
+
+        return getattr(cluster, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

@@ -85,6 +85,10 @@ class CodedPlan:
     _sup_b: np.ndarray | None = field(default=None, repr=False)
     _coef_b: np.ndarray | None = field(default=None, repr=False)
     _agg_cache: DecodeCache | None = field(default=None, repr=False)
+    # operand reference kept for online re-tuning (``retune``); a jax
+    # array reference, not a copy -- the caller's weights stay the
+    # single allocation
+    _A: object | None = field(default=None, repr=False)
 
     # -- introspection ----------------------------------------------------
 
@@ -130,11 +134,14 @@ class CodedPlan:
 
     def _task_done(self, done):
         """Worker-level done mask -> task-row mask (Delta-partition
-        baselines run ``tasks_per_worker`` tasks per worker)."""
+        baselines run ``tasks_per_worker`` tasks per worker).  A mask
+        already at task granularity (length ``n_tasks``) passes through
+        -- that is how partial stragglers are expressed: a slow worker
+        whose mask covers only SOME of its task rows."""
         if done is None:
             return None
         per = self.tasks_per_worker
-        if per == 1:
+        if per == 1 or np.shape(done)[0] == self.n_tasks:
             return done
         if _is_concrete(done):
             return np.repeat(np.asarray(done, bool), per)
@@ -213,6 +220,50 @@ class CodedPlan:
         return jax.tree.map(
             lambda st: jnp.einsum("i,i...->...", a, st[rows]), stacked)
 
+    # -- distribution ------------------------------------------------------
+
+    def to_cluster(self, n_workers: int | None = None, *,
+                   backend: str = "thread", faults=None,
+                   deadline: float | None = None):
+        """Serve this plan from real workers (``repro.cluster``).
+
+        Returns a ``ClusterPlan`` with the same ``matvec / matmat /
+        aggregate`` signatures; per-worker ``PlanShard``s are shipped
+        once at construction and every call dispatches tasks, collects
+        results asynchronously and decodes at the fastest-k task set.
+        ``n_workers`` < n hosts several virtual workers per physical
+        one (the partial-straggler setting).  Shut the cluster down
+        (``with`` block or ``.shutdown()``) when done.
+        """
+        from ..cluster import ClusterPlan  # noqa: PLC0415 - optional layer
+
+        return ClusterPlan(self, n_workers, backend=backend, faults=faults,
+                           deadline=deadline)
+
+    # -- online re-tuning --------------------------------------------------
+
+    def retune(self, A=None, *, crossover: float | None = None) -> str:
+        """Re-measure sparsity and re-pick the backend (ROADMAP item).
+
+        Training-time pruning (or densification) drifts the operand
+        across the packed/reference crossover; ``retune`` re-runs the
+        density pick on the current operand and recompiles the
+        encoded/packed state when either the backend choice or the
+        operand itself changed.  ``A=None`` re-measures the operand the
+        plan was compiled with (cheap no-op when nothing moved).
+        Returns the (possibly updated) backend name.
+        """
+        A = A if A is not None else self._A
+        if A is None:
+            raise ValueError("plan holds no operand; pass A= to retune")
+        if not _is_concrete(A):
+            raise ValueError("retune needs a concrete operand")
+        new = choose_backend(A, "auto", crossover=crossover)
+        if new != self.backend or A is not self._A:
+            self.backend = new
+            _attach_operand(self, A, new)
+        return self.backend
+
     # -- cache management --------------------------------------------------
 
     def prewarm(self, done=None) -> "CodedPlan":
@@ -255,38 +306,51 @@ def compile_plan(A=None, *, scheme="proposed", n=None, s=None,
                      G=G, cache_size=cache_size)
 
     if A is not None:
-        if A.ndim != 2:
-            raise ValueError(f"operand must be 2-D (t, r), got {A.shape}")
-        if kind == "mv":
-            R = mv_encoding_matrix(sch, seed)
-            blocks = split_block_columns(A, sch.k_A)
-            if resolved == "reference":
-                coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R, A.dtype),
-                                   blocks)
-            else:
-                sup, coef = support_tables(sch.supports, R)
-                coded = encode_blocks(blocks, sup, coef, resolved)
-            coded = _match_dtype(coded, A)
-            plan.executor = CodedExecutor(
-                coded, jnp.asarray(G, jnp.float32), sch.k_A, A.shape[1],
-                backend=resolved, cache_size=cache_size)
-        else:
-            ra, rb = mm_encoding_matrices(sch, seed)
-            blocks_a = split_block_columns(A, sch.k_A)
-            if resolved == "reference":
-                coded_a = jnp.einsum("nk,ktc->ntc", jnp.asarray(ra, A.dtype),
-                                     blocks_a)
-            else:
-                sup_a, coef_a = support_tables(sch.supports_A, ra)
-                coded_a = encode_blocks(blocks_a, sup_a, coef_a, resolved)
-                plan._sup_b, plan._coef_b = support_tables(sch.supports_B, rb)
-            plan._rb = rb
-            plan.executor = CodedExecutor(
-                _match_dtype(coded_a, A), jnp.asarray(G, jnp.float32),
-                sch.k, A.shape[1], backend=resolved, cache_size=cache_size)
-        plan.r = A.shape[1]
-        if _is_concrete(A):
-            plan.prewarm()
+        _attach_operand(plan, A, resolved)
     elif kind == "mv":
         plan.prewarm()      # aggregation-only: warm the all-alive pattern
     return plan
+
+
+def _attach_operand(plan: CodedPlan, A, resolved: str) -> None:
+    """(Re)build the per-operand state: encode, pack, prewarm.
+
+    Shared by initial compilation and ``plan.retune`` -- re-tuning is
+    literally re-running this attachment against the drifted operand.
+    """
+    if A.ndim != 2:
+        raise ValueError(f"operand must be 2-D (t, r), got {A.shape}")
+    sch, G, seed = plan.scheme, plan.G, plan.seed
+    cache_size = plan.cache_size
+    if plan.kind == "mv":
+        R = mv_encoding_matrix(sch, seed)
+        blocks = split_block_columns(A, sch.k_A)
+        if resolved == "reference":
+            coded = jnp.einsum("nk,ktc->ntc", jnp.asarray(R, A.dtype),
+                               blocks)
+        else:
+            sup, coef = support_tables(sch.supports, R)
+            coded = encode_blocks(blocks, sup, coef, resolved)
+        coded = _match_dtype(coded, A)
+        plan.executor = CodedExecutor(
+            coded, jnp.asarray(G, jnp.float32), sch.k_A, A.shape[1],
+            backend=resolved, cache_size=cache_size)
+    else:
+        ra, rb = mm_encoding_matrices(sch, seed)
+        blocks_a = split_block_columns(A, sch.k_A)
+        if resolved == "reference":
+            coded_a = jnp.einsum("nk,ktc->ntc", jnp.asarray(ra, A.dtype),
+                                 blocks_a)
+            plan._sup_b = plan._coef_b = None
+        else:
+            sup_a, coef_a = support_tables(sch.supports_A, ra)
+            coded_a = encode_blocks(blocks_a, sup_a, coef_a, resolved)
+            plan._sup_b, plan._coef_b = support_tables(sch.supports_B, rb)
+        plan._rb = rb
+        plan.executor = CodedExecutor(
+            _match_dtype(coded_a, A), jnp.asarray(G, jnp.float32),
+            sch.k, A.shape[1], backend=resolved, cache_size=cache_size)
+    plan.r = A.shape[1]
+    if _is_concrete(A):
+        plan._A = A
+        plan.prewarm()

@@ -1,0 +1,41 @@
+"""Cluster runtime: ship compiled plans to workers, measure real
+straggler mitigation.
+
+The simulator (`repro.core.straggler`) predicts coded-job wall-clock;
+this package *produces* it.  ``compile_plan(...).to_cluster()`` turns a
+precompiled ``CodedPlan`` into a ``ClusterPlan`` with the same
+``matvec / matmat / aggregate`` surface, backed by real workers:
+
+  * ``wire``       -- versioned plan / shard / task / result serialization
+    (dtype-faithful, pickle-free);
+  * ``worker``     -- thread- and subprocess-backed workers that hold BSR
+    shards and serve tasks at nnz-proportional cost;
+  * ``dispatcher`` -- the async edge-server loop: broadcast, collect as
+    results arrive, decode at the fastest-k task set, partial-straggler
+    credit, deadlines, fail-stop requeue;
+  * ``faults``     -- reproducible latency / death injection reusing the
+    ``core.straggler`` models, so a threaded run on one machine behaves
+    like the paper's straggly AWS fleet.
+
+``python benchmarks/run.py --only cluster`` runs the paper-shaped
+experiment over this stack and writes ``BENCH_cluster.json``.
+"""
+
+from .dispatcher import ClusterPlan, ClusterReport  # noqa: F401
+from .faults import (  # noqa: F401
+    FailStop,
+    NoFaults,
+    StragglerFaults,
+    WorkerFailure,
+    adversarial_faults,
+    straggler_mask,
+)
+from .wire import (  # noqa: F401
+    PlanShard,
+    Task,
+    TaskResult,
+    dumps_plan,
+    loads_plan,
+    shard_plan,
+)
+from .worker import WORKER_BACKENDS, ProcessWorker, ThreadWorker  # noqa: F401

@@ -1,0 +1,503 @@
+"""Async edge-server dispatcher: broadcast, collect, decode-at-k.
+
+``ClusterPlan`` is the distributed twin of an in-process ``CodedPlan``:
+same ``matvec / matmat / aggregate`` signatures, but each call actually
+ships work to workers and the done pattern is *observed*, not given.
+The coordinator is an asyncio event loop per call:
+
+  * tasks go out to every (live) worker owning a target row;
+  * results stream back on a shared queue; after each arrival the
+    dispatcher re-checks decodability and decodes **as soon as any
+    fastest-k task set completes** -- stragglers' leftovers are
+    cancelled, not awaited (this is where coded computation beats
+    wait-for-all);
+  * **partial-straggler credit**: completions are per *task row*, so a
+    slow host serving several virtual workers contributes the rows it
+    finished (Sec. IV-B's partial stragglers) -- the decode pattern can
+    include a strict subset of a worker's rows;
+  * deadlines bound each call; worker death (fail-stop) triggers
+    requeue: the dead host's shard is re-shipped to a live host and its
+    outstanding rows resubmitted;
+  * decode reuses the plan's LRU cache keyed on the observed pattern --
+    a recurring pattern never pays a second k x k solve -- with a
+    greedy independent-row fallback for patterns whose first-k rows are
+    singular (repetition codes).
+
+Passing an explicit ``done=`` mask switches a call to parity mode: only
+those rows are dispatched and the decode uses exactly that pattern, so
+the result is bitwise the in-process packed backend's (the acceptance
+check for the whole wire/worker/dispatcher stack).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .wire import Task, plan_packed, shard_plan
+from .worker import WORKER_BACKENDS
+
+_POLL_S = 0.02          # result-queue poll slice inside the event loop
+
+
+@dataclass
+class ClusterReport:
+    """What one dispatched call observed (the bench's raw material)."""
+
+    op: str
+    round: int
+    wall_s: float = 0.0        # dispatch -> k-th completion + decode
+    decode_s: float = 0.0
+    n_tasks: int = 0
+    n_dispatched: int = 0
+    n_done: int = 0
+    pattern: np.ndarray | None = None       # observed task-done mask
+    rows: np.ndarray | None = None          # rows actually decoded from
+    deaths: int = 0
+    requeues: int = 0
+    deadline_hit: bool = False
+    completed_per_worker: dict = field(default_factory=dict)
+    partial_workers: tuple[int, ...] = ()   # hosts with 0 < done < owned
+    worker_work: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "op": self.op, "round": self.round, "wall_s": self.wall_s,
+            "decode_s": self.decode_s, "n_tasks": self.n_tasks,
+            "n_dispatched": self.n_dispatched, "n_done": self.n_done,
+            "deaths": self.deaths, "requeues": self.requeues,
+            "deadline_hit": self.deadline_hit,
+            "partial_workers": list(self.partial_workers),
+        }
+
+
+def _independent_rows(G: np.ndarray, done_rows, k: int):
+    """Greedy full-rank row pick in completion order, for patterns whose
+    first-k rows are singular (non-MDS baselines like repetition)."""
+    sel: list[int] = []
+    for r in done_rows:
+        trial = sel + [int(r)]
+        if np.linalg.matrix_rank(G[trial]) == len(trial):
+            sel = trial
+            if len(sel) == k:
+                return np.asarray(sel)
+    return None
+
+
+class ClusterPlan:
+    """A compiled plan served by real workers (see module docstring).
+
+    Build via ``CodedPlan.to_cluster(...)`` or from shipped bytes via
+    ``ClusterPlan.from_bytes(...)``.  Use as a context manager or call
+    ``shutdown()`` -- worker threads/processes are real resources.
+    """
+
+    def __init__(self, plan, n_workers: int | None = None, *,
+                 backend: str = "thread", faults=None,
+                 deadline: float | None = None):
+        if backend not in WORKER_BACKENDS:
+            raise ValueError(f"worker backend must be one of "
+                             f"{sorted(WORKER_BACKENDS)}, got {backend!r}")
+        self.plan = plan
+        self.worker_backend = backend
+        self.deadline = deadline
+        self.n_tasks = plan.n_tasks
+        self.k = plan.k
+        self.packed = plan_packed(plan)
+        shards = shard_plan(plan, n_workers, packed=self.packed)
+        self.n_workers = len(shards)
+        self._shard_bytes = [s.encode() for s in shards]
+        self._owner = {row: s.worker for s in shards for row in s.task_rows}
+        self._home = dict(self._owner)          # original assignment
+        self._work = {row: s.work[j] for s in shards
+                      for j, row in enumerate(s.task_rows)}
+        self._results: queue.Queue = queue.Queue()
+        cls = WORKER_BACKENDS[backend]
+        self._workers = [cls(s.worker, self._results, faults=faults)
+                         for s in shards]
+        for w, blob in zip(self._workers, self._shard_bytes):
+            w.send_shard(blob)
+        # which shard blobs each host currently holds: a host that
+        # inherited a dead peer's shard holds two, and its own heir
+        # must receive BOTH when it dies in turn
+        self._held: dict[int, set[int]] = {w: {w}
+                                           for w in range(self.n_workers)}
+        self._dead: set[int] = set()
+        self._round = 0
+        self.reports: deque[ClusterReport] = deque(maxlen=512)
+        self._closed = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @classmethod
+    def from_bytes(cls, data: bytes, **kw) -> "ClusterPlan":
+        from .wire import loads_plan  # noqa: PLC0415
+
+        return cls(loads_plan(data), **kw)
+
+    def shutdown(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for w in self._workers:
+            try:
+                w.stop()
+            except Exception:  # pragma: no cover - teardown best-effort
+                pass
+
+    def __enter__(self) -> "ClusterPlan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def __del__(self):  # pragma: no cover - gc-time safety net
+        try:
+            self.shutdown()
+        except Exception:
+            pass
+
+    @property
+    def last_report(self) -> ClusterReport | None:
+        return self.reports[-1] if self.reports else None
+
+    # -- helpers -----------------------------------------------------------
+
+    def _task_mask(self, done) -> np.ndarray | None:
+        if done is None:
+            return None
+        mask = np.asarray(self.plan._task_done(np.asarray(done, bool)), bool)
+        if mask.shape[0] != self.n_tasks:
+            raise ValueError(f"done mask covers {mask.shape[0]} tasks, "
+                             f"plan has {self.n_tasks}")
+        return mask
+
+    def _live(self) -> list[int]:
+        return [w for w in range(self.n_workers)
+                if w not in self._dead and self._workers[w].alive]
+
+    def _submit(self, row: int, task: Task, inflight: dict) -> None:
+        self._workers[self._owner[row]].submit(task)
+        inflight[row] = self._owner[row]
+
+    def _requeue(self, dead_worker: int, inflight: dict, missing,
+                 make_task) -> int:
+        """Re-home a dead worker's rows; resubmit its outstanding ones."""
+        self._dead.add(dead_worker)
+        live = self._live()
+        if not live:
+            raise RuntimeError("all cluster workers are dead")
+        # least-loaded live host inherits (by currently-owned row count)
+        owned = {w: sum(1 for o in self._owner.values() if o == w)
+                 for w in live}
+        heir = min(live, key=lambda w: (owned[w], w))
+        # re-ship every shard the dead host held -- its own AND any it
+        # previously inherited (a second death must not strand those)
+        for idx in self._held.pop(dead_worker, {dead_worker}):
+            self._workers[heir].send_shard(self._shard_bytes[idx])
+            self._held[heir].add(idx)
+        moved = 0
+        for row, owner in list(self._owner.items()):
+            if owner == dead_worker:
+                self._owner[row] = heir
+        for row in missing:
+            row = int(row)          # json-safe task ids on the wire
+            if inflight.get(row) == dead_worker:
+                self._submit(row, make_task(row), inflight)
+                moved += 1
+        return moved
+
+    # -- the collection loop ----------------------------------------------
+
+    async def _collect(self, round_id: int, target: np.ndarray,
+                       inflight: dict, make_task, wait_all: bool,
+                       deadline: float | None, report: ClusterReport):
+        """Gather results until decodable (race) or all-target (parity)."""
+        loop = asyncio.get_running_loop()
+        t_end = None if deadline is None else time.perf_counter() + deadline
+        results: dict[int, dict] = {}
+        order: list[int] = []            # completion order of task rows
+        cache = self.plan._decode_cache()
+        G = np.asarray(cache._G)
+
+        def decodable():
+            if len(results) < self.k:
+                return None
+            if wait_all:
+                if len(results) < int(target.sum()):
+                    return None
+                mask = target
+            else:
+                mask = np.zeros(self.n_tasks, bool)
+                mask[list(results)] = True
+            try:
+                dplan = cache.plan(mask)
+                return mask, dplan.rows, dplan.hinv
+            except (ValueError, np.linalg.LinAlgError):
+                rows = _independent_rows(G, order, self.k)
+                if rows is None:
+                    return None
+                hinv = np.linalg.inv(G[rows]).astype(np.float32)
+                return mask, rows, hinv
+
+        def poll(timeout):
+            try:
+                return self._results.get(timeout=timeout)
+            except queue.Empty:
+                return None
+
+        while True:
+            dec = decodable()
+            if dec is not None:
+                break
+            remaining = None if t_end is None else t_end - time.perf_counter()
+            if remaining is not None and remaining <= 0:
+                report.deadline_hit = True
+                if not wait_all:
+                    # accept whatever pattern we have, if it decodes
+                    mask = np.zeros(self.n_tasks, bool)
+                    mask[list(results)] = True
+                    rows = _independent_rows(G, order, self.k)
+                    if rows is not None:
+                        dec = (mask, rows,
+                               np.linalg.inv(G[rows]).astype(np.float32))
+                        break
+                raise TimeoutError(
+                    f"deadline: {len(results)}/{self.k} needed task rows "
+                    f"after {deadline}s")
+            slice_s = _POLL_S if remaining is None \
+                else min(_POLL_S, max(remaining, 1e-4))
+            res = await loop.run_in_executor(None, poll, slice_s)
+            if res is None:
+                continue
+            if res.kind == "death":
+                if res.worker not in self._dead:    # notices are idempotent
+                    report.deaths += 1
+                    missing = [r for r in np.flatnonzero(target)
+                               if r not in results]
+                    report.requeues += self._requeue(
+                        res.worker, inflight, missing, make_task)
+                continue
+            if res.round != round_id:
+                continue                      # stale round, already decoded
+            if not res.ok:
+                raise RuntimeError(f"worker {res.worker} failed task "
+                                   f"{res.task_row}: {res.error}")
+            if res.task_row in results or not target[res.task_row]:
+                continue
+            results[res.task_row] = res.arrays
+            order.append(res.task_row)
+            report.completed_per_worker[res.worker] = \
+                report.completed_per_worker.get(res.worker, 0) + 1
+            report.worker_work[res.worker] = \
+                report.worker_work.get(res.worker, 0.0) + res.work
+
+        mask, rows, hinv = dec
+        report.n_done = len(results)
+        report.pattern = mask.copy() if mask is not target else mask
+        report.rows = np.asarray(rows)
+        return results, rows, hinv
+
+    @staticmethod
+    def _run_coordinator(coro):
+        """``asyncio.run`` the collection loop; when the caller already
+        sits inside an event loop (an async serving host), run it on a
+        helper thread instead of raising."""
+        try:
+            asyncio.get_running_loop()
+        except RuntimeError:
+            return asyncio.run(coro)
+        box: dict = {}
+
+        def runner():
+            try:
+                box["value"] = asyncio.run(coro)
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                box["error"] = e
+
+        t = threading.Thread(target=runner, daemon=True)
+        t.start()
+        t.join()
+        if "error" in box:
+            raise box["error"]
+        return box["value"]
+
+    def _run_round(self, op: str, target: np.ndarray, make_task,
+                   wait_all: bool, deadline: float | None):
+        if self._closed:
+            raise RuntimeError("cluster has been shut down")
+        if int(target.sum()) < self.k:
+            raise ValueError(f"done mask admits {int(target.sum())} task "
+                             f"rows, need at least k={self.k}")
+        self._round += 1
+        round_id = self._round
+        report = ClusterReport(op=op, round=round_id, n_tasks=self.n_tasks,
+                               n_dispatched=int(target.sum()))
+        t0 = time.perf_counter()
+        inflight: dict[int, int] = {}
+        for row in np.flatnonzero(target):
+            owner = self._owner[int(row)]
+            if owner not in self._dead and not self._workers[owner].alive:
+                # owner died between rounds (notice still queued):
+                # re-home before dispatching into a void
+                report.deaths += 1
+                report.requeues += self._requeue(owner, inflight, [],
+                                                 make_task)
+            self._submit(int(row), make_task(int(row)), inflight)
+        results, rows, hinv = self._run_coordinator(self._collect(
+            round_id, target, inflight, make_task, wait_all,
+            self.deadline if deadline is None else deadline, report))
+        if not wait_all:
+            for w in self._live():
+                self._workers[w].cancel(round_id)
+        # partial-straggler accounting: hosts whose decode-time credit is
+        # a strict subset of the task rows they were assigned (Sec. IV-B:
+        # a strong-but-slow device contributes the rows it finished)
+        owned = {}
+        for w in self._home.values():
+            owned[w] = owned.get(w, 0) + 1
+        report.partial_workers = tuple(sorted(
+            w for w, c in owned.items()
+            if 0 < report.completed_per_worker.get(w, 0) < c))
+        report.wall_s = time.perf_counter() - t0
+        self.reports.append(report)
+        return results, rows, hinv, report
+
+    # -- public ops (CodedPlan signatures) ---------------------------------
+
+    def matvec(self, x, done=None, *, deadline: float | None = None):
+        """A^T x served by the cluster; ``done=None`` races the workers
+        (decode at fastest-k), an explicit mask replays that exact
+        pattern (parity mode)."""
+        import jax.numpy as jnp  # noqa: PLC0415
+
+        if self.plan.kind != "mv":
+            raise ValueError(f"matvec needs an mv plan, got {self.plan.kind}")
+        if self.packed is None:
+            raise ValueError("aggregation-only plan: no shards to matvec")
+        x = np.asarray(x, np.float32)
+        squeeze = x.ndim == 1
+        xb = x[None, :] if squeeze else x
+        b = xb.shape[0]
+        packed = self.packed
+        b_op = np.zeros((packed.t_pad, b), np.float32)
+        b_op[: packed.t] = xb.T[: packed.t]
+
+        target = self._target(done)
+        make_task = lambda row: Task(     # noqa: E731
+            round=self._round, op="matvec", task_row=row,
+            payload={"b": b_op}, meta={"b": b})
+        results, rows, hinv, report = self._run_round(
+            "matvec", target, make_task, wait_all=done is not None, deadline=deadline)
+
+        t_dec = time.perf_counter()
+        y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])
+        u = hinv @ y.reshape(self.k, -1)
+        u = u.reshape(self.k, packed.c_pad, b)[:, : packed.c]
+        out = np.moveaxis(u, 2, 0).reshape(b, -1)[:, : self.plan.r]
+        report.decode_s = time.perf_counter() - t_dec
+        report.wall_s += report.decode_s    # wall = k-th completion + decode
+        out = jnp.asarray(out)
+        return out[0] if squeeze else out
+
+    def matmat(self, B, done=None, *, deadline: float | None = None):
+        """A^T B through paired coded operands, workers doing the
+        per-worker products."""
+        import jax.numpy as jnp  # noqa: PLC0415
+
+        from ..core.coded_matmul import split_block_columns  # noqa: PLC0415
+        from ..runtime import encode_blocks  # noqa: PLC0415
+
+        plan = self.plan
+        if plan.kind != "mm":
+            raise ValueError(f"matmat needs an mm plan, got {plan.kind}")
+        sch = plan.scheme
+        w = B.shape[1]
+        blocks_b = split_block_columns(jnp.asarray(B), sch.k_B)
+        if plan._sup_b is not None:
+            coded_b = encode_blocks(blocks_b, plan._sup_b, plan._coef_b,
+                                    "packed")
+        else:
+            coded_b = jnp.einsum(
+                "nk,ktc->ntc", jnp.asarray(plan._rb, jnp.float32), blocks_b)
+        b_np = np.asarray(coded_b, np.float32)
+        cb = b_np.shape[2]
+        packed = self.packed
+
+        def make_task(row: int) -> Task:
+            b_op = np.zeros((packed.t_pad, cb), np.float32)
+            b_op[: packed.t] = b_np[row, : packed.t]
+            return Task(round=self._round, op="matmat", task_row=row,
+                        payload={"b": b_op}, meta={"cb": cb})
+
+        target = self._target(done)
+        results, rows, hinv, report = self._run_round(
+            "matmat", target, make_task, wait_all=done is not None,
+            deadline=deadline)
+
+        t_dec = time.perf_counter()
+        y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])
+        y = y[:, : packed.c]                           # (k, ca, cb)
+        u = hinv @ y.reshape(self.k, -1)
+        u = u.reshape((self.k,) + y.shape[1:])
+        ka, kb = sch.k_A, sch.k_B
+        ca = y.shape[1]
+        out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3)
+        out = out.reshape(ka * ca, kb * cb)[: plan.r, : w]
+        report.decode_s = time.perf_counter() - t_dec
+        report.wall_s += report.decode_s
+        return jnp.asarray(out)
+
+    def aggregate(self, payloads, done=None, *,
+                  deadline: float | None = None):
+        """Straggler-resilient sum of k shard-gradients, collected from
+        real workers (gradient-coding decode: a^T G[rows] = 1^T)."""
+        import jax  # noqa: PLC0415
+        import jax.numpy as jnp  # noqa: PLC0415
+
+        plan = self.plan
+        if plan.kind != "mv":
+            raise ValueError("aggregate needs an mv plan")
+        if len(payloads) != self.n_tasks:
+            raise ValueError(f"need {self.n_tasks} worker payloads, "
+                             f"got {len(payloads)}")
+        leaves0, treedef = jax.tree.flatten(payloads[0])
+        flat = [jax.tree.flatten(p)[0] for p in payloads]
+        sizes = np.asarray([sum(np.asarray(x).size for x in leaves)
+                            for leaves in flat], float)
+        work = sizes / max(sizes.max(), 1.0)
+
+        def make_task(row: int) -> Task:
+            return Task(round=self._round, op="aggregate", task_row=row,
+                        payload={f"leaf{i}": np.asarray(x)
+                                 for i, x in enumerate(flat[row])},
+                        meta={"work": float(work[row])})
+
+        target = self._target(done)
+        results, rows, hinv, report = self._run_round(
+            "aggregate", target, make_task, wait_all=done is not None,
+            deadline=deadline)
+
+        t_dec = time.perf_counter()
+        a = hinv.sum(axis=0)               # a^T G[rows] = 1^T
+        out_leaves = []
+        for i in range(len(leaves0)):
+            acc = None
+            for coef, r in zip(a, rows):
+                term = coef * np.asarray(
+                    results[int(r)][f"leaf{i}"], np.float32)
+                acc = term if acc is None else acc + term
+            out_leaves.append(jnp.asarray(acc))
+        report.decode_s = time.perf_counter() - t_dec
+        report.wall_s += report.decode_s
+        return jax.tree.unflatten(treedef, out_leaves)
+
+    def _target(self, done) -> np.ndarray:
+        mask = self._task_mask(done)
+        return np.ones(self.n_tasks, bool) if mask is None else mask

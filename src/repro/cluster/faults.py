@@ -1,0 +1,202 @@
+"""Pluggable fault / latency injection for real (threaded) cluster runs.
+
+The paper's AWS experiments observe stragglers from heterogeneous t2
+instances and network congestion; ``repro.core.straggler`` models them
+statistically (shifted-exponential, adversarial-slow).  This module
+turns those *simulation* models into *injectors* for the live cluster
+runtime: a worker asks its injector how long the current task should
+take and sleeps the difference, so a threaded run on one machine is
+reproducibly as straggly as the model says -- and the wall-clock the
+dispatcher measures is real, not simulated.
+
+Two properties matter for reproducibility:
+
+  * every worker draws from its **own** seeded stream (``seed ^ worker``),
+    so OS thread scheduling cannot reorder the sample sequence;
+  * delays scale with the task's reported ``work`` (nnz-proportional),
+    which is exactly how sparsity preservation becomes wall-clock gain.
+
+``FailStop`` layers deterministic worker death on top of any latency
+model (the dispatcher's requeue path is tested against it).  All
+injectors round-trip through ``to_spec()`` / ``from_spec()`` (plain
+json-able dicts) so the subprocess worker backend can reconstruct them
+on the far side of a pipe without pickling code objects.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.straggler import AdversarialSlow, ShiftedExponential
+
+
+class WorkerFailure(RuntimeError):
+    """Raised inside a worker loop by a fail-stop injector."""
+
+
+def straggler_mask(n: int, s: int, rng: np.random.Generator,
+                   model=None) -> np.ndarray:
+    """Done mask with the fastest ``n - s`` workers under ``model``.
+
+    The single source of per-step straggler sampling: the serve engine's
+    per-token mask and the cluster bench both route through here, so
+    "which workers straggle" means the same thing in both.
+    """
+    model = model if model is not None else ShiftedExponential()
+    times = model.sample(np.ones(n), rng)
+    done = np.zeros(n, bool)
+    done[np.argsort(times, kind="stable")[: n - s]] = True
+    return done
+
+
+_SPECS: dict[str, type] = {}
+
+
+def _register(cls):
+    _SPECS[cls.__name__] = cls
+    return cls
+
+
+def from_spec(spec: dict | None):
+    """Reconstruct an injector from ``to_spec()`` output (None -> NoFaults)."""
+    if spec is None:
+        return NoFaults()
+    kind = spec.get("kind")
+    if kind not in _SPECS:
+        raise ValueError(f"unknown fault spec kind {kind!r}; "
+                         f"known: {sorted(_SPECS)}")
+    return _SPECS[kind]._from_spec(spec)
+
+
+@_register
+@dataclass
+class NoFaults:
+    """Injector that never delays and never kills."""
+
+    def delay(self, worker: int, task_row: int, work: float) -> float:
+        return 0.0
+
+    def should_fail(self, worker: int, tasks_done: int) -> bool:
+        return False
+
+    def mask(self, n: int, s: int) -> np.ndarray:
+        return np.ones(n, bool)
+
+    def to_spec(self) -> dict:
+        return {"kind": "NoFaults"}
+
+    @classmethod
+    def _from_spec(cls, spec: dict) -> "NoFaults":
+        return cls()
+
+
+@_register
+@dataclass
+class StragglerFaults:
+    """Latency injection from a ``repro.core.straggler`` model.
+
+    ``delay(worker, task, work)`` samples the model's completion time
+    for ``work`` units and scales it by ``time_scale`` seconds/unit.
+    ``shift * work`` models the deterministic compute share and the
+    exponential tail the contention share, so a dense worker (high
+    work) both starts later and tails worse -- the paper's regime.
+
+    Pass ``rng=`` to share a caller-owned stream (the serve engine's
+    step rng); otherwise each worker id gets an independent
+    ``default_rng(seed ^ worker)`` stream so threaded runs replay.
+    """
+
+    model: object = field(default_factory=ShiftedExponential)
+    time_scale: float = 1e-3
+    seed: int = 0
+    rng: np.random.Generator | None = None
+    _streams: dict = field(default_factory=dict, repr=False)
+
+    def _stream(self, worker: int) -> np.random.Generator:
+        if self.rng is not None:
+            return self.rng
+        if worker not in self._streams:
+            self._streams[worker] = np.random.default_rng(
+                (self.seed << 16) ^ (worker + 1))
+        return self._streams[worker]
+
+    def delay(self, worker: int, task_row: int, work: float) -> float:
+        t = self.model.sample(np.asarray([max(work, 1e-9)]),
+                              self._stream(worker))
+        return float(t[0]) * self.time_scale
+
+    def should_fail(self, worker: int, tasks_done: int) -> bool:
+        return False
+
+    def mask(self, n: int, s: int) -> np.ndarray:
+        return straggler_mask(n, s, self._stream(-1), self.model)
+
+    def to_spec(self) -> dict:
+        m = self.model
+        if isinstance(m, ShiftedExponential):
+            ms = {"model": "shifted-exp", "shift": m.shift, "rate": m.rate}
+        elif isinstance(m, AdversarialSlow):
+            ms = {"model": "adversarial", "stragglers": list(m.stragglers),
+                  "slowdown": m.slowdown}
+        else:
+            raise ValueError(f"cannot spec model {type(m).__name__}; use a "
+                             "core.straggler model for process workers")
+        return {"kind": "StragglerFaults", "time_scale": self.time_scale,
+                "seed": self.seed, **ms}
+
+    @classmethod
+    def _from_spec(cls, spec: dict) -> "StragglerFaults":
+        if spec["model"] == "shifted-exp":
+            model = ShiftedExponential(shift=spec["shift"], rate=spec["rate"])
+        else:
+            model = AdversarialSlow(stragglers=tuple(spec["stragglers"]),
+                                    slowdown=spec["slowdown"])
+        return cls(model=model, time_scale=spec["time_scale"],
+                   seed=spec["seed"])
+
+
+def adversarial_faults(stragglers, slowdown: float = 10.0,
+                       time_scale: float = 1e-3, seed: int = 0
+                       ) -> StragglerFaults:
+    """A fixed straggler set, ``slowdown``x slower (deterministic)."""
+    return StragglerFaults(
+        model=AdversarialSlow(stragglers=tuple(stragglers),
+                              slowdown=slowdown),
+        time_scale=time_scale, seed=seed)
+
+
+@_register
+@dataclass
+class FailStop:
+    """Worker death injection: ``fail_after[w]`` = tasks worker ``w``
+    completes before dying (0 = dies on first task).  Latency delegates
+    to ``base`` so death can ride on top of straggly runs."""
+
+    fail_after: dict
+    base: object = field(default_factory=NoFaults)
+
+    def delay(self, worker: int, task_row: int, work: float) -> float:
+        return self.base.delay(worker, task_row, work)
+
+    def should_fail(self, worker: int, tasks_done: int) -> bool:
+        limit = self.fail_after.get(worker)
+        return limit is not None and tasks_done >= limit
+
+    def mask(self, n: int, s: int) -> np.ndarray:
+        done = self.base.mask(n, s)
+        done[[w for w in self.fail_after if 0 <= w < n]] = False
+        return done
+
+    def to_spec(self) -> dict:
+        return {"kind": "FailStop",
+                "fail_after": {str(k): int(v)
+                               for k, v in self.fail_after.items()},
+                "base": self.base.to_spec()}
+
+    @classmethod
+    def _from_spec(cls, spec: dict) -> "FailStop":
+        return cls(fail_after={int(k): v
+                               for k, v in spec["fail_after"].items()},
+                   base=from_spec(spec["base"]))

@@ -1,0 +1,416 @@
+"""Versioned wire format: compiled plans -> bytes -> workers.
+
+The ROADMAP's "ship plans across processes" item is this module.  A
+compiled ``CodedPlan`` is a host-side object (encoding matrices, packed
+shards, LRU decode cache); to dispatch it to edge workers it must cross
+a pipe.  Three record kinds share one self-describing binary codec
+(magic + version + json manifest + raw array blobs -- no pickle, so a
+worker never executes shipped code):
+
+  * **full plan** (``dumps_plan`` / ``loads_plan``) -- scheme descriptor
+    fields, system matrix, the coded shards *in their original dtype*
+    (a bf16 LM head must come back bf16 -- mirroring ``_match_dtype``
+    in ``api.plan``), mm-side encoding state, and the decode cache's
+    cached straggler patterns so the receiving side re-warms the same
+    inverses it had.
+  * **per-worker ``PlanShard``** (``shard_plan``) -- the worker's task
+    rows as packed BSR tiles (``runtime.pack.bsr_shards``): the worker
+    multiplies exactly the nonzero tiles, so its compute cost is
+    nnz-proportional (the paper's CSR workers).  Virtual workers are
+    round-robined over ``n_workers`` physical hosts; a strong host
+    owning several virtual rows is how partial stragglers arise.
+  * **task / result messages** (``Task`` / ``TaskResult``) -- the
+    per-call traffic: inputs out, per-task products + work accounting
+    back.
+
+Arrays are encoded as (dtype-name, shape, raw bytes); exotic dtypes
+(bfloat16) resolve through ``ml_dtypes``, so decoding shards and tasks
+needs numpy (+ scipy for the BSR build) only.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MAGIC = b"RPRC"
+WIRE_VERSION = 1
+
+_HEADER = struct.Struct("<4sHQ")   # magic, version, manifest length
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # noqa: PLC0415 - only for bf16/f8 payloads
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_record(meta: dict, arrays: dict[str, np.ndarray] | None = None
+                  ) -> bytes:
+    """One wire record: json-able ``meta`` + named numpy arrays."""
+    arrays = arrays or {}
+    manifest = {"meta": meta, "arrays": []}
+    blobs = []
+    for name, arr in arrays.items():
+        a = np.ascontiguousarray(arr)
+        blob = a.tobytes()
+        manifest["arrays"].append({"name": name, "dtype": str(a.dtype),
+                                   "shape": list(a.shape),
+                                   "nbytes": len(blob)})
+        blobs.append(blob)
+    head = json.dumps(manifest, separators=(",", ":")).encode()
+    return b"".join([_HEADER.pack(MAGIC, WIRE_VERSION, len(head)), head,
+                     *blobs])
+
+
+def decode_record(data: bytes) -> tuple[dict, dict[str, np.ndarray]]:
+    magic, version, hlen = _HEADER.unpack_from(data, 0)
+    if magic != MAGIC:
+        raise ValueError("not a repro cluster wire record")
+    if version != WIRE_VERSION:
+        raise ValueError(f"wire version {version} unsupported "
+                         f"(this build speaks {WIRE_VERSION})")
+    off = _HEADER.size
+    manifest = json.loads(data[off: off + hlen])
+    off += hlen
+    arrays = {}
+    for spec in manifest["arrays"]:
+        dt = _np_dtype(spec["dtype"])
+        arr = np.frombuffer(data, dtype=dt, count=spec["nbytes"] // dt.itemsize,
+                            offset=off).reshape(spec["shape"])
+        arrays[spec["name"]] = arr
+        off += spec["nbytes"]
+    return manifest["meta"], arrays
+
+
+# ---------------------------------------------------------------------------
+# Scheme descriptors (plain dataclass fields -- covers hetero schemes too,
+# which cannot be rebuilt from a registry name alone)
+# ---------------------------------------------------------------------------
+
+
+def scheme_to_meta(sch) -> dict:
+    from ..core.assignment import MMScheme  # noqa: PLC0415 - avoid jax import
+
+    if isinstance(sch, MMScheme):
+        return {"kind": "mm", "name": sch.name, "n": sch.n, "k_A": sch.k_A,
+                "k_B": sch.k_B, "s": sch.s, "omega_A": sch.omega_A,
+                "omega_B": sch.omega_B,
+                "supports_A": [list(t) for t in sch.supports_A],
+                "supports_B": [list(t) for t in sch.supports_B],
+                "threshold_optimal": sch.threshold_optimal}
+    return {"kind": "mv", "name": sch.name, "n": sch.n, "k_A": sch.k_A,
+            "s": sch.s, "omega_A": sch.omega_A,
+            "supports": [list(t) for t in sch.supports],
+            "tasks_per_worker": sch.tasks_per_worker,
+            "threshold_optimal": sch.threshold_optimal}
+
+
+def scheme_from_meta(m: dict):
+    from ..core.assignment import MMScheme, MVScheme  # noqa: PLC0415
+
+    if m["kind"] == "mm":
+        return MMScheme(
+            name=m["name"], n=m["n"], k_A=m["k_A"], k_B=m["k_B"], s=m["s"],
+            omega_A=m["omega_A"], omega_B=m["omega_B"],
+            supports_A=tuple(tuple(t) for t in m["supports_A"]),
+            supports_B=tuple(tuple(t) for t in m["supports_B"]),
+            threshold_optimal=m["threshold_optimal"])
+    return MVScheme(
+        name=m["name"], n=m["n"], k_A=m["k_A"], s=m["s"],
+        omega_A=m["omega_A"],
+        supports=tuple(tuple(t) for t in m["supports"]),
+        tasks_per_worker=m["tasks_per_worker"],
+        threshold_optimal=m["threshold_optimal"])
+
+
+# ---------------------------------------------------------------------------
+# Full-plan serialization
+# ---------------------------------------------------------------------------
+
+
+def dumps_plan(plan) -> bytes:
+    """Serialize a compiled ``CodedPlan`` (operand-backed or
+    aggregation-only).  Dtype-faithful: the coded shards travel in the
+    operand dtype the compiler kept them in."""
+    meta = {"record": "plan", "kind": plan.kind, "backend": plan.backend,
+            "seed": plan.seed, "r": plan.r, "cache_size": plan.cache_size,
+            "scheme": scheme_to_meta(plan.scheme)}
+    arrays: dict[str, np.ndarray] = {"G": np.asarray(plan.G, np.float64)}
+    ex = plan.executor
+    if ex is not None:
+        arrays["coded"] = np.asarray(ex.coded)
+    if plan._rb is not None:
+        arrays["rb"] = np.asarray(plan._rb)
+    if plan._sup_b is not None:
+        arrays["sup_b"] = np.asarray(plan._sup_b)
+        arrays["coef_b"] = np.asarray(plan._coef_b)
+    cache = ex.cache if ex is not None and ex.cache is not None \
+        else plan._agg_cache
+    if cache is not None and len(cache):
+        arrays["cache_patterns"] = cache.patterns()
+    return encode_record(meta, arrays)
+
+
+def loads_plan(data: bytes, backend: str | None = None):
+    """Reconstruct a ``CodedPlan`` from ``dumps_plan`` bytes.
+
+    ``backend=`` overrides the serialized choice; a serialized
+    ``pallas`` plan landing on a non-TPU host demotes to ``packed``
+    (same packed layout, jnp compute) instead of failing at call time.
+    """
+    import jax  # noqa: PLC0415 - keep module importable without jax
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from ..api.plan import CodedPlan  # noqa: PLC0415
+    from ..runtime import CodedExecutor  # noqa: PLC0415
+
+    meta, arrays = decode_record(data)
+    if meta.get("record") != "plan":
+        raise ValueError(f"expected a plan record, got {meta.get('record')!r}")
+    sch = scheme_from_meta(meta["scheme"])
+    resolved = backend or meta["backend"]
+    if resolved == "pallas" and jax.default_backend() != "tpu":
+        resolved = "packed"
+    plan = CodedPlan(scheme=sch, kind=meta["kind"], backend=resolved,
+                     seed=meta["seed"], G=np.asarray(arrays["G"]),
+                     r=meta["r"], cache_size=meta["cache_size"])
+    if "rb" in arrays:
+        plan._rb = np.array(arrays["rb"])
+    if "sup_b" in arrays:
+        plan._sup_b = np.array(arrays["sup_b"])
+        plan._coef_b = np.array(arrays["coef_b"])
+    if "coded" in arrays:
+        plan.executor = CodedExecutor(
+            jnp.asarray(arrays["coded"]), jnp.asarray(plan.G, jnp.float32),
+            sch.k, plan.r, backend=resolved, cache_size=plan.cache_size)
+    for pattern in arrays.get("cache_patterns", ()):
+        try:
+            plan._decode_cache().plan(np.asarray(pattern, bool))
+        except (ValueError, np.linalg.LinAlgError):  # pragma: no cover
+            continue
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Per-worker shards
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PlanShard:
+    """One physical worker's slice of a compiled plan.
+
+    ``tasks[j]`` holds the BSR components of coded task row
+    ``task_rows[j]`` (transposed shard ``A_i^T``, shape
+    (c_pad, t_pad), blocksize (bm, bk)); ``work[j]`` is the row's
+    nonzero-tile count normalized by the dense tile count -- the
+    nnz-proportional work units the fault injectors and the result
+    accounting both use.  Aggregation-only plans ship payload-less
+    shards (the worker's job is combining gradients it already has).
+    """
+
+    worker: int
+    n_workers: int
+    task_rows: tuple[int, ...]
+    kind: str
+    scheme_name: str
+    n: int                     # virtual workers
+    k: int
+    tasks_per_worker: int
+    t: int = 0
+    c: int = 0
+    t_pad: int = 0
+    c_pad: int = 0
+    bk: int = 0
+    bm: int = 0
+    work: tuple[float, ...] = ()
+    tasks: list[dict] = field(default_factory=list)   # data/indices/indptr
+
+    def encode(self) -> bytes:
+        meta = {"record": "shard", "worker": self.worker,
+                "n_workers": self.n_workers,
+                "task_rows": list(self.task_rows), "kind": self.kind,
+                "scheme_name": self.scheme_name, "n": self.n, "k": self.k,
+                "tasks_per_worker": self.tasks_per_worker, "t": self.t,
+                "c": self.c, "t_pad": self.t_pad, "c_pad": self.c_pad,
+                "bk": self.bk, "bm": self.bm, "work": list(self.work),
+                "has_payload": bool(self.tasks)}
+        arrays = {}
+        for j, task in enumerate(self.tasks):
+            for part in ("data", "indices", "indptr"):
+                arrays[f"{j}.{part}"] = task[part]
+        return encode_record(meta, arrays)
+
+    @classmethod
+    def decode(cls, data: bytes) -> "PlanShard":
+        meta, arrays = decode_record(data)
+        if meta.get("record") != "shard":
+            raise ValueError(
+                f"expected a shard record, got {meta.get('record')!r}")
+        tasks = []
+        if meta["has_payload"]:
+            for j in range(len(meta["task_rows"])):
+                tasks.append({part: arrays[f"{j}.{part}"]
+                              for part in ("data", "indices", "indptr")})
+        return cls(
+            worker=meta["worker"], n_workers=meta["n_workers"],
+            task_rows=tuple(meta["task_rows"]), kind=meta["kind"],
+            scheme_name=meta["scheme_name"], n=meta["n"], k=meta["k"],
+            tasks_per_worker=meta["tasks_per_worker"], t=meta["t"],
+            c=meta["c"], t_pad=meta["t_pad"], c_pad=meta["c_pad"],
+            bk=meta["bk"], bm=meta["bm"], work=tuple(meta["work"]),
+            tasks=tasks)
+
+
+def plan_packed(plan):
+    """The packed form cluster workers compute with (8x8 tiles).
+
+    Reuses the executor's own packing when it is already at the worker
+    tile size -- then the shipped BSR components are *bitwise* the ones
+    the in-process packed backend multiplies, which is what makes the
+    dispatcher-parity acceptance check exact.
+    """
+    from ..runtime import pack_coded_blocks  # noqa: PLC0415
+
+    ex = plan.executor
+    if ex is None:
+        return None
+    if ex.packed is not None and (ex.packed.bk, ex.packed.bm) == (8, 8):
+        return ex.packed
+    return pack_coded_blocks(np.asarray(ex.coded), 8, 8)
+
+
+def shard_plan(plan, n_workers: int | None = None, packed=None
+               ) -> list[PlanShard]:
+    """Split a compiled plan into per-physical-worker shards.
+
+    Virtual worker ``v`` (and its ``tasks_per_worker`` task rows) lands
+    on physical worker ``v % n_workers``; with fewer hosts than virtual
+    workers each host serves several rows sequentially -- the
+    partial-straggler setting of Sec. IV-B.
+    """
+    from ..runtime.pack import bsr_shards  # noqa: PLC0415
+
+    n_virtual = plan.n
+    per = plan.tasks_per_worker
+    w = n_workers if n_workers is not None else n_virtual
+    if not 1 <= w <= n_virtual:
+        raise ValueError(f"n_workers must be in [1, {n_virtual}], got {w}")
+    if packed is None:
+        packed = plan_packed(plan)
+    if packed is not None:
+        ex = plan.executor
+        if packed is ex.packed:
+            bsr = ex._bsr_shards()
+        else:
+            bsr = bsr_shards(packed)
+        dense_tiles = max((packed.t_pad // packed.bk)
+                          * (packed.c_pad // packed.bm), 1)
+
+    shards = []
+    for host in range(w):
+        rows = [v * per + j for v in range(host, n_virtual, w)
+                for j in range(per)]
+        if packed is None:
+            shards.append(PlanShard(
+                worker=host, n_workers=w, task_rows=tuple(rows),
+                kind=plan.kind, scheme_name=plan.scheme.name, n=n_virtual,
+                k=plan.k, tasks_per_worker=per,
+                work=tuple(1.0 for _ in rows)))
+            continue
+        tasks, work = [], []
+        for row in rows:
+            m = bsr[row]
+            tasks.append({"data": np.asarray(m.data, np.float32),
+                          "indices": np.asarray(m.indices, np.int32),
+                          "indptr": np.asarray(m.indptr, np.int64)})
+            work.append(packed.tile_counts[row] / dense_tiles)
+        shards.append(PlanShard(
+            worker=host, n_workers=w, task_rows=tuple(rows), kind=plan.kind,
+            scheme_name=plan.scheme.name, n=n_virtual, k=plan.k,
+            tasks_per_worker=per, t=packed.t, c=packed.c,
+            t_pad=packed.t_pad, c_pad=packed.c_pad, bk=packed.bk,
+            bm=packed.bm, work=tuple(work), tasks=tasks))
+    return shards
+
+
+# ---------------------------------------------------------------------------
+# Task / result messages
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Task:
+    """One unit of dispatched work: apply op to one coded task row."""
+
+    round: int
+    op: str                                   # matvec | matmat | aggregate
+    task_row: int
+    payload: dict = field(default_factory=dict)   # name -> np.ndarray
+    meta: dict = field(default_factory=dict)
+
+    def encode(self) -> bytes:
+        return encode_record(
+            {"record": "task", "round": self.round, "op": self.op,
+             "task_row": self.task_row, "meta": self.meta}, self.payload)
+
+    @classmethod
+    def decode(cls, data: bytes) -> "Task":
+        meta, arrays = decode_record(data)
+        if meta.get("record") != "task":
+            raise ValueError(
+                f"expected a task record, got {meta.get('record')!r}")
+        return cls(round=meta["round"], op=meta["op"],
+                   task_row=meta["task_row"], payload=arrays,
+                   meta=meta["meta"])
+
+
+@dataclass
+class TaskResult:
+    """A worker's answer for one task -- or its death notice.
+
+    ``kind="death"`` (task_row -1, round -1) marks worker fail-stop;
+    the dispatcher responds by re-shipping the dead worker's shard to a
+    live host and requeueing its outstanding tasks.
+    """
+
+    worker: int
+    round: int
+    task_row: int
+    ok: bool = True
+    kind: str = "result"                       # result | death
+    error: str = ""
+    work: float = 0.0
+    compute_s: float = 0.0
+    arrays: dict = field(default_factory=dict)
+
+    def encode(self) -> bytes:
+        return encode_record(
+            {"record": "result", "worker": self.worker, "round": self.round,
+             "task_row": self.task_row, "ok": self.ok, "kind": self.kind,
+             "error": self.error, "work": self.work,
+             "compute_s": self.compute_s}, self.arrays)
+
+    @classmethod
+    def decode(cls, data: bytes) -> "TaskResult":
+        meta, arrays = decode_record(data)
+        if meta.get("record") != "result":
+            raise ValueError(
+                f"expected a result record, got {meta.get('record')!r}")
+        return cls(worker=meta["worker"], round=meta["round"],
+                   task_row=meta["task_row"], ok=meta["ok"],
+                   kind=meta["kind"], error=meta["error"],
+                   work=meta["work"], compute_s=meta["compute_s"],
+                   arrays=arrays)
+
+
+def death_notice(worker: int, error: str) -> TaskResult:
+    return TaskResult(worker=worker, round=-1, task_row=-1, ok=False,
+                      kind="death", error=error)

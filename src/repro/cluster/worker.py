@@ -1,0 +1,301 @@
+"""Cluster workers: receive a ``PlanShard`` once, then serve tasks.
+
+The worker side of the paper's system: an edge device that holds its
+coded submatrices (as BSR -- it multiplies exactly the nonzero tiles,
+so its per-task cost is nnz-proportional) and answers matvec / matmat /
+aggregate tasks as they stream in.  Two transports implement one
+interface so the dispatcher cannot tell them apart:
+
+  * ``ThreadWorker``  -- a daemon thread with an inbox queue; the default
+    (fast, deterministic with seeded fault injection, used by CI).
+  * ``ProcessWorker`` -- a spawned subprocess speaking wire bytes over a
+    pipe; proves the shard/task/result encoding actually crosses a
+    process boundary (the child's task path is pure numpy + scipy).
+
+Both report per-task ``work`` (normalized nonzero-tile count) and
+compute seconds, honour fault injection (``repro.cluster.faults``) --
+latency before replying, ``WorkerFailure`` for fail-stop death -- and
+understand round cancellation (a decoded round's leftover tasks are
+skipped, not computed).
+
+A worker can host more than one shard: the dispatcher re-ships a dead
+worker's shard to a live host (requeue), which simply merges the new
+task rows into its table.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from .faults import NoFaults, WorkerFailure, from_spec
+from .wire import PlanShard, Task, TaskResult, death_notice
+
+
+class ShardRuntime:
+    """Task table: coded task row -> BSR operator + work units."""
+
+    def __init__(self):
+        self.tasks: dict[int, dict] = {}
+        self.t_pad = 0
+        self.c_pad = 0
+
+    def load(self, shard: PlanShard) -> None:
+        from scipy import sparse  # noqa: PLC0415 - worker-side heavy dep
+
+        self.t_pad = shard.t_pad or self.t_pad
+        self.c_pad = shard.c_pad or self.c_pad
+        for j, row in enumerate(shard.task_rows):
+            entry = {"work": shard.work[j], "bsr": None}
+            if shard.tasks:
+                t = shard.tasks[j]
+                entry["bsr"] = sparse.bsr_matrix(
+                    (np.array(t["data"]), np.array(t["indices"]),
+                     np.array(t["indptr"])),
+                    shape=(shard.c_pad, shard.t_pad),
+                    blocksize=(shard.bm, shard.bk))
+            self.tasks[row] = entry
+
+    def run(self, task: Task) -> tuple[dict, float]:
+        """Execute one task; returns (result arrays, work units)."""
+        entry = self.tasks.get(task.task_row)
+        if entry is None:
+            raise KeyError(f"task row {task.task_row} not in this worker's "
+                           f"shard (have {sorted(self.tasks)})")
+        if task.op in ("matvec", "matmat"):
+            # (c_pad, t_pad) BSR @ (t_pad, width): walks nonzero tiles only
+            y = entry["bsr"] @ np.asarray(task.payload["b"], np.float32)
+            return {"y": y}, entry["work"]
+        if task.op == "aggregate":
+            # combining is the dispatcher's job; the worker's cost is the
+            # gradient compute the payload stands for (work from the task)
+            return dict(task.payload), float(task.meta.get("work", 1.0))
+        raise ValueError(f"unknown op {task.op!r}")
+
+
+def _serve(worker_id: int, runtime: ShardRuntime, faults, task: Task,
+           tasks_done: int) -> TaskResult:
+    """Shared task execution: fault check, compute, injected latency."""
+    if faults.should_fail(worker_id, tasks_done):
+        raise WorkerFailure(f"worker {worker_id} fail-stop injected")
+    t0 = time.perf_counter()
+    arrays, work = runtime.run(task)
+    dt = time.perf_counter() - t0
+    delay = faults.delay(worker_id, task.task_row, work)
+    if delay > 0:
+        time.sleep(delay)
+    return TaskResult(worker=worker_id, round=task.round,
+                      task_row=task.task_row, ok=True, work=work,
+                      compute_s=dt, arrays=arrays)
+
+
+class ThreadWorker:
+    """In-process worker: daemon thread + inbox queue."""
+
+    def __init__(self, worker_id: int, outbox: queue.Queue, faults=None):
+        self.worker_id = worker_id
+        self.outbox = outbox
+        self.faults = faults if faults is not None else NoFaults()
+        self.inbox: queue.Queue = queue.Queue()
+        self.alive = True
+        self._pending: deque = deque()
+        self._cancelled: set[int] = set()
+        self._runtime = ShardRuntime()
+        self._tasks_done = 0
+        self._thread = threading.Thread(
+            target=self._loop, name=f"cluster-worker-{worker_id}",
+            daemon=True)
+        self._thread.start()
+
+    # -- dispatcher-facing interface (shared with ProcessWorker) ----------
+
+    def send_shard(self, shard_bytes: bytes) -> None:
+        self.inbox.put(("shard", shard_bytes))
+
+    def submit(self, task: Task) -> None:
+        self.inbox.put(("task", task))
+
+    def cancel(self, round_id: int) -> None:
+        self.inbox.put(("cancel", round_id))
+
+    def stop(self) -> None:
+        self.inbox.put(("stop", None))
+        self._thread.join(timeout=5)
+
+    # -- loop --------------------------------------------------------------
+
+    def _next(self):
+        if self._pending:
+            return self._pending.popleft()
+        return self.inbox.get()
+
+    def _drain(self) -> None:
+        """Pull everything already queued so cancels annihilate stale
+        tasks before we burn compute (and injected sleep) on them."""
+        while True:
+            try:
+                self._pending.append(self.inbox.get_nowait())
+            except queue.Empty:
+                return
+
+    def _loop(self) -> None:
+        while True:
+            kind, val = self._next()
+            if kind == "stop":
+                break
+            if kind == "cancel":
+                self._cancelled.add(val)
+                continue
+            if kind == "shard":
+                self._runtime.load(PlanShard.decode(val))
+                continue
+            task: Task = val
+            self._drain()
+            for m in self._pending:
+                if m[0] == "cancel":
+                    self._cancelled.add(m[1])
+            # rounds are monotonic: cancels for older rounds can never
+            # match again, so the set stays bounded
+            self._cancelled = {c for c in self._cancelled
+                               if c >= task.round}
+            if task.round in self._cancelled:
+                continue
+            try:
+                self.outbox.put(_serve(self.worker_id, self._runtime,
+                                       self.faults, task, self._tasks_done))
+                self._tasks_done += 1
+            except WorkerFailure as e:
+                self.alive = False
+                self.outbox.put(death_notice(self.worker_id, str(e)))
+                return
+            except Exception as e:  # defensive: surface, don't hang round
+                self.outbox.put(TaskResult(
+                    worker=self.worker_id, round=task.round,
+                    task_row=task.task_row, ok=False, error=repr(e)))
+        self.alive = False
+
+
+# ---------------------------------------------------------------------------
+# Subprocess transport
+# ---------------------------------------------------------------------------
+
+
+def _process_main(conn, worker_id: int, fault_spec) -> None:
+    """Child entry point: wire bytes in, wire bytes out.  The task path
+    runs on numpy + scipy; nothing device-side crosses the pipe."""
+    faults = from_spec(fault_spec)
+    runtime = ShardRuntime()
+    cancelled: set[int] = set()
+    pending: deque = deque()
+    tasks_done = 0
+
+    def nxt():
+        if pending:
+            return pending.popleft()
+        return conn.recv()
+
+    try:
+        while True:
+            kind, val = nxt()
+            if kind == "stop":
+                return
+            if kind == "cancel":
+                cancelled.add(val)
+                continue
+            if kind == "shard":
+                runtime.load(PlanShard.decode(val))
+                continue
+            task = Task.decode(val)
+            while conn.poll():
+                pending.append(conn.recv())
+            for m in pending:
+                if m[0] == "cancel":
+                    cancelled.add(m[1])
+            cancelled = {c for c in cancelled if c >= task.round}
+            if task.round in cancelled:
+                continue
+            try:
+                res = _serve(worker_id, runtime, faults, task, tasks_done)
+                tasks_done += 1
+                conn.send(("result", res.encode()))
+            except WorkerFailure as e:
+                conn.send(("result", death_notice(worker_id, str(e)).encode()))
+                return
+            except Exception as e:
+                conn.send(("result", TaskResult(
+                    worker=worker_id, round=task.round,
+                    task_row=task.task_row, ok=False,
+                    error=repr(e)).encode()))
+    except (EOFError, OSError):   # dispatcher went away
+        return
+
+
+class ProcessWorker:
+    """Subprocess worker: same interface as ``ThreadWorker``, transport
+    is wire bytes over a ``multiprocessing`` pipe (spawn context, so the
+    child never inherits jax state)."""
+
+    def __init__(self, worker_id: int, outbox: queue.Queue, faults=None):
+        import multiprocessing as mp  # noqa: PLC0415
+
+        self.worker_id = worker_id
+        self.outbox = outbox
+        self.alive = True
+        self._stopping = False
+        faults = faults if faults is not None else NoFaults()
+        ctx = mp.get_context("spawn")
+        self._conn, child = ctx.Pipe()
+        self._proc = ctx.Process(
+            target=_process_main, args=(child, worker_id, faults.to_spec()),
+            daemon=True)
+        self._proc.start()
+        child.close()
+        self._reader = threading.Thread(target=self._pump, daemon=True)
+        self._reader.start()
+
+    def _pump(self) -> None:
+        try:
+            while True:
+                kind, data = self._conn.recv()
+                if kind == "result":
+                    res = TaskResult.decode(data)
+                    if res.kind == "death":
+                        self.alive = False
+                    self.outbox.put(res)
+        except (EOFError, OSError):
+            if not self._stopping and self.alive:
+                # the process died without a notice: real fail-stop
+                self.alive = False
+                self.outbox.put(death_notice(
+                    self.worker_id, "worker process exited"))
+
+    def send_shard(self, shard_bytes: bytes) -> None:
+        self._conn.send(("shard", shard_bytes))
+
+    def submit(self, task: Task) -> None:
+        self._conn.send(("task", task.encode()))
+
+    def cancel(self, round_id: int) -> None:
+        try:
+            self._conn.send(("cancel", round_id))
+        except (BrokenPipeError, OSError):
+            pass
+
+    def stop(self) -> None:
+        self._stopping = True
+        try:
+            self._conn.send(("stop", None))
+        except (BrokenPipeError, OSError):
+            pass
+        self._proc.join(timeout=5)
+        if self._proc.is_alive():  # pragma: no cover - stuck child
+            self._proc.terminate()
+        self._conn.close()
+        self.alive = False
+
+
+WORKER_BACKENDS = {"thread": ThreadWorker, "process": ProcessWorker}

@@ -70,6 +70,13 @@ class CodedConfig:
     # (repro.api.backends); the REPRO_CODED_BACKEND env var overrides
     # everything, including auto.
     backend: str | None = None
+    # serve the coded matmuls from real workers (repro.cluster): the
+    # plan is sharded once at engine build and every step dispatches
+    # tasks + decodes from the fastest-k results.  cluster_workers <
+    # n_workers hosts several virtual workers per physical one
+    # (partial-straggler setting); None = one host per virtual worker.
+    cluster: bool = False
+    cluster_workers: int | None = None
 
 
 @dataclass(frozen=True)

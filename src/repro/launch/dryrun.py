@@ -193,6 +193,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, list):   # older jax wrapped it per-computation
+                cost = cost[0] if cost else {}
             from repro.analysis.hlo import collective_bytes_loop_aware
             coll = collective_bytes_loop_aware(compiled.as_text())
         n_dev = mesh.devices.size

@@ -220,7 +220,9 @@ def moe_block_ep(p: dict, x: jnp.ndarray, moe: MoEConfig, mesh,
         out = jax.lax.psum(out.astype(jnp.float32), model_axis)
         return out.astype(xx.dtype).reshape(bl, sl, d), aux
 
-    fn = jax.shard_map(
+    from ..parallel.ctx import shard_map_compat  # noqa: PLC0415
+
+    fn = shard_map_compat(
         inner, mesh=mesh,
         in_specs=(P(None, None), P(model_axis, dp_axes[-1], None),
                   P(model_axis, dp_axes[-1], None),

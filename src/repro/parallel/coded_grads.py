@@ -105,12 +105,26 @@ class CodedAggregator:
         a = jnp.linalg.solve(sub.T, ones)        # sub^T a = 1
         return a, rows
 
-    def aggregate(self, payloads: list, done: jnp.ndarray) -> object:
+    def aggregate(self, payloads: list, done: jnp.ndarray,
+                  cluster=None) -> object:
         """Sum of all k shard gradients from any >= k completed workers.
 
         ``payloads`` is the length-n list of worker payloads (straggler
         entries may hold garbage -- they are masked by ``done``).
         Routes through ``plan.aggregate`` (cached-inverse decode for
-        concrete masks, jit-safe solve under a trace).
+        concrete masks, jit-safe solve under a trace).  Pass a
+        ``cluster`` (from ``to_cluster``) to actually dispatch the
+        combine: payloads ship to workers, the decode runs from the
+        fastest-k real completions (``done=None`` races them).
         """
+        if cluster is not None:
+            return cluster.aggregate(payloads, done)
         return self.plan().aggregate(payloads, done)
+
+    def to_cluster(self, n_workers: int | None = None, **kw):
+        """A ``ClusterPlan`` over this aggregator's (aggregation-only)
+        plan: real workers, fault injection, partial-straggler credit --
+        the training-time analogue of the coded serving head."""
+        from ..cluster import ClusterPlan  # noqa: PLC0415 - layering
+
+        return ClusterPlan(self.plan(), n_workers, **kw)

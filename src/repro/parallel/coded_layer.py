@@ -166,7 +166,9 @@ class CodedLinear:
             y_all = jax.lax.all_gather(y_local, axis)      # (n, ..., c)
             return self.decode(y_all, dd)
 
-        fn = jax.shard_map(
+        from .ctx import shard_map_compat  # noqa: PLC0415
+
+        fn = shard_map_compat(
             worker, mesh=mesh,
             in_specs=(P(axis), P(), P()),
             out_specs=P(),

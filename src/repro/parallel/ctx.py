@@ -17,6 +17,25 @@ from typing import Callable
 _state = threading.local()
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes it top-level with ``check_vma``; older releases
+    only have ``jax.experimental.shard_map.shard_map`` with the same
+    knob named ``check_rep``.  Every shard_map call site in the repo
+    (coded layer, expert-parallel MoE) routes through here.
+    """
+    import jax  # noqa: PLC0415
+
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm  # noqa: PLC0415
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
 def _identity(name: str, x):
     return x
 

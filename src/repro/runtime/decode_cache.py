@@ -75,6 +75,21 @@ class DecodeCache:
             self._plans.popitem(last=False)
         return plan
 
+    def patterns(self) -> np.ndarray:
+        """(P, n_tasks) bool -- the cached straggler patterns, LRU order.
+
+        This is what plan serialization ships (``repro.cluster.wire``):
+        patterns are tiny and the receiving side re-derives bitwise the
+        same inverses from its copy of G, so the shipped plan arrives
+        pre-warmed without shipping the factorisations themselves.
+        """
+        n = self._G.shape[0]
+        if not self._plans:
+            return np.zeros((0, n), bool)
+        rows = [np.unpackbits(np.frombuffer(key, np.uint8))[:n]
+                for key in self._plans]
+        return np.asarray(rows, bool)
+
     def __len__(self) -> int:
         return len(self._plans)
 

@@ -17,6 +17,13 @@ the fastest-k workers' nonzero tiles are multiplied.
 ``CodedConfig.scheme`` picks any registered mv scheme;
 ``CodedConfig.backend`` (default "auto": density + platform pick) or
 the ``REPRO_CODED_BACKEND`` env var selects the backend.
+
+Straggler sampling routes through ``repro.cluster.faults`` (pass
+``faults=`` to change the model), so serve-time behavior and the
+cluster bench share one straggler code path.  With
+``CodedConfig.cluster`` the head is actually *dispatched*: the plan is
+sharded to real workers (``plan.to_cluster``) and each step's logits
+come back from the fastest-k of them -- call ``close()`` when done.
 """
 
 from __future__ import annotations
@@ -28,8 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..api.plan import compile_plan
+from ..cluster.faults import StragglerFaults
 from ..configs.base import CodedConfig, ModelConfig
-from ..core.straggler import ShiftedExponential
 
 
 @dataclass
@@ -43,14 +50,20 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, cfg: ModelConfig, batch_size: int = 8,
                  max_len: int = 512, coded: CodedConfig | None = None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, faults=None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.batch_size = batch_size
         self.max_len = max_len
         self.rng = np.random.default_rng(rng_seed)
+        # one straggler code path for serving and the cluster bench:
+        # a repro.cluster.faults injector (sharing the engine's rng so
+        # per-step masks stay reproducible per rng_seed)
+        self.faults = faults if faults is not None \
+            else StragglerFaults(rng=self.rng)
         self.coded = None
+        self.coded_cluster = None
         if coded is not None and coded.enabled:
             from ..api.schemes import scheme_info, scheme_names  # noqa: PLC0415
 
@@ -69,6 +82,9 @@ class ServeEngine:
                 n=coded.n_workers, s=coded.stragglers,
                 seed=coded.seed, backend=coded.backend or "auto")
             self.s = coded.stragglers
+            if coded.cluster:
+                self.coded_cluster = self.coded.to_cluster(
+                    coded.cluster_workers)
         self._prefill = jax.jit(
             lambda p, toks: model.prefill(p, toks, max_len=self.max_len))
         self._decode = jax.jit(model.decode_step)
@@ -77,14 +93,10 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def _straggler_mask(self) -> jnp.ndarray:
-        """Simulated per-step straggler set (fastest-k of a shifted-exp
-        completion model)."""
-        n = self.coded.scheme.n
-        times = ShiftedExponential().sample(np.ones(n), self.rng)
-        order = np.argsort(times)
-        done = np.zeros(n, bool)
-        done[order[: n - self.s]] = True
-        return jnp.asarray(done)
+        """Per-step straggler set: fastest-k under the engine's fault
+        model (``repro.cluster.faults``; on a real edge deployment the
+        mask comes from worker heartbeats instead)."""
+        return jnp.asarray(self.faults.mask(self.coded.scheme.n, self.s))
 
     def _logits(self, logits: jnp.ndarray) -> jnp.ndarray:
         return logits
@@ -143,8 +155,21 @@ class ServeEngine:
 
     def coded_logits(self, hidden: jnp.ndarray,
                      done: jnp.ndarray | None = None) -> jnp.ndarray:
-        """Compute logits through the coded LM head (hidden (B, d))."""
+        """Compute logits through the coded LM head (hidden (B, d)).
+
+        In cluster mode the matvec is actually dispatched: the sampled
+        mask picks which workers' task rows this step may use, and the
+        decode runs from their real, asynchronously-collected results.
+        """
         if self.coded is None:
             raise ValueError("engine built without coded config")
         mask = done if done is not None else self._straggler_mask()
-        return self.coded.matvec(hidden, mask).astype(hidden.dtype)
+        head = self.coded_cluster if self.coded_cluster is not None \
+            else self.coded
+        return head.matvec(hidden, mask).astype(hidden.dtype)
+
+    def close(self) -> None:
+        """Release cluster workers (no-op outside cluster mode)."""
+        if self.coded_cluster is not None:
+            self.coded_cluster.shutdown()
+            self.coded_cluster = None

@@ -16,6 +16,11 @@ Fault-tolerance model (designed for 1000+ nodes, exercised here on CPU):
     used on the serving path and the edge-offload example.
   * **Gradient compression** -- int8 / top-k with error feedback around
     the data-parallel all-reduce (repro.optim.compress).
+  * **Online plan re-tuning** -- coded plans registered via
+    ``coded_plans=`` are ``retune()``d every ``retune_every`` steps:
+    pruning drifts the operand's block sparsity across the
+    packed/reference crossover, and the backend pick should follow it
+    (ROADMAP "re-tune plans online").
 """
 
 from __future__ import annotations
@@ -42,16 +47,26 @@ class TrainConfig:
     keep_last: int = 3
     straggler_threshold: float = 2.0  # x median step time -> flagged
     compression: CompressionConfig = field(default_factory=CompressionConfig)
+    retune_every: int = 0             # re-pick coded-plan backends every N
+                                      # steps (0 = off); see coded_plans=
 
 
 class Trainer:
-    def __init__(self, model, opt_cfg: AdamWConfig, train_cfg: TrainConfig):
+    def __init__(self, model, opt_cfg: AdamWConfig, train_cfg: TrainConfig,
+                 coded_plans=()):
+        """``coded_plans`` entries are ``CodedPlan``s or ``(plan,
+        provider)`` pairs where ``provider(params)`` returns the plan's
+        current operand (live weights drift; the stored compile-time
+        operand does not)."""
         self.model = model
         self.opt_cfg = opt_cfg
         self.cfg = train_cfg
         self._step_fn = jax.jit(self._make_step())
         self.step_times: list[float] = []
         self.stragglers: list[int] = []
+        self.coded_plans = [p if isinstance(p, tuple) else (p, None)
+                            for p in coded_plans]
+        self.retunes: list[dict] = []
 
     # ------------------------------------------------------------------
 
@@ -131,6 +146,8 @@ class Trainer:
             metrics["step"] = step
             metrics["dt"] = dt
             history.append(metrics)
+            if cfg.retune_every and (step + 1) % cfg.retune_every == 0:
+                self._retune(params, step)
             if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
                 checkpoint.save(cfg.ckpt_dir, step + 1,
                                 {"params": params, "opt": opt_state},
@@ -142,3 +159,11 @@ class Trainer:
         if hasattr(data, "close"):
             data.close()
         return params, opt_state, history
+
+    def _retune(self, params, step: int) -> None:
+        """Re-run the density-based backend pick on registered plans."""
+        for plan, provider in self.coded_plans:
+            before = plan.backend
+            after = plan.retune(provider(params) if provider else None)
+            self.retunes.append({"step": step, "backend": after,
+                                 "changed": after != before})

@@ -37,7 +37,10 @@ def xla_fwd_flops(cfg, b, s):
         return logits.sum()
 
     comp = jax.jit(fwd).lower(pspecs, batch).compile()
-    return comp.cost_analysis()["flops"]
+    cost = comp.cost_analysis()
+    if isinstance(cost, list):   # older jax wrapped it per-computation
+        cost = cost[0]
+    return cost["flops"]
 
 
 class TestAnalyticVsXLA:

@@ -1,0 +1,542 @@
+"""Cluster runtime suite (repro.cluster).
+
+Covers: the wire codec (record framing, version gate, dtype fidelity
+for f32/bf16 operands -- the serialization mirror of ``_match_dtype``),
+plan serialization round-trips for every registered scheme, shard
+partitioning, dispatcher parity against the in-process plan under all
+C(n, s) whole-worker patterns (bitwise on the packed backend) and under
+partial-straggler task-level patterns, race-mode correctness with
+latency injection, worker fail-stop with requeue, the subprocess worker
+backend, fault-injector determinism, serve-engine mask routing, and
+online plan re-tuning (``plan.retune`` + trainer integration).
+"""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import compile_plan, list_schemes, make_scheme
+from repro.cluster import (
+    ClusterPlan,
+    FailStop,
+    NoFaults,
+    StragglerFaults,
+    adversarial_faults,
+    dumps_plan,
+    loads_plan,
+    shard_plan,
+    straggler_mask,
+)
+from repro.cluster.faults import from_spec
+from repro.cluster.wire import (
+    Task,
+    TaskResult,
+    decode_record,
+    encode_record,
+    scheme_from_meta,
+    scheme_to_meta,
+)
+from repro.core.straggler import AdversarialSlow
+
+TOL = dict(rtol=5e-3, atol=5e-3)
+
+
+def block_sparse(rng, t, r, zeros, bs=8, dtype=np.float32):
+    mask = rng.random((t // bs, r // bs)) >= zeros
+    a = rng.standard_normal((t, r)).astype(dtype)
+    return a * np.kron(mask, np.ones((bs, bs), dtype))
+
+
+def all_straggler_masks(n, s):
+    for pat in itertools.combinations(range(n), s):
+        done = np.ones(n, bool)
+        done[list(pat)] = False
+        yield done
+
+
+@pytest.fixture(scope="module")
+def sparse_operand():
+    rng = np.random.default_rng(0)
+    t, r = 256, 144
+    A = jnp.asarray(block_sparse(rng, t, r, 0.98))
+    x = jnp.asarray(rng.standard_normal((3, t)), jnp.float32)
+    return A, x
+
+
+# ---------------------------------------------------------------------------
+# Wire codec
+# ---------------------------------------------------------------------------
+
+
+class TestWireCodec:
+    def test_record_roundtrip(self):
+        meta = {"a": 1, "s": "x", "nested": {"b": [1, 2]}}
+        arrays = {"f": np.arange(6, dtype=np.float32).reshape(2, 3),
+                  "i": np.asarray([3, 1], np.int32),
+                  "d": np.ones((2, 2), np.float64)}
+        m2, a2 = decode_record(encode_record(meta, arrays))
+        assert m2 == meta
+        for k, v in arrays.items():
+            assert a2[k].dtype == v.dtype
+            np.testing.assert_array_equal(a2[k], v)
+
+    def test_bad_magic_and_version_rejected(self):
+        blob = bytearray(encode_record({"x": 1}, {}))
+        bad = b"XXXX" + bytes(blob[4:])
+        with pytest.raises(ValueError, match="not a repro"):
+            decode_record(bad)
+        blob[4] = 0xFF                      # version field
+        with pytest.raises(ValueError, match="version"):
+            decode_record(bytes(blob))
+
+    def test_task_result_roundtrip(self):
+        t = Task(round=3, op="matvec", task_row=5,
+                 payload={"b": np.ones((4, 2), np.float32)},
+                 meta={"b": 2})
+        t2 = Task.decode(t.encode())
+        assert (t2.round, t2.op, t2.task_row, t2.meta) == (3, "matvec", 5,
+                                                           {"b": 2})
+        np.testing.assert_array_equal(t2.payload["b"], t.payload["b"])
+        r = TaskResult(worker=1, round=3, task_row=5, work=0.25,
+                       compute_s=1e-4, arrays={"y": np.zeros(3, np.float32)})
+        r2 = TaskResult.decode(r.encode())
+        assert r2.ok and r2.kind == "result" and r2.work == 0.25
+        np.testing.assert_array_equal(r2.arrays["y"], r.arrays["y"])
+
+    def test_scheme_meta_roundtrip_all_schemes(self):
+        for info in list_schemes():
+            if info.hetero:
+                sch = make_scheme(info.name, capacities=[2, 2, 1, 1], k_A=4)
+            elif info.kind == "mv":
+                sch = make_scheme(info.name, n=6, k_A=4)
+            else:
+                sch = make_scheme(info.name, n=6, k_A=2, k_B=2)
+            assert scheme_from_meta(scheme_to_meta(sch)) == sch
+
+
+# ---------------------------------------------------------------------------
+# Plan serialization
+# ---------------------------------------------------------------------------
+
+
+class TestPlanSerialization:
+    @pytest.mark.parametrize("backend", ["packed", "reference"])
+    def test_mv_roundtrip_every_scheme(self, backend):
+        rng = np.random.default_rng(1)
+        t, r = 128, 96
+        A = jnp.asarray(block_sparse(rng, t, r, 0.9))
+        x = jnp.asarray(rng.standard_normal(t), jnp.float32)
+        for info in list_schemes("mv"):
+            if info.hetero:
+                plan = compile_plan(A, scheme=info.name,
+                                    capacities=[2, 2, 1, 1], k_A=4,
+                                    backend=backend)
+            else:
+                plan = compile_plan(A, scheme=info.name, n=6, k_A=4,
+                                    backend=backend)
+            plan2 = loads_plan(dumps_plan(plan))
+            assert plan2.scheme == plan.scheme
+            assert plan2.backend == plan.backend
+            np.testing.assert_array_equal(np.asarray(plan2.G),
+                                          np.asarray(plan.G))
+            np.testing.assert_array_equal(np.asarray(plan2.executor.coded),
+                                          np.asarray(plan.executor.coded))
+            np.testing.assert_array_equal(np.asarray(plan2.matvec(x)),
+                                          np.asarray(plan.matvec(x)))
+
+    def test_mm_roundtrip(self):
+        rng = np.random.default_rng(2)
+        t, r = 128, 64
+        A = jnp.asarray(block_sparse(rng, t, r, 0.9))
+        B = jnp.asarray(rng.standard_normal((t, 24)), jnp.float32)
+        for name in ("proposed", "poly"):
+            plan = compile_plan(A, scheme=name, n=6, k_A=2, k_B=2,
+                                backend="packed")
+            plan2 = loads_plan(dumps_plan(plan))
+            np.testing.assert_array_equal(np.asarray(plan2.matmat(B)),
+                                          np.asarray(plan.matmat(B)))
+
+    def test_aggregation_only_roundtrip(self):
+        plan = compile_plan(scheme="proposed", n=6, s=2, seed=3)
+        plan2 = loads_plan(dumps_plan(plan))
+        rng = np.random.default_rng(3)
+        payloads = [jnp.asarray(rng.standard_normal(5), jnp.float32)
+                    for _ in range(6)]
+        done = np.ones(6, bool)
+        done[4] = False
+        np.testing.assert_allclose(
+            np.asarray(plan2.aggregate(payloads, jnp.asarray(done))),
+            np.asarray(plan.aggregate(payloads, jnp.asarray(done))), **TOL)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_fidelity(self, dtype):
+        # the wire mirror of api.plan._match_dtype: a bf16 operand's
+        # coded shards must come back bf16, not silently doubled to f32
+        rng = np.random.default_rng(4)
+        A = jnp.asarray(block_sparse(rng, 64, 48, 0.9)).astype(dtype)
+        for backend in ("packed", "reference"):
+            plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                                backend=backend)
+            assert plan.executor.coded.dtype == dtype
+            plan2 = loads_plan(dumps_plan(plan))
+            assert plan2.executor.coded.dtype == dtype
+            np.testing.assert_array_equal(
+                np.asarray(plan2.executor.coded, np.float32),
+                np.asarray(plan.executor.coded, np.float32))
+
+    def test_cache_patterns_shipped(self):
+        rng = np.random.default_rng(5)
+        A = jnp.asarray(block_sparse(rng, 64, 48, 0.98))
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        done = np.ones(6, bool)
+        done[[0, 3]] = False
+        plan.prewarm(jnp.asarray(done))
+        plan2 = loads_plan(dumps_plan(plan))
+        cache = plan2._decode_cache()
+        hits0 = cache.hits
+        plan2.matvec(jnp.ones(64, jnp.float32), jnp.asarray(done))
+        assert cache.hits == hits0 + 1      # pattern arrived pre-warmed
+
+    def test_shard_partition(self, sparse_operand):
+        A, _ = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        for w in (6, 4, 3, 1):
+            shards = shard_plan(plan, w)
+            rows = sorted(r for s in shards for r in s.task_rows)
+            assert rows == list(range(plan.n_tasks))
+            assert all(s.work and min(s.work) > 0 for s in shards)
+            assert len(shards) == w
+        with pytest.raises(ValueError, match="n_workers"):
+            shard_plan(plan, 0)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher parity vs the in-process plan
+# ---------------------------------------------------------------------------
+
+
+class TestDispatcherParity:
+    @pytest.mark.parametrize("scheme", ["proposed", "cyclic31"])
+    def test_whole_worker_patterns_bitwise(self, sparse_operand, scheme):
+        A, x = sparse_operand
+        n, s = 6, 2
+        plan = compile_plan(A, scheme=scheme, n=n, s=s, backend="packed")
+        with plan.to_cluster() as cl:
+            for done in all_straggler_masks(n, s):
+                want = np.asarray(plan.matvec(x, jnp.asarray(done)))
+                got = np.asarray(cl.matvec(x, done))
+                # same BSR products, same cached inverse: bitwise equal
+                np.testing.assert_array_equal(got, want)
+
+    def test_reference_backend_tolerance(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="reference")
+        done = np.ones(6, bool)
+        done[[1, 4]] = False
+        with plan.to_cluster() as cl:
+            got = np.asarray(cl.matvec(x, done))
+        np.testing.assert_allclose(
+            got, np.asarray(plan.matvec(x, jnp.asarray(done))), **TOL)
+
+    def test_partial_straggler_task_level_parity(self, sparse_operand):
+        # scs36: 6 workers x 3 tasks, decode needs 12 of 18 task rows.
+        # Worker 0 finishes 2/3, worker 1 finishes 1/3 -- strict subsets.
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="scs36", n=6, k_A=4, backend="packed")
+        per = plan.tasks_per_worker
+        assert per == 3
+        task_done = np.ones(plan.n_tasks, bool)
+        task_done[[2, 4, 5]] = False        # w0 loses row 2, w1 rows 4, 5
+        want = np.asarray(plan.matvec(x, jnp.asarray(task_done)))
+        with plan.to_cluster() as cl:
+            got = np.asarray(cl.matvec(x, task_done))
+            rep = cl.last_report
+        np.testing.assert_array_equal(got, want)
+        assert 0 in rep.partial_workers and 1 in rep.partial_workers
+        # ground truth: still the exact matvec
+        np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+
+    def test_fewer_hosts_than_virtual_workers(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        done = np.ones(6, bool)
+        done[[3, 4]] = False                # host 0 keeps row 0, loses 3
+        with plan.to_cluster(3) as cl:      # hosts own {0,3}, {1,4}, {2,5}
+            got = np.asarray(cl.matvec(x, done))
+            rep = cl.last_report
+        np.testing.assert_array_equal(
+            got, np.asarray(plan.matvec(x, jnp.asarray(done))))
+        assert rep.partial_workers == (0, 1)
+
+    def test_matmat_patterns(self, sparse_operand):
+        A, _ = sparse_operand
+        rng = np.random.default_rng(6)
+        B = jnp.asarray(rng.standard_normal((A.shape[0], 24)), jnp.float32)
+        n, ka, kb = 6, 2, 2
+        plan = compile_plan(A, scheme="proposed", n=n, k_A=ka, k_B=kb,
+                            backend="packed")
+        with plan.to_cluster() as cl:
+            for done in itertools.islice(all_straggler_masks(n, 2), 6):
+                want = np.asarray(plan.matmat(B, jnp.asarray(done)))
+                got = np.asarray(cl.matmat(B, done))
+                np.testing.assert_array_equal(got, want)
+            got = np.asarray(cl.matmat(B))          # race mode
+        np.testing.assert_allclose(got, np.asarray(A.T @ B), **TOL)
+
+    def test_race_mode_with_faults(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        faults = StragglerFaults(time_scale=2e-3, seed=11)
+        with plan.to_cluster(faults=faults) as cl:
+            for _ in range(4):
+                got = np.asarray(cl.matvec(x))
+                np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+                assert cl.last_report.n_done >= plan.k
+
+    def test_matvec_1d_and_aggregation_only_errors(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with plan.to_cluster() as cl:
+            got = np.asarray(cl.matvec(x[0]))
+            assert got.shape == (plan.r,)
+            with pytest.raises(ValueError, match="matmat needs an mm"):
+                cl.matmat(x)
+            with pytest.raises(ValueError, match="need at least k"):
+                cl.matvec(x, np.zeros(6, bool))
+        agg = compile_plan(scheme="proposed", n=6, s=2)
+        with agg.to_cluster() as cl:
+            with pytest.raises(ValueError, match="aggregation-only"):
+                cl.matvec(x)
+
+    def test_aggregate_parity_and_race(self):
+        rng = np.random.default_rng(7)
+        plan = compile_plan(scheme="proposed", n=6, s=2, seed=1)
+        k = plan.k
+        # consistent coded payloads (payload_i = sum_q G[i,q] g_q):
+        # only then is the decode row-set independent, which is what
+        # race mode exercises (arrival order picks the rows)
+        G = np.asarray(plan.G, np.float32)
+        grads = [rng.standard_normal((4, 3)).astype(np.float32)
+                 for _ in range(k)]
+        payloads = [{"g": jnp.asarray(
+            sum(G[i, q] * grads[q] for q in range(k)))} for i in range(6)]
+        total = np.sum(grads, axis=0)
+        done = np.ones(6, bool)
+        done[2] = False
+        want = np.asarray(plan.aggregate(payloads, jnp.asarray(done))["g"])
+        with plan.to_cluster() as cl:
+            got = np.asarray(cl.aggregate(payloads, done)["g"])
+            np.testing.assert_allclose(got, want, **TOL)
+            raced = np.asarray(cl.aggregate(payloads)["g"])
+        np.testing.assert_allclose(raced, total, **TOL)
+
+    def test_coded_aggregator_cluster_mode(self):
+        from repro.parallel.coded_grads import CodedAggregator
+
+        rng = np.random.default_rng(8)
+        agg = CodedAggregator.build(6, 2, seed=1)
+        k = agg.scheme.k_A
+        shard_grads = [{"w": jnp.asarray(rng.standard_normal((3, 2)),
+                                         jnp.float32)} for _ in range(k)]
+        payloads = [agg.worker_payload(i, shard_grads) for i in range(6)]
+        done = np.ones(6, bool)
+        done[5] = False
+        want = np.asarray(agg.aggregate(payloads, jnp.asarray(done))["w"])
+        with agg.to_cluster() as cl:
+            got = np.asarray(agg.aggregate(payloads, done, cluster=cl)["w"])
+        np.testing.assert_allclose(got, want, **TOL)
+        total = np.sum([np.asarray(g["w"], np.float32)
+                        for g in shard_grads], axis=0)
+        np.testing.assert_allclose(got, total, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Fail-stop, requeue, deadlines, process backend
+# ---------------------------------------------------------------------------
+
+
+class TestFailStopAndTransports:
+    def test_failstop_requeues_and_recovers(self, sparse_operand):
+        A, x = sparse_operand
+        n, k = 6, 5
+        plan = compile_plan(A, scheme="proposed", n=n, s=n - k,
+                            backend="packed")
+        # two deaths leave 4 live hosts < k: decode NEEDS the requeue
+        with plan.to_cluster(faults=FailStop({0: 0, 3: 0})) as cl:
+            got = np.asarray(cl.matvec(x))
+            rep = cl.last_report
+            assert rep.deaths == 2
+            assert rep.requeues >= 1
+            np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+            # the cluster keeps serving on the survivors
+            got = np.asarray(cl.matvec(x))
+            assert cl.last_report.deaths == 0
+            np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+
+    def test_sequential_deaths_reship_inherited_shards(self,
+                                                       sparse_operand):
+        # worker 0 dies first; its shard is inherited by some heir.  When
+        # THAT heir later dies, its successor must receive both shards --
+        # the inherited task rows must never be stranded.
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with plan.to_cluster(faults=FailStop({0: 0, 1: 1})) as cl:
+            for i in range(4):          # worker 1 dies mid-sequence
+                got = np.asarray(cl.matvec(x))
+                np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+            assert sum(r.deaths for r in cl.reports) == 2
+
+    def test_all_workers_dead_raises(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=1,
+                            backend="packed")
+        with plan.to_cluster(faults=FailStop(
+                {w: 0 for w in range(6)})) as cl:
+            with pytest.raises(RuntimeError, match="dead"):
+                cl.matvec(x)
+
+    def test_deadline_timeout(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        slow = StragglerFaults(time_scale=30.0, seed=1)   # ~minutes/task
+        with plan.to_cluster(faults=slow, deadline=0.3) as cl:
+            with pytest.raises(TimeoutError, match="deadline"):
+                cl.matvec(x)
+
+    @pytest.mark.slow
+    def test_process_backend_parity(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        done = np.ones(6, bool)
+        done[[1, 4]] = False
+        want = np.asarray(plan.matvec(x, jnp.asarray(done)))
+        with plan.to_cluster(3, backend="process") as cl:
+            got = np.asarray(cl.matvec(x, done))
+        # same f32 BSR math on the far side of the pipe
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Fault injectors
+# ---------------------------------------------------------------------------
+
+
+class TestFaults:
+    def test_straggler_mask_matches_model(self):
+        model = AdversarialSlow(stragglers=(1, 4), slowdown=50.0)
+        done = straggler_mask(6, 2, np.random.default_rng(0), model)
+        assert not done[1] and not done[4] and done.sum() == 4
+
+    def test_per_worker_streams_deterministic(self):
+        a = StragglerFaults(time_scale=1.0, seed=3)
+        b = StragglerFaults(time_scale=1.0, seed=3)
+        da = [a.delay(w, 0, 0.5) for w in (0, 1, 0, 2)]
+        db = [b.delay(w, 0, 0.5) for w in (0, 1, 0, 2)]
+        assert da == db
+        assert all(d > 0 for d in da)
+
+    def test_spec_roundtrip(self):
+        for inj in (NoFaults(),
+                    StragglerFaults(time_scale=2e-3, seed=5),
+                    adversarial_faults([2], slowdown=7.0),
+                    FailStop({1: 2}, base=StragglerFaults(seed=9))):
+            back = from_spec(inj.to_spec())
+            assert type(back) is type(inj)
+            assert back.to_spec() == inj.to_spec()
+        assert isinstance(from_spec(None), NoFaults)
+        with pytest.raises(ValueError, match="unknown fault spec"):
+            from_spec({"kind": "nope"})
+
+    def test_failstop_predicate(self):
+        f = FailStop({0: 2})
+        assert not f.should_fail(0, 1)
+        assert f.should_fail(0, 2)
+        assert not f.should_fail(1, 99)
+        assert not f.mask(4, 1)[0]
+
+
+# ---------------------------------------------------------------------------
+# Serve-engine routing + online re-tuning
+# ---------------------------------------------------------------------------
+
+
+class TestSurfaceIntegration:
+    def test_engine_mask_routes_through_faults(self):
+        from repro.configs import get_smoke_config
+        from repro.configs.base import CodedConfig
+        from repro.models import build_model
+        from repro.serve import ServeEngine
+
+        import jax
+
+        cfg = get_smoke_config("qwen3-14b")
+        model = build_model(cfg, dtype=jnp.float32)
+        params = model.init(jax.random.key(0))
+        eng = ServeEngine(
+            model, params, cfg, batch_size=2, max_len=32,
+            coded=CodedConfig(enabled=True, n_workers=6, stragglers=2,
+                              cluster=True, cluster_workers=3),
+            faults=StragglerFaults(
+                model=AdversarialSlow(stragglers=(0, 1), slowdown=50.0)))
+        mask = np.asarray(eng._straggler_mask())
+        assert not mask[0] and not mask[1]      # the injected model decides
+        hidden = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (2, cfg.d_model)), jnp.float32)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        out = eng.coded_logits(hidden)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(hidden @ head), **TOL)
+        assert eng.coded_cluster.last_report is not None
+        eng.close()
+        assert eng.coded_cluster is None
+
+    def test_retune_follows_density(self):
+        rng = np.random.default_rng(9)
+        t, r = 256, 144
+        A_sparse = jnp.asarray(block_sparse(rng, t, r, 0.99))
+        A_dense = jnp.asarray(rng.standard_normal((t, r)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal(t), jnp.float32)
+        plan = compile_plan(A_sparse, scheme="proposed", n=6, s=2)
+        assert plan.backend == "packed"
+        assert plan.retune() == "packed"              # no drift: no-op
+        assert plan.retune(A_dense) == "reference"    # crossed down
+        np.testing.assert_allclose(np.asarray(plan.matvec(x)),
+                                   np.asarray(x @ A_dense), **TOL)
+        assert plan.retune(A_sparse) == "packed"      # crossed back up
+        np.testing.assert_allclose(np.asarray(plan.matvec(x)),
+                                   np.asarray(x @ A_sparse), **TOL)
+        agg = compile_plan(scheme="proposed", n=6, s=2)
+        with pytest.raises(ValueError, match="no operand"):
+            agg.retune()
+
+    def test_trainer_retunes_every_n_steps(self, tmp_path):
+        from repro.configs import get_smoke_config
+        from repro.data.pipeline import DataConfig, make_pipeline
+        from repro.models import build_model
+        from repro.optim.adamw import AdamWConfig
+        from repro.train import TrainConfig, Trainer
+
+        rng = np.random.default_rng(10)
+        A = jnp.asarray(block_sparse(rng, 128, 96, 0.99))
+        plan = compile_plan(A, scheme="proposed", n=6, s=2)
+        cfg = get_smoke_config("phi3-mini-3.8b")
+        model = build_model(cfg, dtype=jnp.float32)
+        dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4)
+        tr = Trainer(model, AdamWConfig(lr=1e-3, warmup_steps=2,
+                                        total_steps=4),
+                     TrainConfig(steps=4, ckpt_dir=None, retune_every=2),
+                     coded_plans=[(plan, lambda params: A)])
+        tr.fit(lambda s: make_pipeline(dcfg, s), resume=False)
+        assert [r["step"] for r in tr.retunes] == [1, 3]
+        assert all(r["backend"] == "packed" for r in tr.retunes)

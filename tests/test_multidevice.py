@@ -7,6 +7,7 @@ mesh vs the single-device reference.
 """
 
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -42,8 +43,11 @@ class TestDryRunEntrypoint:
              "whisper-tiny", "--shape", "decode_32k", "--out",
              str(tmp_path)],
             capture_output=True, text=True, timeout=560, cwd=ROOT,
+            # inherit the platform pick: a libtpu install without a TPU
+            # must not stall the dry run on TPU discovery
             env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                 "HOME": "/root"},
+                 "HOME": "/root",
+                 "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         )
         assert res.returncode == 0, res.stderr[-2000:]
         art = json.loads(
