@@ -18,12 +18,18 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
   plan            -- compile-once (repro.api.compile_plan) vs per-call
                      construction amortization -> BENCH_plan.json
   cluster         -- the paper's experiment shape over the REAL cluster
-                     runtime (repro.cluster): plans shipped to threaded
-                     workers, shifted-exponential latency injection,
-                     decode at the fastest-k task set; wall-clock +
-                     decode-latency percentiles per scheme and a
+                     runtime (repro.cluster): plans shipped over a
+                     pluggable transport (--cluster-transport
+                     memory|pipe|tcp), shifted-exponential latency
+                     injection, decode at the fastest-k task set;
+                     wall-clock + decode-latency percentiles per scheme,
+                     measured bytes-on-wire (shards once + per-task
+                     traffic, matvec and matmat; asserts the
+                     omega_B/k_B bandwidth claim) and a
                      partial-straggler exact-parity check
                      -> BENCH_cluster.json
+
+``--list`` prints the scheme registry table instead of benching.
 
 Default sizes are scaled from the paper's AWS experiment (20000x15000 /
 20000x12000) by --scale (default 0.25) to keep CPU runtime in minutes;
@@ -451,17 +457,23 @@ def plan_amortization(scale: float, seed: int = 5, reps: int = 30,
 
 
 def cluster_bench(scale: float, rounds: int = 30, seed: int = 7,
-                  json_path: str = "BENCH_cluster.json"):
+                  json_path: str = "BENCH_cluster.json",
+                  transport: str = "memory"):
     """The paper's AWS experiment shape, actually executed.
 
-    Each scheme's plan is compiled once, sharded to threaded workers
-    (``repro.cluster``), and raced ``rounds`` times under seeded
-    shifted-exponential latency injection whose delays scale with each
-    worker's nnz-proportional work.  Wall-clock is the k-th completion
-    plus decode -- measured, not simulated.  Sparsity-preserving
-    schemes (low omega -> few nonzero tiles -> small injected delay +
-    small compute) beat the dense baseline; the JSON records the
-    ordering plus a partial-straggler parity check (a host serving
+    Each scheme's plan is compiled once, sharded to cluster workers
+    (``repro.cluster``, default ``memory`` transport), and raced
+    ``rounds`` times under seeded shifted-exponential latency injection
+    whose delays scale with each worker's nnz-proportional work.
+    Wall-clock is the k-th completion plus decode -- measured, not
+    simulated.  Sparsity-preserving schemes (low omega -> few nonzero
+    tiles -> small injected delay + small compute) beat the dense
+    baseline, and since PR 4 the *wire traffic* is measured too:
+    shards ship once, each task ships only the x-blocks / coded-B
+    block-rows the worker's tiles read, and the JSON records
+    bytes-on-wire per scheme alongside the wall-clock win -- including
+    a matmat section asserting the paper's omega_B/k_B bandwidth claim.
+    Also recorded: a partial-straggler parity check (a host serving
     several virtual workers contributes a strict subset of its task
     rows, decoded bitwise-identically to the in-process plan).
     """
@@ -489,16 +501,20 @@ def cluster_bench(scale: float, rounds: int = 30, seed: int = 7,
         plan = compile_plan(A, scheme=name, n=n, s=n - k, backend="packed")
         tiles = plan.worker_tile_counts()
         with plan.to_cluster(
+                transport=transport,
                 faults=StragglerFaults(time_scale=time_scale,
                                        seed=seed)) as cl:
             out = cl.matvec(x)                      # warm workers + cache
-            walls, decs, ndone = [], [], []
+            walls, decs, ndone, tbytes, dbytes = [], [], [], [], []
             for _ in range(rounds):
                 out = cl.matvec(x)
                 rep = cl.last_report
                 walls.append(rep.wall_s)
                 decs.append(rep.decode_s)
                 ndone.append(rep.n_done)
+                tbytes.append(rep.bytes_tasks)
+                dbytes.append(rep.bytes_tasks_dense)
+            shard_bytes = cl.bytes_shards
         err = float(np.abs(np.asarray(out) - ref).max())
         walls, decs = np.asarray(walls), np.asarray(decs)
         row = {
@@ -511,24 +527,83 @@ def cluster_bench(scale: float, rounds: int = 30, seed: int = 7,
             "max_worker_tiles": int(tiles.max()),
             "weight": plan.scheme.weight(),
             "max_abs_err_vs_direct": err,
+            # bytes-on-wire: shards once, then per-call task traffic
+            # (support-restricted x-blocks vs full-operand shipping)
+            "bytes_shards": int(shard_bytes),
+            "bytes_tasks_per_call": float(np.mean(tbytes)),
+            "bytes_tasks_dense_per_call": float(np.mean(dbytes)),
+            "task_traffic_vs_dense": float(np.mean(tbytes)
+                                           / max(np.mean(dbytes), 1)),
         }
         results[name] = row
         emit(f"cluster/{name}", row["wall_p50_s"] * 1e6,
              f"p99_s={row['wall_p99_s']:.4f};tiles={int(tiles.max())};"
-             f"decoded_from={row['mean_tasks_decoded']:.1f}")
+             f"decoded_from={row['mean_tasks_decoded']:.1f};"
+             f"task_kB={row['bytes_tasks_per_call'] / 1e3:.1f}")
 
     ordering = {
         "proposed_speedup_vs_poly":
             results["poly"]["wall_p50_s"] / results["proposed"]["wall_p50_s"],
         "cyclic31_speedup_vs_poly":
             results["poly"]["wall_p50_s"] / results["cyclic31"]["wall_p50_s"],
+        "proposed_task_bytes_vs_poly":
+            results["proposed"]["bytes_tasks_per_call"]
+            / results["poly"]["bytes_tasks_per_call"],
     }
     ordering["sparse_beats_dense"] = bool(
         ordering["proposed_speedup_vs_poly"] > 1.0
         and ordering["cyclic31_speedup_vs_poly"] > 1.0)
     emit("cluster/ordering", 0.0,
          f"proposed_vs_poly={ordering['proposed_speedup_vs_poly']:.2f}x;"
-         f"cyclic31_vs_poly={ordering['cyclic31_speedup_vs_poly']:.2f}x")
+         f"cyclic31_vs_poly={ordering['cyclic31_speedup_vs_poly']:.2f}x;"
+         f"task_bytes_vs_poly="
+         f"{ordering['proposed_task_bytes_vs_poly']:.2f}x")
+
+    # matmat wire traffic: the omega_B/k_B bandwidth claim, measured.
+    # Tasks ship only the nonzero coded-B block-rows in the worker's
+    # tile support; proposed (omega_B < k_B) must come in under
+    # 1.1 x (omega_B / k_B) of the dense-slab shipping it replaced.
+    w_cols = max(int(1728 * scale) // 72 * 72, 72)
+    mask_b = rng.random((t // 8, w_cols // 8)) >= zeros
+    B = jnp.asarray((rng.standard_normal((t, w_cols)) *
+                     np.kron(mask_b, np.ones((8, 8)))).astype(np.float32))
+    ref_mm = np.asarray(A.T @ B)
+    mm = {}
+    for name in ("proposed", "poly"):
+        plan = compile_plan(A, scheme=name, n=12, k_A=3, k_B=3,
+                            backend="packed")
+        with plan.to_cluster(transport=transport) as cl:
+            out = cl.matmat(B)
+            rep = cl.last_report
+        mm[name] = {
+            "scheme": name,
+            "omega_B": plan.scheme.omega_B, "k_B": plan.scheme.k_B,
+            "bytes_tasks_per_task":
+                rep.bytes_tasks / max(rep.n_dispatched, 1),
+            "bytes_dense_per_task":
+                rep.bytes_tasks_dense / max(rep.n_dispatched, 1),
+            "max_abs_err_vs_direct":
+                float(np.abs(np.asarray(out) - ref_mm).max()),
+        }
+    omega_ratio = mm["proposed"]["omega_B"] / mm["proposed"]["k_B"]
+    traffic_ratio = (mm["proposed"]["bytes_tasks_per_task"]
+                     / mm["proposed"]["bytes_dense_per_task"])
+    matmat_traffic = {
+        "schemes": list(mm.values()),
+        "omega_ratio": omega_ratio,
+        "proposed_traffic_vs_dense_shipping": traffic_ratio,
+        "proposed_vs_poly_bytes":
+            mm["proposed"]["bytes_tasks_per_task"]
+            / mm["poly"]["bytes_tasks_per_task"],
+        "meets_omega_bound": bool(traffic_ratio <= 1.1 * omega_ratio),
+    }
+    assert matmat_traffic["meets_omega_bound"], (
+        f"matmat task traffic {traffic_ratio:.3f} of dense exceeds "
+        f"1.1 x omega_B/k_B = {1.1 * omega_ratio:.3f}")
+    emit("cluster/matmat_traffic", 0.0,
+         f"vs_dense={traffic_ratio:.3f};omega_ratio={omega_ratio:.3f};"
+         f"vs_poly={matmat_traffic['proposed_vs_poly_bytes']:.2f}x;"
+         f"meets_omega_bound={matmat_traffic['meets_omega_bound']}")
 
     # partial-straggler parity: 4 physical hosts serve the 12 virtual
     # workers; host 0 (virtual rows 0, 4, 8) finishes only row 0 --
@@ -555,9 +630,10 @@ def cluster_bench(scale: float, rounds: int = 30, seed: int = 7,
         "config": {"n": n, "k": k, "t": t, "r": r, "batch": b,
                    "zeros": zeros, "rounds": rounds, "seed": seed,
                    "time_scale_s": time_scale, "backend": "packed",
-                   "worker_backend": "thread"},
+                   "transport": transport},
         "results": list(results.values()),
         "ordering": ordering,
+        "matmat_traffic": matmat_traffic,
         "partial_parity": partial,
     }
     with open(json_path, "w") as fh:
@@ -577,7 +653,18 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--cluster-rounds", type=int, default=30,
                     help="dispatched rounds per scheme in the cluster bench")
+    ap.add_argument("--cluster-transport", default="memory",
+                    choices=("memory", "pipe", "tcp"),
+                    help="cluster transport for the cluster bench")
+    ap.add_argument("--list", action="store_true",
+                    help="print the scheme registry table and exit")
     args = ap.parse_args()
+
+    if args.list:
+        from repro.api.__main__ import format_scheme_table  # noqa: PLC0415
+
+        print(format_scheme_table())
+        return
 
     benches = {
         "table2": lambda: table2_worker(args.scale),
@@ -588,8 +675,9 @@ def main() -> None:
         "decode": lambda: decode_overhead(args.scale),
         "runtime": lambda: runtime_backends(args.scale),
         "plan": lambda: plan_amortization(args.scale),
-        "cluster": lambda: cluster_bench(args.scale,
-                                         rounds=args.cluster_rounds),
+        "cluster": lambda: cluster_bench(
+            args.scale, rounds=args.cluster_rounds,
+            transport=args.cluster_transport),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -223,22 +223,29 @@ class CodedPlan:
     # -- distribution ------------------------------------------------------
 
     def to_cluster(self, n_workers: int | None = None, *,
-                   backend: str = "thread", faults=None,
-                   deadline: float | None = None):
+                   transport: str | None = None, backend: str | None = None,
+                   faults=None, deadline: float | None = None, **kw):
         """Serve this plan from real workers (``repro.cluster``).
 
         Returns a ``ClusterPlan`` with the same ``matvec / matmat /
         aggregate`` signatures; per-worker ``PlanShard``s are shipped
         once at construction and every call dispatches tasks, collects
         results asynchronously and decodes at the fastest-k task set.
-        ``n_workers`` < n hosts several virtual workers per physical
-        one (the partial-straggler setting).  Shut the cluster down
-        (``with`` block or ``.shutdown()``) when done.
+        ``transport`` picks the byte carrier (``memory`` | ``pipe`` |
+        ``tcp``; default: the ``REPRO_CLUSTER_TRANSPORT`` env var, then
+        ``memory``) -- ``backend=`` is the legacy worker-backend
+        spelling (``thread``/``process``).  ``n_workers`` < n hosts
+        several virtual workers per physical one (the partial-straggler
+        setting).  Extra keywords (``heartbeat_s``, ``suspect_after``)
+        tune the liveness protocol.  Shut the cluster down (``with``
+        block or ``.shutdown()``) when done -- the transport owns real
+        sockets/processes/threads.
         """
         from ..cluster import ClusterPlan  # noqa: PLC0415 - optional layer
 
-        return ClusterPlan(self, n_workers, backend=backend, faults=faults,
-                           deadline=deadline)
+        return ClusterPlan(self, n_workers, transport=transport,
+                           backend=backend, faults=faults,
+                           deadline=deadline, **kw)
 
     # -- online re-tuning --------------------------------------------------
 

@@ -1,36 +1,55 @@
-"""Cluster runtime: ship compiled plans to workers, measure real
-straggler mitigation.
+"""Cluster runtime: ship compiled plans to workers over pluggable
+transports, measure real straggler mitigation.
 
 The simulator (`repro.core.straggler`) predicts coded-job wall-clock;
 this package *produces* it.  ``compile_plan(...).to_cluster()`` turns a
 precompiled ``CodedPlan`` into a ``ClusterPlan`` with the same
 ``matvec / matmat / aggregate`` surface, backed by real workers:
 
-  * ``wire``       -- versioned plan / shard / task / result serialization
-    (dtype-faithful, pickle-free);
-  * ``worker``     -- thread- and subprocess-backed workers that hold BSR
-    shards and serve tasks at nnz-proportional cost;
-  * ``dispatcher`` -- the async edge-server loop: broadcast, collect as
-    results arrive, decode at the fastest-k task set, partial-straggler
-    credit, deadlines, fail-stop requeue;
-  * ``faults``     -- reproducible latency / death injection reusing the
-    ``core.straggler`` models, so a threaded run on one machine behaves
-    like the paper's straggly AWS fleet.
+  * ``wire``       -- versioned plan / shard / task / result / heartbeat
+    serialization (dtype-faithful, pickle-free), with support-restricted
+    task payloads so per-task traffic is omega/k-proportional;
+  * ``worker``     -- the transport-agnostic worker core: one serve loop
+    + heartbeat ticker shared by every transport, BSR compute at
+    nnz-proportional cost;
+  * ``transport``  -- the pluggable byte carriers: ``memory`` (in-process
+    threads), ``pipe`` (spawned subprocesses), ``tcp`` (asyncio localhost
+    sockets with a version/digest handshake); pick via
+    ``to_cluster(transport=...)``, ``CodedConfig.transport``, or the
+    ``REPRO_CLUSTER_TRANSPORT`` env var;
+  * ``dispatcher`` -- the async edge-server loop: broadcast, collect the
+    uniform result/heartbeat stream, decode at the fastest-k task set,
+    partial-straggler credit, deadlines, and heartbeat-derived liveness
+    (missed beats => suspected => shard re-ship + requeue);
+  * ``faults``     -- deterministic latency / death / hang injection as a
+    decorator around any transport's serve path (it *causes* behaviour
+    the protocol then *measures*; liveness never reads it).
 
 ``python benchmarks/run.py --only cluster`` runs the paper-shaped
-experiment over this stack and writes ``BENCH_cluster.json``.
+experiment over this stack and writes ``BENCH_cluster.json`` --
+including measured bytes-on-wire per scheme.
 """
 
 from .dispatcher import ClusterPlan, ClusterReport  # noqa: F401
 from .faults import (  # noqa: F401
     FailStop,
+    Hang,
     NoFaults,
     StragglerFaults,
     WorkerFailure,
+    WorkerHang,
     adversarial_faults,
+    faulty,
     straggler_mask,
 )
+from .transport import (  # noqa: F401
+    TRANSPORTS,
+    Transport,
+    make_transport,
+    resolve_transport,
+)
 from .wire import (  # noqa: F401
+    Heartbeat,
     PlanShard,
     Task,
     TaskResult,
@@ -38,4 +57,4 @@ from .wire import (  # noqa: F401
     loads_plan,
     shard_plan,
 )
-from .worker import WORKER_BACKENDS, ProcessWorker, ThreadWorker  # noqa: F401
+from .worker import ShardRuntime, serve_loop, start_heartbeat  # noqa: F401

@@ -3,36 +3,45 @@
 ``ClusterPlan`` is the distributed twin of an in-process ``CodedPlan``:
 same ``matvec / matmat / aggregate`` signatures, but each call actually
 ships work to workers and the done pattern is *observed*, not given.
-The coordinator is an asyncio event loop per call:
+The dispatcher is written against the ``Transport`` interface
+(``repro.cluster.transport``: memory | pipe | tcp) and cannot tell
+which one it runs over; the coordinator is an asyncio event loop per
+call:
 
-  * tasks go out to every (live) worker owning a target row;
-  * results stream back on a shared queue; after each arrival the
-    dispatcher re-checks decodability and decodes **as soon as any
-    fastest-k task set completes** -- stragglers' leftovers are
-    cancelled, not awaited (this is where coded computation beats
-    wait-for-all);
+  * tasks go out to every (live) worker owning a target row -- with
+    **support-restricted payloads**: a matvec ships only the x-blocks
+    the worker's nonzero tiles read, a matmat only the nonzero coded-B
+    block-rows in that support, so per-task wire traffic scales with
+    omega/k of the dense scheme's (the paper's communication claim,
+    measured as ``bytes_tasks`` per call);
+  * results AND heartbeats stream back on one uniform transport queue;
+    the dispatcher decodes **as soon as any fastest-k task set
+    completes** -- stragglers' leftovers are cancelled, not awaited;
+  * **liveness is measured, not injected**: a worker that misses
+    heartbeats for ``suspect_after`` seconds while owning outstanding
+    rows is *suspected* and handled as fail-stop -- its shard is
+    re-shipped to a live host and its rows requeued -- exactly like an
+    explicit death notice or a dropped connection.  Fault injection
+    (``repro.cluster.faults``) only *causes* such behaviour for
+    deterministic tests; the protocol never reads it;
   * **partial-straggler credit**: completions are per *task row*, so a
     slow host serving several virtual workers contributes the rows it
-    finished (Sec. IV-B's partial stragglers) -- the decode pattern can
-    include a strict subset of a worker's rows;
-  * deadlines bound each call; worker death (fail-stop) triggers
-    requeue: the dead host's shard is re-shipped to a live host and its
-    outstanding rows resubmitted;
-  * decode reuses the plan's LRU cache keyed on the observed pattern --
-    a recurring pattern never pays a second k x k solve -- with a
-    greedy independent-row fallback for patterns whose first-k rows are
-    singular (repetition codes).
+    finished (Sec. IV-B) -- the decode pattern can include a strict
+    subset of a worker's rows;
+  * decode reuses the plan's LRU cache keyed on the observed pattern,
+    with a greedy independent-row fallback for patterns whose first-k
+    rows are singular (repetition codes).
 
 Passing an explicit ``done=`` mask switches a call to parity mode: only
 those rows are dispatched and the decode uses exactly that pattern, so
 the result is bitwise the in-process packed backend's (the acceptance
-check for the whole wire/worker/dispatcher stack).
+check for the whole wire/worker/dispatcher stack, on all three
+transports).
 """
 
 from __future__ import annotations
 
 import asyncio
-import queue
 import threading
 import time
 from collections import deque
@@ -40,10 +49,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .wire import Task, plan_packed, shard_plan
-from .worker import WORKER_BACKENDS
+from .transport import make_transport
+from .wire import Heartbeat, Task, plan_packed, shard_plan
 
-_POLL_S = 0.02          # result-queue poll slice inside the event loop
+_POLL_S = 0.02          # event-queue poll slice inside the event loop
 
 
 @dataclass
@@ -60,8 +69,12 @@ class ClusterReport:
     pattern: np.ndarray | None = None       # observed task-done mask
     rows: np.ndarray | None = None          # rows actually decoded from
     deaths: int = 0
+    suspected: int = 0         # liveness: missed-heartbeat fail-stops
     requeues: int = 0
     deadline_hit: bool = False
+    bytes_tasks: int = 0       # task frames actually put on the wire
+    bytes_results: int = 0     # result payload bytes received
+    bytes_tasks_dense: int = 0  # what full-operand shipping would have cost
     completed_per_worker: dict = field(default_factory=dict)
     partial_workers: tuple[int, ...] = ()   # hosts with 0 < done < owned
     worker_work: dict = field(default_factory=dict)
@@ -71,8 +84,11 @@ class ClusterReport:
             "op": self.op, "round": self.round, "wall_s": self.wall_s,
             "decode_s": self.decode_s, "n_tasks": self.n_tasks,
             "n_dispatched": self.n_dispatched, "n_done": self.n_done,
-            "deaths": self.deaths, "requeues": self.requeues,
-            "deadline_hit": self.deadline_hit,
+            "deaths": self.deaths, "suspected": self.suspected,
+            "requeues": self.requeues, "deadline_hit": self.deadline_hit,
+            "bytes_tasks": self.bytes_tasks,
+            "bytes_results": self.bytes_results,
+            "bytes_tasks_dense": self.bytes_tasks_dense,
             "partial_workers": list(self.partial_workers),
         }
 
@@ -95,34 +111,35 @@ class ClusterPlan:
 
     Build via ``CodedPlan.to_cluster(...)`` or from shipped bytes via
     ``ClusterPlan.from_bytes(...)``.  Use as a context manager or call
-    ``shutdown()`` -- worker threads/processes are real resources.
+    ``shutdown()`` -- worker threads/processes/sockets are real
+    resources and the transport owns them.
     """
 
     def __init__(self, plan, n_workers: int | None = None, *,
-                 backend: str = "thread", faults=None,
-                 deadline: float | None = None):
-        if backend not in WORKER_BACKENDS:
-            raise ValueError(f"worker backend must be one of "
-                             f"{sorted(WORKER_BACKENDS)}, got {backend!r}")
+                 transport: str | None = None, backend: str | None = None,
+                 faults=None, deadline: float | None = None,
+                 heartbeat_s: float = 0.25,
+                 suspect_after: float | None = None):
         self.plan = plan
-        self.worker_backend = backend
         self.deadline = deadline
         self.n_tasks = plan.n_tasks
         self.k = plan.k
+        self.heartbeat_s = heartbeat_s
+        self.suspect_after = suspect_after if suspect_after is not None \
+            else max(8 * heartbeat_s, 2.0)
         self.packed = plan_packed(plan)
         shards = shard_plan(plan, n_workers, packed=self.packed)
         self.n_workers = len(shards)
-        self._shard_bytes = [s.encode() for s in shards]
+        self._load_shards(shards)
         self._owner = {row: s.worker for s in shards for row in s.task_rows}
         self._home = dict(self._owner)          # original assignment
-        self._work = {row: s.work[j] for s in shards
-                      for j, row in enumerate(s.task_rows)}
-        self._results: queue.Queue = queue.Queue()
-        cls = WORKER_BACKENDS[backend]
-        self._workers = [cls(s.worker, self._results, faults=faults)
-                         for s in shards]
-        for w, blob in zip(self._workers, self._shard_bytes):
-            w.send_shard(blob)
+        # backend= is the legacy worker-backend spelling (thread|process)
+        self.transport = make_transport(
+            transport if transport is not None else backend,
+            self.n_workers, faults=faults, heartbeat_s=heartbeat_s)
+        self.transport_name = self.transport.name
+        self.bytes_shards = self.transport.start(self._shard_bytes)
+        self.bytes_tasks_total = 0
         # which shard blobs each host currently holds: a host that
         # inherited a dead peer's shard holds two, and its own heir
         # must receive BOTH when it dies in turn
@@ -145,11 +162,10 @@ class ClusterPlan:
         if self._closed:
             return
         self._closed = True
-        for w in self._workers:
-            try:
-                w.stop()
-            except Exception:  # pragma: no cover - teardown best-effort
-                pass
+        try:
+            self.transport.close()
+        except Exception:  # pragma: no cover - teardown best-effort
+            pass
 
     def __enter__(self) -> "ClusterPlan":
         return self
@@ -167,7 +183,26 @@ class ClusterPlan:
     def last_report(self) -> ClusterReport | None:
         return self.reports[-1] if self.reports else None
 
+    def wire_totals(self) -> dict:
+        """Cumulative bytes-on-wire: shards (shipped once, plus any
+        re-shipping) and per-task traffic across all rounds."""
+        return {"transport": self.transport_name,
+                "bytes_shards": self.bytes_shards,
+                "bytes_tasks_total": self.bytes_tasks_total}
+
     # -- helpers -----------------------------------------------------------
+
+    def _load_shards(self, shards) -> None:
+        """(Re)derive the per-task wire state from freshly cut shards:
+        encoded blobs, work units, and the input column supports (the
+        only x-blocks / coded-B block-rows a task needs shipped --
+        omega/k-proportional traffic)."""
+        self._shard_bytes = [s.encode() for s in shards]
+        self._work = {row: s.work[j] for s in shards
+                      for j, row in enumerate(s.task_rows)}
+        self._support = {row: np.asarray(s.supports[j], np.int64)
+                         for s in shards if s.supports
+                         for j, row in enumerate(s.task_rows)}
 
     def _task_mask(self, done) -> np.ndarray | None:
         if done is None:
@@ -180,14 +215,17 @@ class ClusterPlan:
 
     def _live(self) -> list[int]:
         return [w for w in range(self.n_workers)
-                if w not in self._dead and self._workers[w].alive]
+                if w not in self._dead and self.transport.alive(w)]
 
-    def _submit(self, row: int, task: Task, inflight: dict) -> None:
-        self._workers[self._owner[row]].submit(task)
+    def _submit(self, row: int, task: Task, inflight: dict,
+                report: ClusterReport) -> None:
+        sent = self.transport.submit(self._owner[row], task)
+        report.bytes_tasks += sent
+        self.bytes_tasks_total += sent
         inflight[row] = self._owner[row]
 
     def _requeue(self, dead_worker: int, inflight: dict, missing,
-                 make_task) -> int:
+                 make_task, report: ClusterReport) -> int:
         """Re-home a dead worker's rows; resubmit its outstanding ones."""
         self._dead.add(dead_worker)
         live = self._live()
@@ -200,7 +238,8 @@ class ClusterPlan:
         # re-ship every shard the dead host held -- its own AND any it
         # previously inherited (a second death must not strand those)
         for idx in self._held.pop(dead_worker, {dead_worker}):
-            self._workers[heir].send_shard(self._shard_bytes[idx])
+            self.bytes_shards += self.transport.ship_shard(
+                heir, self._shard_bytes[idx])
             self._held[heir].add(idx)
         moved = 0
         for row, owner in list(self._owner.items()):
@@ -209,22 +248,73 @@ class ClusterPlan:
         for row in missing:
             row = int(row)          # json-safe task ids on the wire
             if inflight.get(row) == dead_worker:
-                self._submit(row, make_task(row), inflight)
+                self._submit(row, make_task(row), inflight, report)
                 moved += 1
         return moved
+
+    def reship(self) -> int:
+        """Re-shard the (re-compiled) plan and re-ship every worker's
+        shard to its current holder.
+
+        ``plan.retune`` swaps the executor's packed state when the
+        operand drifts; the workers' BSR task tables are then stale.
+        The trainer calls this after a retune that recompiled (see
+        ``Trainer coded_plans=``).  Returns bytes shipped.
+        """
+        if self._closed:
+            raise RuntimeError("cluster has been shut down")
+        self.packed = plan_packed(self.plan)
+        shards = shard_plan(self.plan, self.n_workers, packed=self.packed)
+        self._load_shards(shards)
+        sent = 0
+        for host, idxs in self._held.items():
+            if host in self._dead:
+                continue
+            for idx in idxs:
+                sent += self.transport.ship_shard(host,
+                                                  self._shard_bytes[idx])
+        self.bytes_shards += sent
+        return sent
+
+    def _restricted_payload(self, row: int, b_op: np.ndarray) -> dict:
+        """Support-restricted task payload (see module docstring): only
+        the nonzero b block-rows the worker's tiles read are shipped;
+        the worker scatters them back, bitwise-equivalent to dense."""
+        sup = self._support.get(row)
+        packed = self.packed
+        kb = packed.t_pad // packed.bk
+        if sup is None or len(sup) >= kb:
+            return {"b": b_op}
+        blocks = b_op.reshape(kb, packed.bk, b_op.shape[1])
+        # drop support rows where this call's operand is exactly zero
+        # (a sparse coded-B chunk): zero rows contribute nothing.  The
+        # test must treat NaN/inf as nonzero (!= 0 is True for NaN) so
+        # a poisoned operand still propagates instead of being dropped
+        nz = (blocks[sup] != 0).any(axis=(1, 2))
+        sel = sup[nz]
+        bx = blocks[sel].reshape(len(sel) * packed.bk, b_op.shape[1])
+        return {"bx": np.ascontiguousarray(bx), "bi": sel.astype(np.int32)}
 
     # -- the collection loop ----------------------------------------------
 
     async def _collect(self, round_id: int, target: np.ndarray,
                        inflight: dict, make_task, wait_all: bool,
                        deadline: float | None, report: ClusterReport):
-        """Gather results until decodable (race) or all-target (parity)."""
+        """Gather results until decodable (race) or all-target (parity).
+
+        Consumes the transport's uniform event stream: results advance
+        the pattern, heartbeats advance liveness, deaths (explicit
+        notices, dropped connections, or heartbeat-timeout suspicion)
+        trigger shard re-shipping + requeue.
+        """
         loop = asyncio.get_running_loop()
-        t_end = None if deadline is None else time.perf_counter() + deadline
+        t_start = time.perf_counter()
+        t_end = None if deadline is None else t_start + deadline
         results: dict[int, dict] = {}
         order: list[int] = []            # completion order of task rows
         cache = self.plan._decode_cache()
         G = np.asarray(cache._G)
+        beats = {w: t_start for w in self._live()}
 
         def decodable():
             if len(results) < self.k:
@@ -246,17 +336,35 @@ class ClusterPlan:
                 hinv = np.linalg.inv(G[rows]).astype(np.float32)
                 return mask, rows, hinv
 
-        def poll(timeout):
-            try:
-                return self._results.get(timeout=timeout)
-            except queue.Empty:
-                return None
+        def fail_worker(worker: int, cause: str) -> None:
+            if worker in self._dead:
+                return                    # notices are idempotent
+            if cause == "suspected":
+                report.suspected += 1
+            else:
+                report.deaths += 1
+            missing = [r for r in np.flatnonzero(target) if r not in results]
+            report.requeues += self._requeue(worker, inflight, missing,
+                                             make_task, report)
+            beats.pop(worker, None)
 
         while True:
             dec = decodable()
             if dec is not None:
                 break
-            remaining = None if t_end is None else t_end - time.perf_counter()
+            now = time.perf_counter()
+            # heartbeat-driven suspicion: a worker we are waiting on
+            # that has gone silent is handled exactly like fail-stop
+            waiting_on = {inflight.get(int(r)) for r in np.flatnonzero(target)
+                          if int(r) not in results}
+            for w, seen in list(beats.items()):
+                if now - seen <= self.suspect_after:
+                    continue
+                if w in waiting_on:
+                    fail_worker(w, "suspected")
+                else:
+                    beats[w] = now       # idle worker: fresh grace period
+            remaining = None if t_end is None else t_end - now
             if remaining is not None and remaining <= 0:
                 report.deadline_hit = True
                 if not wait_all:
@@ -273,16 +381,16 @@ class ClusterPlan:
                     f"after {deadline}s")
             slice_s = _POLL_S if remaining is None \
                 else min(_POLL_S, max(remaining, 1e-4))
-            res = await loop.run_in_executor(None, poll, slice_s)
+            res = await loop.run_in_executor(None, self.transport.poll,
+                                             slice_s)
             if res is None:
                 continue
+            if isinstance(res, Heartbeat):
+                if res.worker not in self._dead:
+                    beats[res.worker] = time.perf_counter()
+                continue
             if res.kind == "death":
-                if res.worker not in self._dead:    # notices are idempotent
-                    report.deaths += 1
-                    missing = [r for r in np.flatnonzero(target)
-                               if r not in results]
-                    report.requeues += self._requeue(
-                        res.worker, inflight, missing, make_task)
+                fail_worker(res.worker, "death")
                 continue
             if res.round != round_id:
                 continue                      # stale round, already decoded
@@ -293,6 +401,8 @@ class ClusterPlan:
                 continue
             results[res.task_row] = res.arrays
             order.append(res.task_row)
+            report.bytes_results += sum(int(a.nbytes)
+                                        for a in res.arrays.values())
             report.completed_per_worker[res.worker] = \
                 report.completed_per_worker.get(res.worker, 0) + 1
             report.worker_work[res.worker] = \
@@ -329,7 +439,8 @@ class ClusterPlan:
         return box["value"]
 
     def _run_round(self, op: str, target: np.ndarray, make_task,
-                   wait_all: bool, deadline: float | None):
+                   wait_all: bool, deadline: float | None,
+                   dense_payload_bytes: int = 0):
         if self._closed:
             raise RuntimeError("cluster has been shut down")
         if int(target.sum()) < self.k:
@@ -340,22 +451,34 @@ class ClusterPlan:
         report = ClusterReport(op=op, round=round_id, n_tasks=self.n_tasks,
                                n_dispatched=int(target.sum()))
         t0 = time.perf_counter()
+        # between-rounds hygiene: deaths that surfaced while idle are
+        # handled before dispatching into a void (beats are re-stamped
+        # at collect start, so stale queued ones are simply dropped)
+        for ev in self.transport.drain():
+            if isinstance(ev, Heartbeat):
+                continue
+            if ev.kind == "death" and ev.worker not in self._dead:
+                report.deaths += 1
+                report.requeues += self._requeue(ev.worker, {}, [],
+                                                 make_task, report)
         inflight: dict[int, int] = {}
         for row in np.flatnonzero(target):
             owner = self._owner[int(row)]
-            if owner not in self._dead and not self._workers[owner].alive:
-                # owner died between rounds (notice still queued):
+            if owner not in self._dead and not self.transport.alive(owner):
+                # owner died between rounds (no notice seen yet):
                 # re-home before dispatching into a void
                 report.deaths += 1
                 report.requeues += self._requeue(owner, inflight, [],
-                                                 make_task)
-            self._submit(int(row), make_task(int(row)), inflight)
+                                                 make_task, report)
+            self._submit(int(row), make_task(int(row)), inflight, report)
         results, rows, hinv = self._run_coordinator(self._collect(
             round_id, target, inflight, make_task, wait_all,
             self.deadline if deadline is None else deadline, report))
         if not wait_all:
             for w in self._live():
-                self._workers[w].cancel(round_id)
+                self.transport.cancel(w, round_id)
+        report.bytes_tasks_dense = dense_payload_bytes * \
+            max(report.n_dispatched + report.requeues, 1)
         # partial-straggler accounting: hosts whose decode-time credit is
         # a strict subset of the task rows they were assigned (Sec. IV-B:
         # a strong-but-slow device contributes the rows it finished)
@@ -392,9 +515,10 @@ class ClusterPlan:
         target = self._target(done)
         make_task = lambda row: Task(     # noqa: E731
             round=self._round, op="matvec", task_row=row,
-            payload={"b": b_op}, meta={"b": b})
+            payload=self._restricted_payload(row, b_op), meta={"b": b})
         results, rows, hinv, report = self._run_round(
-            "matvec", target, make_task, wait_all=done is not None, deadline=deadline)
+            "matvec", target, make_task, wait_all=done is not None,
+            deadline=deadline, dense_payload_bytes=int(b_op.nbytes))
 
         t_dec = time.perf_counter()
         y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])
@@ -408,7 +532,9 @@ class ClusterPlan:
 
     def matmat(self, B, done=None, *, deadline: float | None = None):
         """A^T B through paired coded operands, workers doing the
-        per-worker products."""
+        per-worker products.  Each task ships only the nonzero coded-B
+        block-rows in the worker's tile support -- the omega_B/k_B
+        bandwidth claim, measured per call."""
         import jax.numpy as jnp  # noqa: PLC0415
 
         from ..core.coded_matmul import split_block_columns  # noqa: PLC0415
@@ -434,12 +560,14 @@ class ClusterPlan:
             b_op = np.zeros((packed.t_pad, cb), np.float32)
             b_op[: packed.t] = b_np[row, : packed.t]
             return Task(round=self._round, op="matmat", task_row=row,
-                        payload={"b": b_op}, meta={"cb": cb})
+                        payload=self._restricted_payload(row, b_op),
+                        meta={"cb": cb})
 
         target = self._target(done)
         results, rows, hinv, report = self._run_round(
             "matmat", target, make_task, wait_all=done is not None,
-            deadline=deadline)
+            deadline=deadline,
+            dense_payload_bytes=int(packed.t_pad * cb * 4))
 
         t_dec = time.perf_counter()
         y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])

@@ -1,13 +1,17 @@
-"""Pluggable fault / latency injection for real (threaded) cluster runs.
+"""Fault injection as a *decorator* around any transport's serve path.
 
 The paper's AWS experiments observe stragglers from heterogeneous t2
 instances and network congestion; ``repro.core.straggler`` models them
 statistically (shifted-exponential, adversarial-slow).  This module
-turns those *simulation* models into *injectors* for the live cluster
-runtime: a worker asks its injector how long the current task should
-take and sleeps the difference, so a threaded run on one machine is
-reproducibly as straggly as the model says -- and the wall-clock the
-dispatcher measures is real, not simulated.
+turns those *simulation* models into deterministic injectors, applied
+by ``faulty(faults)`` -- a decorator every transport wraps around its
+raw task-serve function (thread, pipe and tcp workers all call the
+same wrapped function).  The live runtime's liveness protocol
+(heartbeats, suspicion, requeue) never consults this module: faults
+only *cause* behaviour (latency, fail-stop death, silent hangs) that
+the dispatcher then *measures*, which is what keeps threaded CI runs
+reproducibly as straggly as the model says while the measured
+wall-clock stays real.
 
 Two properties matter for reproducibility:
 
@@ -17,14 +21,18 @@ Two properties matter for reproducibility:
     which is exactly how sparsity preservation becomes wall-clock gain.
 
 ``FailStop`` layers deterministic worker death on top of any latency
-model (the dispatcher's requeue path is tested against it).  All
-injectors round-trip through ``to_spec()`` / ``from_spec()`` (plain
-json-able dicts) so the subprocess worker backend can reconstruct them
-on the far side of a pipe without pickling code objects.
+model (the dispatcher's requeue path is tested against it); ``Hang``
+makes a worker go *silent* -- it stops serving AND stops heartbeating
+without closing its connection, the one failure mode only the
+heartbeat-timeout path can catch.  All injectors round-trip through
+``to_spec()`` / ``from_spec()`` (plain json-able dicts) so subprocess
+and socket workers can reconstruct them on the far side of a pipe
+without pickling code objects.
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -34,6 +42,41 @@ from ..core.straggler import AdversarialSlow, ShiftedExponential
 
 class WorkerFailure(RuntimeError):
     """Raised inside a worker loop by a fail-stop injector."""
+
+
+class WorkerHang(RuntimeError):
+    """Raised by a ``Hang`` injector: the worker goes silent (no result,
+    no death notice, no further heartbeats) but keeps its connection
+    open -- detectable only via heartbeat timeout."""
+
+
+def faulty(faults):
+    """Decorator wrapping a transport's raw serve function with
+    deterministic fault injection.
+
+    ``serve(worker_id, task, tasks_done) -> TaskResult`` becomes: check
+    fail-stop (raise ``WorkerFailure``), check hang (raise
+    ``WorkerHang``), compute, then sleep the injected latency (scaled
+    by the task's nnz-proportional ``work``).  Every transport applies
+    this identically, so a deterministic test behaves the same over
+    threads, pipes, or sockets.
+    """
+    should_hang = getattr(faults, "should_hang", None)
+
+    def deco(serve_fn):
+        def wrapped(worker_id: int, task, tasks_done: int):
+            if faults.should_fail(worker_id, tasks_done):
+                raise WorkerFailure(f"worker {worker_id} fail-stop injected")
+            if should_hang is not None and should_hang(worker_id, tasks_done):
+                raise WorkerHang(f"worker {worker_id} hang injected")
+            result = serve_fn(worker_id, task, tasks_done)
+            delay = faults.delay(worker_id, task.task_row, result.work)
+            if delay > 0:
+                time.sleep(delay)
+            return result
+        return wrapped
+
+    return deco
 
 
 def straggler_mask(n: int, s: int, rng: np.random.Generator,
@@ -199,4 +242,45 @@ class FailStop:
     def _from_spec(cls, spec: dict) -> "FailStop":
         return cls(fail_after={int(k): v
                                for k, v in spec["fail_after"].items()},
+                   base=from_spec(spec["base"]))
+
+
+@_register
+@dataclass
+class Hang:
+    """Silent-worker injection: ``hang_after[w]`` = tasks worker ``w``
+    completes before going mute (0 = hangs on first task).  Unlike
+    ``FailStop`` there is no death notice and no connection close --
+    the dispatcher can only notice via missed heartbeats, which is
+    exactly the sequencing (timeout -> suspected -> requeue) the
+    liveness tests pin down.  Latency delegates to ``base``."""
+
+    hang_after: dict
+    base: object = field(default_factory=NoFaults)
+
+    def delay(self, worker: int, task_row: int, work: float) -> float:
+        return self.base.delay(worker, task_row, work)
+
+    def should_fail(self, worker: int, tasks_done: int) -> bool:
+        return self.base.should_fail(worker, tasks_done)
+
+    def should_hang(self, worker: int, tasks_done: int) -> bool:
+        limit = self.hang_after.get(worker)
+        return limit is not None and tasks_done >= limit
+
+    def mask(self, n: int, s: int) -> np.ndarray:
+        done = self.base.mask(n, s)
+        done[[w for w in self.hang_after if 0 <= w < n]] = False
+        return done
+
+    def to_spec(self) -> dict:
+        return {"kind": "Hang",
+                "hang_after": {str(k): int(v)
+                               for k, v in self.hang_after.items()},
+                "base": self.base.to_spec()}
+
+    @classmethod
+    def _from_spec(cls, spec: dict) -> "Hang":
+        return cls(hang_after={int(k): v
+                               for k, v in spec["hang_after"].items()},
                    base=from_spec(spec["base"]))

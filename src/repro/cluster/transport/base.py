@@ -1,0 +1,108 @@
+"""The ``Transport`` interface: how coded bytes reach workers.
+
+A transport owns the full lifecycle of one cluster's worker channels:
+``start`` (connect + handshake + ship the per-worker shards),
+``ship_shard`` (re-shipping on requeue or plan re-tune), ``submit`` /
+``cancel`` (per-task traffic), and a single uniform event stream
+(``poll``) carrying ``TaskResult``s and ``Heartbeat``s from every
+worker.  The dispatcher is written against exactly this surface -- it
+cannot tell threads from pipes from sockets, which is the point: the
+C(n, s) parity sweep and the liveness protocol are properties of the
+stack, not of one backend.
+
+Every mutating call returns the bytes it handed to the wire, so
+bytes-on-wire accounting (the paper's omega/k communication claim) is
+measured at the transport boundary rather than estimated.  (A frame
+racing a dropping connection may be counted and then never arrive --
+the death event that follows re-accounts the round via requeue;
+``ship_shard`` returns 0 when the channel is already known-dead.)
+"""
+
+from __future__ import annotations
+
+import queue
+
+from ..faults import NoFaults
+from ..wire import Heartbeat, Task
+
+
+class Transport:
+    """Base class: event queue, liveness bookkeeping, lifecycle guards.
+
+    Subclasses implement ``start`` / ``ship_shard`` / ``submit`` /
+    ``cancel`` / ``close`` and keep ``self._dead`` honest (a worker is
+    transport-dead once a death notice or channel loss was observed;
+    *suspicion* from missed heartbeats is the dispatcher's job).
+    """
+
+    name = "base"
+
+    def __init__(self, n_workers: int, *, faults=None,
+                 heartbeat_s: float = 0.25):
+        self.n_workers = n_workers
+        self.faults = faults if faults is not None else NoFaults()
+        self.heartbeat_s = heartbeat_s
+        self.events: queue.Queue = queue.Queue()
+        # beats keep ticking while the cluster idles between calls and
+        # nothing polls: cap how many may sit queued (stale beats carry
+        # no information -- the dispatcher re-stamps liveness at round
+        # start), so idle time never grows memory
+        self._beat_cap = max(64, 4 * n_workers)
+        self._dead = [False] * n_workers
+        self._closing = False
+
+    def push_event(self, event) -> None:
+        """Enqueue one uniform-stream event; idle heartbeats beyond the
+        cap are dropped (results and deaths never are)."""
+        if isinstance(event, Heartbeat) and \
+                self.events.qsize() >= self._beat_cap:
+            return
+        self.events.put(event)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self, shard_blobs: list[bytes]) -> int:
+        """Spawn/connect workers, handshake, ship the initial shards.
+        Returns total bytes shipped."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    # -- traffic -----------------------------------------------------------
+
+    def ship_shard(self, worker: int, blob: bytes) -> int:
+        raise NotImplementedError
+
+    def submit(self, worker: int, task: Task) -> int:
+        raise NotImplementedError
+
+    def cancel(self, worker: int, round_id: int) -> None:
+        raise NotImplementedError
+
+    # -- the uniform event stream -----------------------------------------
+
+    def poll(self, timeout: float):
+        """Next ``TaskResult`` / ``Heartbeat``, or None on timeout."""
+        try:
+            return self.events.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def drain(self) -> list:
+        """Everything already queued (between-rounds hygiene)."""
+        out = []
+        while True:
+            try:
+                out.append(self.events.get_nowait())
+            except queue.Empty:
+                return out
+
+    def alive(self, worker: int) -> bool:
+        """Transport-level liveness (no death notice / channel loss
+        observed).  A silently hung worker is still transport-alive --
+        only the dispatcher's heartbeat timeout catches it."""
+        return not self._dead[worker]
+
+    def mark_dead(self, worker: int) -> None:
+        self._dead[worker] = True

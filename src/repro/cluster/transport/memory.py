@@ -1,0 +1,76 @@
+"""In-process transport: one serve thread + one heartbeat thread per
+worker, events delivered as Python objects.
+
+This is the deterministic CI/bench path (the old ``ThreadWorker``
+backend, re-expressed over the shared worker core).  Nothing is
+serialized on the hot path -- tasks cross as objects -- but shard
+blobs still travel as wire bytes (so the codec is exercised) and
+``submit`` reports ``Task.nbytes()``, the exact encoded size, so
+bytes-on-wire accounting matches the socket transports.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+from ..wire import Task
+from ..worker import serve_loop, start_heartbeat
+from .base import Transport
+
+
+class MemoryTransport(Transport):
+    name = "memory"
+
+    def __init__(self, n_workers: int, *, faults=None,
+                 heartbeat_s: float = 0.25):
+        super().__init__(n_workers, faults=faults, heartbeat_s=heartbeat_s)
+        self._inboxes: list[queue.Queue] = []
+        self._threads: list[threading.Thread] = []
+        self._beat_stops: list[threading.Event] = []
+        self._beats: list[threading.Thread] = []
+
+    def start(self, shard_blobs: list[bytes]) -> int:
+        shipped = 0
+        for w, blob in enumerate(shard_blobs):
+            inbox: queue.Queue = queue.Queue()
+            self._inboxes.append(inbox)
+            stop_beats = threading.Event()
+            self._beat_stops.append(stop_beats)
+
+            def run(wid=w, box=inbox, sb=stop_beats):
+                status = serve_loop(wid, box, self.push_event, self.faults,
+                                    stop_beats=sb)
+                if status == "death":
+                    self.mark_dead(wid)
+
+            t = threading.Thread(target=run, name=f"cluster-worker-{w}",
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+            self._beats.append(start_heartbeat(
+                w, self.push_event, self.heartbeat_s, stop_beats))
+            shipped += self.ship_shard(w, blob)
+        return shipped
+
+    def ship_shard(self, worker: int, blob: bytes) -> int:
+        self._inboxes[worker].put(("shard", blob))
+        return len(blob)
+
+    def submit(self, worker: int, task: Task) -> int:
+        self._inboxes[worker].put(("task", task))
+        return task.nbytes()
+
+    def cancel(self, worker: int, round_id: int) -> None:
+        self._inboxes[worker].put(("cancel", round_id))
+
+    def close(self) -> None:
+        if self._closing:
+            return
+        self._closing = True
+        for stop in self._beat_stops:
+            stop.set()
+        for inbox in self._inboxes:
+            inbox.put(("stop", None))
+        for t in self._threads + self._beats:
+            t.join(timeout=2)

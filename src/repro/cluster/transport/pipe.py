@@ -1,0 +1,159 @@
+"""Subprocess transport: wire bytes over ``multiprocessing`` pipes.
+
+One spawned child per worker (spawn context, so children never inherit
+jax state; their task path is pure numpy + scipy).  Everything crossing
+the pipe is wire bytes inside ``(kind, bytes)`` tuples; the child runs
+the shared ``serve_loop`` with a reader thread pumping the pipe into
+its inbox and a heartbeat ticker beating on the same channel results
+travel on.  A child that exits without a death notice (real fail-stop)
+is detected by the parent pump's EOF -- and a child whose serve loop
+*hangs* parks with the pipe open, invisible to everything except the
+dispatcher's heartbeat timeout.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+
+from ..faults import from_spec
+from ..wire import Task, TaskResult, death_notice, decode_event
+from ..worker import serve_loop, start_heartbeat
+from .base import Transport
+
+
+def _pipe_worker_main(conn, worker_id: int, fault_spec, heartbeat_s: float
+                      ) -> None:
+    """Child entry point: pump pipe -> inbox, serve, beat."""
+    faults = from_spec(fault_spec)
+    inbox: queue.Queue = queue.Queue()
+    send_lock = threading.Lock()
+    parked = threading.Event()          # set when a stop/EOF reached the pump
+
+    def emit(event) -> None:
+        with send_lock:
+            conn.send(("event", event.encode()))
+
+    def pump() -> None:
+        try:
+            while True:
+                msg = conn.recv()
+                if msg[0] == "stop":
+                    parked.set()
+                inbox.put(msg)
+        except (EOFError, OSError):     # dispatcher went away
+            parked.set()
+            inbox.put(("stop", None))
+
+    with send_lock:                     # ready: imports are done, serve
+        conn.send(("hello", worker_id))  # loop is about to start
+    threading.Thread(target=pump, daemon=True).start()
+    stop_beats = threading.Event()
+    start_heartbeat(worker_id, emit, heartbeat_s, stop_beats)
+    try:
+        status = serve_loop(worker_id, inbox, emit, faults,
+                            stop_beats=stop_beats)
+    except (BrokenPipeError, OSError):
+        return
+    if status == "hang":
+        # mute with the pipe open: only the dispatcher's heartbeat
+        # timeout can catch this worker -- but exit promptly once the
+        # dispatcher says stop, so close() never waits out a join
+        # timeout on a parked child
+        parked.wait()
+        os._exit(0)
+
+
+class PipeTransport(Transport):
+    name = "pipe"
+
+    def __init__(self, n_workers: int, *, faults=None,
+                 heartbeat_s: float = 0.25):
+        super().__init__(n_workers, faults=faults, heartbeat_s=heartbeat_s)
+        self._conns = []
+        self._procs = []
+        self._pumps: list[threading.Thread] = []
+        self._ready = [threading.Event() for _ in range(n_workers)]
+
+    def start(self, shard_blobs: list[bytes]) -> int:
+        import multiprocessing as mp  # noqa: PLC0415
+
+        ctx = mp.get_context("spawn")
+        shipped = 0
+        for w in range(self.n_workers):
+            conn, child = ctx.Pipe()
+            proc = ctx.Process(
+                target=_pipe_worker_main,
+                args=(child, w, self.faults.to_spec(), self.heartbeat_s),
+                daemon=True)
+            proc.start()
+            child.close()
+            self._conns.append(conn)
+            self._procs.append(proc)
+            pump = threading.Thread(target=self._pump, args=(w, conn),
+                                    daemon=True)
+            pump.start()
+            self._pumps.append(pump)
+        for w, blob in enumerate(shard_blobs):
+            shipped += self.ship_shard(w, blob)
+        # don't hand the transport over until every child finished its
+        # (slow: spawn + numpy/scipy import) startup -- otherwise the
+        # liveness protocol would suspect workers that never got to beat
+        for w, evt in enumerate(self._ready):
+            if not evt.wait(timeout=60):
+                self.close()
+                raise RuntimeError(f"pipe worker {w} never became ready")
+        return shipped
+
+    def _pump(self, worker: int, conn) -> None:
+        try:
+            while True:
+                kind, data = conn.recv()
+                if kind == "hello":
+                    self._ready[worker].set()
+                    continue
+                event = decode_event(data)
+                if isinstance(event, TaskResult) and event.kind == "death":
+                    self.mark_dead(worker)
+                self.push_event(event)
+        except (EOFError, OSError):
+            if not self._closing and not self._dead[worker]:
+                # the process died without a notice: real fail-stop
+                self.mark_dead(worker)
+                self.push_event(death_notice(
+                    worker, "worker process exited"))
+
+    def _send(self, worker: int, msg) -> None:
+        try:
+            self._conns[worker].send(msg)
+        except (BrokenPipeError, OSError):
+            pass                        # pump reports the death
+
+    def ship_shard(self, worker: int, blob: bytes) -> int:
+        self._send(worker, ("shard", blob))
+        return len(blob)
+
+    def submit(self, worker: int, task: Task) -> int:
+        data = task.encode()
+        self._send(worker, ("task", data))
+        return len(data)
+
+    def cancel(self, worker: int, round_id: int) -> None:
+        self._send(worker, ("cancel", round_id))
+
+    def close(self) -> None:
+        if self._closing:
+            return
+        self._closing = True
+        for w in range(len(self._conns)):
+            self._send(w, ("stop", None))
+        for proc in self._procs:
+            proc.join(timeout=2)
+            if proc.is_alive():         # hung or stuck child
+                proc.terminate()
+                proc.join(timeout=2)
+        for conn in self._conns:
+            conn.close()
+        for pump in self._pumps:
+            pump.join(timeout=2)

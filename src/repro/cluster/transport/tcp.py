@@ -1,0 +1,352 @@
+"""TCP transport: the wire format over real localhost sockets.
+
+The dispatcher side runs an asyncio server on a dedicated thread; each
+worker is a spawned subprocess that connects back and speaks
+length-prefixed frames of the versioned wire records:
+
+  * **handshake** -- the first frame on every connection is a hello
+    record carrying the wire version (in the record header, so a
+    mismatched build is rejected at decode) and the worker id; a
+    connection whose first frame fails to decode is closed without
+    registering.
+  * **shard shipping** -- shards travel wrapped with a sha256 digest.
+    The *worker-side* check is the enforcement: a digest mismatch turns
+    into a death notice, so a corrupted shard can never silently serve
+    wrong products.  The worker also acks the digest back
+    (``TcpTransport.shard_acks``, confirmation telemetry asserted by
+    the parity tests).
+  * **liveness** -- workers heartbeat on the same socket results travel
+    on.  A closed connection surfaces immediately as a death notice; a
+    *silent* worker (hung, or a stale NAT entry) is caught only by the
+    dispatcher's heartbeat timeout -- which is exactly why ``done=``
+    masks in cluster mode are derived from measured liveness rather
+    than injected.
+
+Worker children are plain blocking sockets + threads (their compute is
+blocking BSR matmul anyway); only the dispatcher side multiplexes, and
+asyncio streams are what it multiplexes with.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import os
+import queue
+import socket
+import struct
+import threading
+
+from ..faults import from_spec
+from ..wire import (
+    PlanShard,
+    Task,
+    TaskResult,
+    control_record,
+    death_notice,
+    decode_event,
+    decode_record,
+    encode_record,
+    hello_record,
+)
+from ..worker import serve_loop, start_heartbeat
+from .base import Transport
+
+_LEN = struct.Struct("<I")
+_MAX_FRAME = 1 << 31
+
+
+# ---------------------------------------------------------------------------
+# Worker child (blocking sockets + the shared serve loop)
+# ---------------------------------------------------------------------------
+
+
+def _send_frame(sock: socket.socket, blob: bytes,
+                lock: threading.Lock) -> None:
+    with lock:
+        sock.sendall(_LEN.pack(len(blob)) + blob)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def _recv_frame(sock: socket.socket) -> bytes | None:
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    (n,) = _LEN.unpack(head)
+    if n > _MAX_FRAME:
+        return None
+    return _recv_exact(sock, n)
+
+
+def _tcp_worker_main(host: str, port: int, worker_id: int, fault_spec,
+                     heartbeat_s: float) -> None:
+    """Child entry point: connect, hello, pump socket -> inbox, serve."""
+    faults = from_spec(fault_spec)
+    sock = socket.create_connection((host, port))
+    lock = threading.Lock()
+    inbox: queue.Queue = queue.Queue()
+    stop_beats = threading.Event()
+    parked = threading.Event()          # set when a stop/EOF reached the pump
+
+    def emit(event) -> None:
+        _send_frame(sock, event.encode(), lock)
+
+    def corrupt(why: str) -> None:
+        """Corrupted inbound frame: a worker fed garbage must not keep
+        serving from a bad state -- notify death and stop."""
+        stop_beats.set()
+        try:
+            emit(death_notice(worker_id, why))
+        except OSError:
+            pass
+        inbox.put(("stop", None))
+
+    def pump() -> None:
+        while True:
+            blob = _recv_frame(sock)
+            if blob is None:                    # dispatcher went away
+                parked.set()
+                inbox.put(("stop", None))
+                return
+            try:
+                meta, arrays = decode_record(blob)
+                rec = meta.get("record")
+                if rec == "task":
+                    inbox.put(("task", Task(
+                        round=meta["round"], op=meta["op"],
+                        task_row=meta["task_row"], payload=arrays,
+                        meta=meta["meta"])))
+                elif rec == "shard-wrap":
+                    inner = arrays["blob"].tobytes()
+                    digest = hashlib.sha256(inner).hexdigest()
+                    if digest != meta["digest"]:
+                        corrupt("shard digest mismatch")
+                        return
+                    _send_frame(sock, control_record(
+                        "shard-ack", worker=worker_id, digest=digest), lock)
+                    inbox.put(("shard", PlanShard.decode(inner)))
+                elif rec == "cancel":
+                    inbox.put(("cancel", meta["round"]))
+                elif rec == "stop":
+                    parked.set()
+                    inbox.put(("stop", None))
+                    return
+            except (ValueError, KeyError, TypeError) as e:
+                # garbled frame OR well-formed json missing fields:
+                # either way this worker must not keep serving
+                corrupt(repr(e))
+                return
+
+    try:
+        _send_frame(sock, hello_record(worker_id), lock)
+        threading.Thread(target=pump, daemon=True).start()
+        start_heartbeat(worker_id, emit, heartbeat_s, stop_beats)
+        status = serve_loop(worker_id, inbox, emit, faults,
+                            stop_beats=stop_beats)
+    except OSError:
+        return
+    if status == "hang":
+        # mute with the socket open: only the dispatcher's heartbeat
+        # timeout can catch this worker.  The mute property only needs
+        # to hold until shutdown -- exit promptly once the dispatcher
+        # says stop (or drops the connection), so close() never waits
+        # out a join timeout on a parked child.
+        parked.wait()
+        os._exit(0)
+    sock.close()
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher side (asyncio server on a dedicated thread)
+# ---------------------------------------------------------------------------
+
+
+class TcpTransport(Transport):
+    name = "tcp"
+
+    def __init__(self, n_workers: int, *, faults=None,
+                 heartbeat_s: float = 0.25, host: str = "127.0.0.1"):
+        super().__init__(n_workers, faults=faults, heartbeat_s=heartbeat_s)
+        self.host = host
+        self.port: int | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._thread: threading.Thread | None = None
+        self._server = None
+        self._writers: list = [None] * n_workers
+        self._hello = [threading.Event() for _ in range(n_workers)]
+        self._procs: list = []
+        self.shard_acks: dict[int, str] = {}    # worker -> last acked digest
+
+    # -- event-loop plumbing ----------------------------------------------
+
+    def _run_coro(self, coro, timeout: float = 30.0):
+        return asyncio.run_coroutine_threadsafe(coro, self._loop).result(
+            timeout)
+
+    async def _read_frame(self, reader) -> bytes | None:
+        try:
+            head = await reader.readexactly(_LEN.size)
+            (n,) = _LEN.unpack(head)
+            if n > _MAX_FRAME:
+                return None
+            return await reader.readexactly(n)
+        except (asyncio.IncompleteReadError, ConnectionError, OSError):
+            return None
+
+    async def _on_conn(self, reader, writer) -> None:
+        blob = await self._read_frame(reader)
+        w = None
+        try:
+            if blob is None:
+                raise ValueError("no hello frame")
+            meta, _ = decode_record(blob)       # rejects wrong wire version
+            if meta.get("record") != "hello":
+                raise ValueError(f"expected hello, got {meta.get('record')!r}")
+            w = int(meta["worker"])
+            if not 0 <= w < self.n_workers or self._writers[w] is not None:
+                raise ValueError(f"bad or duplicate worker id {w}")
+        except (ValueError, KeyError, TypeError, AttributeError):
+            writer.close()                      # failed handshake: reject
+            return
+        self._writers[w] = writer
+        self._hello[w].set()
+        while True:
+            blob = await self._read_frame(reader)
+            if blob is None:
+                break
+            try:
+                event = decode_event(blob)      # the shared demux
+            except ValueError:
+                break                           # garbled stream: drop conn
+            if isinstance(event, dict):         # control: shard-ack
+                if event.get("record") == "shard-ack":
+                    self.shard_acks[w] = event["digest"]
+                continue
+            if isinstance(event, TaskResult) and event.kind == "death":
+                self.mark_dead(w)
+            self.push_event(event)
+        self._writers[w] = None
+        writer.close()
+        if not self._closing and not self._dead[w]:
+            # connection lost without a notice: fail-stop over the network
+            self.mark_dead(w)
+            self.push_event(death_notice(w, "connection lost"))
+
+    async def _asend(self, worker: int, blob: bytes) -> bool:
+        """Write one frame; returns whether it actually hit the wire
+        (False once the connection is gone -- the pump surfaces the
+        death, callers must not crash the round or count the bytes)."""
+        writer = self._writers[worker]
+        if writer is None:
+            return False                        # death already surfaced
+        try:
+            writer.write(_LEN.pack(len(blob)) + blob)
+            await writer.drain()
+        except (ConnectionError, OSError):
+            return False
+        return True
+
+    # -- Transport interface ----------------------------------------------
+
+    def start(self, shard_blobs: list[bytes]) -> int:
+        import multiprocessing as mp  # noqa: PLC0415
+
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self._loop.run_forever, name="cluster-tcp-loop",
+            daemon=True)
+        self._thread.start()
+        try:
+            self._server = self._run_coro(
+                asyncio.start_server(self._on_conn, self.host, 0))
+            self.port = self._server.sockets[0].getsockname()[1]
+            ctx = mp.get_context("spawn")
+            for w in range(self.n_workers):
+                proc = ctx.Process(
+                    target=_tcp_worker_main,
+                    args=(self.host, self.port, w, self.faults.to_spec(),
+                          self.heartbeat_s),
+                    daemon=True)
+                proc.start()
+                self._procs.append(proc)
+            for w, evt in enumerate(self._hello):
+                if not evt.wait(timeout=60):
+                    raise RuntimeError(f"tcp worker {w} never completed "
+                                       f"the handshake")
+            return sum(self.ship_shard(w, blob)
+                       for w, blob in enumerate(shard_blobs))
+        except BaseException:
+            # failed construction must not leak the loop thread, the
+            # server socket, or already-spawned children
+            self.close()
+            raise
+
+    def ship_shard(self, worker: int, blob: bytes) -> int:
+        import numpy as np  # noqa: PLC0415
+
+        digest = hashlib.sha256(blob).hexdigest()
+        frame = encode_record({"record": "shard-wrap", "digest": digest},
+                              {"blob": np.frombuffer(blob, np.uint8)})
+        # synchronous (.result): shard shipping wants backpressure, and
+        # requeue correctness depends on the shard preceding its tasks
+        sent = self._run_coro(self._asend(worker, frame))
+        return len(frame) if sent else 0
+
+    def submit(self, worker: int, task: Task) -> int:
+        blob = task.encode()
+        # fire-and-forget: the byte count is known up front and _asend
+        # swallows connection errors (the pump surfaces the death), so
+        # per-task dispatch need not block on the event-loop round-trip
+        fut = asyncio.run_coroutine_threadsafe(
+            self._asend(worker, blob), self._loop)
+        fut.add_done_callback(lambda f: f.exception())  # never unretrieved
+        return len(blob)
+
+    def cancel(self, worker: int, round_id: int) -> None:
+        fut = asyncio.run_coroutine_threadsafe(
+            self._asend(worker, control_record("cancel", round=round_id)),
+            self._loop)
+        fut.add_done_callback(lambda f: f.exception())
+
+    def close(self) -> None:
+        if self._closing:
+            return
+        self._closing = True
+        stop = control_record("stop")
+        for w in range(self.n_workers):
+            try:
+                self._run_coro(self._asend(w, stop), timeout=5)
+            except Exception:           # conn already gone
+                pass
+        for proc in self._procs:
+            proc.join(timeout=2)
+            if proc.is_alive():         # hung or stuck child
+                proc.terminate()
+                proc.join(timeout=2)
+
+        async def teardown() -> None:
+            for w, writer in enumerate(self._writers):
+                if writer is not None:
+                    writer.close()
+                    self._writers[w] = None
+            if self._server is not None:
+                self._server.close()
+                await self._server.wait_closed()
+
+        if self._loop is not None:
+            try:
+                self._run_coro(teardown(), timeout=10)
+            except Exception:  # pragma: no cover - teardown best-effort
+                pass
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._thread.join(timeout=5)
+            self._loop.close()

@@ -21,7 +21,15 @@ worker never executes shipped code):
     owning several virtual rows is how partial stragglers arise.
   * **task / result messages** (``Task`` / ``TaskResult``) -- the
     per-call traffic: inputs out, per-task products + work accounting
-    back.
+    back.  Task inputs are *support-restricted*: only the x-blocks /
+    coded-B block-rows a worker's nonzero tiles actually read travel
+    (the paper's communication claim -- per-worker traffic ~ omega/k of
+    the dense scheme's); ``record_nbytes`` gives every transport the
+    same bytes-on-wire accounting without serializing twice.
+  * **liveness messages** (``Heartbeat`` / hello handshake) -- workers
+    beat on the same stream results travel on, so the dispatcher
+    derives ``done=`` masks from measured liveness (missed heartbeats
+    => suspected => requeue) instead of injected fault masks.
 
 Arrays are encoded as (dtype-name, shape, raw bytes); exotic dtypes
 (bfloat16) resolve through ``ml_dtypes``, so decoding shards and tasks
@@ -37,7 +45,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 MAGIC = b"RPRC"
-WIRE_VERSION = 1
+WIRE_VERSION = 2       # v2: heartbeat/hello records, shard col supports,
+                       # support-restricted task payloads
 
 _HEADER = struct.Struct("<4sHQ")   # magic, version, manifest length
 
@@ -51,25 +60,37 @@ def _np_dtype(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
+def _manifest_head(meta: dict, arrays: dict[str, np.ndarray]) -> bytes:
+    manifest = {"meta": meta, "arrays": [
+        {"name": name, "dtype": str(a.dtype), "shape": list(a.shape),
+         "nbytes": a.nbytes} for name, a in arrays.items()]}
+    return json.dumps(manifest, separators=(",", ":")).encode()
+
+
 def encode_record(meta: dict, arrays: dict[str, np.ndarray] | None = None
                   ) -> bytes:
     """One wire record: json-able ``meta`` + named numpy arrays."""
-    arrays = arrays or {}
-    manifest = {"meta": meta, "arrays": []}
-    blobs = []
-    for name, arr in arrays.items():
-        a = np.ascontiguousarray(arr)
-        blob = a.tobytes()
-        manifest["arrays"].append({"name": name, "dtype": str(a.dtype),
-                                   "shape": list(a.shape),
-                                   "nbytes": len(blob)})
-        blobs.append(blob)
-    head = json.dumps(manifest, separators=(",", ":")).encode()
+    arrays = {name: np.ascontiguousarray(arr)
+              for name, arr in (arrays or {}).items()}
+    head = _manifest_head(meta, arrays)
     return b"".join([_HEADER.pack(MAGIC, WIRE_VERSION, len(head)), head,
-                     *blobs])
+                     *(a.tobytes() for a in arrays.values())])
+
+
+def record_nbytes(meta: dict, arrays: dict[str, np.ndarray] | None = None
+                  ) -> int:
+    """Exact ``len(encode_record(meta, arrays))`` without copying the
+    array payloads -- the bytes-on-wire accounting for transports that
+    never serialize (the in-process ``memory`` transport)."""
+    arrays = arrays or {}
+    return (_HEADER.size + len(_manifest_head(meta, arrays))
+            + sum(int(a.nbytes) for a in arrays.values()))
 
 
 def decode_record(data: bytes) -> tuple[dict, dict[str, np.ndarray]]:
+    if len(data) < _HEADER.size:
+        raise ValueError(f"truncated wire record: {len(data)} bytes is "
+                         f"shorter than the {_HEADER.size}-byte header")
     magic, version, hlen = _HEADER.unpack_from(data, 0)
     if magic != MAGIC:
         raise ValueError("not a repro cluster wire record")
@@ -77,16 +98,31 @@ def decode_record(data: bytes) -> tuple[dict, dict[str, np.ndarray]]:
         raise ValueError(f"wire version {version} unsupported "
                          f"(this build speaks {WIRE_VERSION})")
     off = _HEADER.size
-    manifest = json.loads(data[off: off + hlen])
+    if off + hlen > len(data):
+        raise ValueError("truncated wire record: manifest extends past "
+                         "the end of the buffer")
+    try:
+        manifest = json.loads(data[off: off + hlen])
+        specs = manifest["arrays"]
+        meta = manifest["meta"]
+    except (ValueError, KeyError, TypeError) as e:
+        raise ValueError(f"garbled wire record manifest: {e}") from e
     off += hlen
     arrays = {}
-    for spec in manifest["arrays"]:
-        dt = _np_dtype(spec["dtype"])
-        arr = np.frombuffer(data, dtype=dt, count=spec["nbytes"] // dt.itemsize,
-                            offset=off).reshape(spec["shape"])
-        arrays[spec["name"]] = arr
-        off += spec["nbytes"]
-    return manifest["meta"], arrays
+    try:
+        for spec in specs:
+            if off + spec["nbytes"] > len(data):
+                raise ValueError(f"truncated wire record: array "
+                                 f"{spec['name']!r} extends past the buffer")
+            dt = _np_dtype(spec["dtype"])
+            arr = np.frombuffer(data, dtype=dt,
+                                count=spec["nbytes"] // dt.itemsize,
+                                offset=off).reshape(spec["shape"])
+            arrays[spec["name"]] = arr
+            off += spec["nbytes"]
+    except (KeyError, TypeError, AttributeError) as e:
+        raise ValueError(f"garbled wire record manifest: {e!r}") from e
+    return meta, arrays
 
 
 # ---------------------------------------------------------------------------
@@ -212,8 +248,12 @@ class PlanShard:
     (c_pad, t_pad), blocksize (bm, bk)); ``work[j]`` is the row's
     nonzero-tile count normalized by the dense tile count -- the
     nnz-proportional work units the fault injectors and the result
-    accounting both use.  Aggregation-only plans ship payload-less
-    shards (the worker's job is combining gradients it already has).
+    accounting both use.  ``supports[j]`` is the row's *input column
+    support*: the sorted t-block indices its nonzero tiles read -- the
+    dispatcher ships only those x-blocks / coded-B block-rows per task,
+    which is how the paper's omega/k communication claim reaches the
+    wire.  Aggregation-only plans ship payload-less shards (the
+    worker's job is combining gradients it already has).
     """
 
     worker: int
@@ -231,6 +271,7 @@ class PlanShard:
     bk: int = 0
     bm: int = 0
     work: tuple[float, ...] = ()
+    supports: tuple[tuple[int, ...], ...] = ()   # per task: t-block cols read
     tasks: list[dict] = field(default_factory=list)   # data/indices/indptr
 
     def encode(self) -> bytes:
@@ -241,6 +282,7 @@ class PlanShard:
                 "tasks_per_worker": self.tasks_per_worker, "t": self.t,
                 "c": self.c, "t_pad": self.t_pad, "c_pad": self.c_pad,
                 "bk": self.bk, "bm": self.bm, "work": list(self.work),
+                "supports": [list(s) for s in self.supports],
                 "has_payload": bool(self.tasks)}
         arrays = {}
         for j, task in enumerate(self.tasks):
@@ -266,6 +308,7 @@ class PlanShard:
             tasks_per_worker=meta["tasks_per_worker"], t=meta["t"],
             c=meta["c"], t_pad=meta["t_pad"], c_pad=meta["c_pad"],
             bk=meta["bk"], bm=meta["bm"], work=tuple(meta["work"]),
+            supports=tuple(tuple(s) for s in meta["supports"]),
             tasks=tasks)
 
 
@@ -325,19 +368,23 @@ def shard_plan(plan, n_workers: int | None = None, packed=None
                 k=plan.k, tasks_per_worker=per,
                 work=tuple(1.0 for _ in rows)))
             continue
-        tasks, work = [], []
+        tasks, work, supports = [], [], []
         for row in rows:
             m = bsr[row]
             tasks.append({"data": np.asarray(m.data, np.float32),
                           "indices": np.asarray(m.indices, np.int32),
                           "indptr": np.asarray(m.indptr, np.int64)})
             work.append(packed.tile_counts[row] / dense_tiles)
+            # input column support: the t-blocks this row's tiles read
+            # (the only x-blocks / coded-B rows a task must ship)
+            supports.append(tuple(int(j) for j in np.unique(m.indices)))
         shards.append(PlanShard(
             worker=host, n_workers=w, task_rows=tuple(rows), kind=plan.kind,
             scheme_name=plan.scheme.name, n=n_virtual, k=plan.k,
             tasks_per_worker=per, t=packed.t, c=packed.c,
             t_pad=packed.t_pad, c_pad=packed.c_pad, bk=packed.bk,
-            bm=packed.bm, work=tuple(work), tasks=tasks))
+            bm=packed.bm, work=tuple(work), supports=tuple(supports),
+            tasks=tasks))
     return shards
 
 
@@ -348,7 +395,15 @@ def shard_plan(plan, n_workers: int | None = None, packed=None
 
 @dataclass
 class Task:
-    """One unit of dispatched work: apply op to one coded task row."""
+    """One unit of dispatched work: apply op to one coded task row.
+
+    Matvec / matmat payloads come in two forms: dense (``b``: the full
+    (t_pad, width) operand) or support-restricted (``bx``: only the
+    selected t-block rows, stacked; ``bi``: their block indices) -- the
+    worker scatters ``bx`` back into a zero (t_pad, width) buffer, so
+    the BSR product is bitwise the dense-shipped one while the wire
+    carries omega/k-proportional bytes.
+    """
 
     round: int
     op: str                                   # matvec | matmat | aggregate
@@ -356,10 +411,16 @@ class Task:
     payload: dict = field(default_factory=dict)   # name -> np.ndarray
     meta: dict = field(default_factory=dict)
 
+    def _meta(self) -> dict:
+        return {"record": "task", "round": self.round, "op": self.op,
+                "task_row": self.task_row, "meta": self.meta}
+
     def encode(self) -> bytes:
-        return encode_record(
-            {"record": "task", "round": self.round, "op": self.op,
-             "task_row": self.task_row, "meta": self.meta}, self.payload)
+        return encode_record(self._meta(), self.payload)
+
+    def nbytes(self) -> int:
+        """Wire size of ``encode()`` without serializing the payload."""
+        return record_nbytes(self._meta(), self.payload)
 
     @classmethod
     def decode(cls, data: bytes) -> "Task":
@@ -414,3 +475,65 @@ class TaskResult:
 def death_notice(worker: int, error: str) -> TaskResult:
     return TaskResult(worker=worker, round=-1, task_row=-1, ok=False,
                       kind="death", error=error)
+
+
+# ---------------------------------------------------------------------------
+# Liveness / control messages (the transport-uniform event stream)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Heartbeat:
+    """Periodic liveness beat a worker emits on its result stream.
+
+    The dispatcher stamps arrival times per worker; a worker that stops
+    beating for ``suspect_after`` seconds while owning outstanding task
+    rows is *suspected* and handled exactly like fail-stop (shard
+    re-shipped, rows requeued) -- liveness is measured, never injected.
+    """
+
+    worker: int
+    tick: int = 0
+
+    def encode(self) -> bytes:
+        return encode_record({"record": "beat", "worker": self.worker,
+                              "tick": self.tick})
+
+
+def hello_record(worker: int) -> bytes:
+    """Per-connection handshake: the wire version travels in the record
+    header (so a mismatched peer is rejected at decode), the worker id
+    in the meta.  Socket transports send this as their first frame."""
+    return encode_record({"record": "hello", "worker": worker,
+                          "wire_version": WIRE_VERSION})
+
+
+def control_record(record: str, **meta) -> bytes:
+    """A payload-less control frame (``cancel``, ``stop``, ``shard-ack``)."""
+    return encode_record({"record": record, **meta})
+
+
+def decode_event(data: bytes):
+    """Decode one frame of the worker->dispatcher stream.
+
+    Returns a ``TaskResult`` or ``Heartbeat``; control records
+    (``shard-ack``) come back as their plain meta dict.  This is the
+    single demux every transport's pump uses, so the dispatcher sees
+    one uniform event stream no matter what carried the bytes.
+    """
+    meta, arrays = decode_record(data)
+    rec = meta.get("record") if isinstance(meta, dict) else None
+    try:
+        if rec == "result":
+            return TaskResult(worker=meta["worker"], round=meta["round"],
+                              task_row=meta["task_row"], ok=meta["ok"],
+                              kind=meta["kind"], error=meta["error"],
+                              work=meta["work"], compute_s=meta["compute_s"],
+                              arrays=arrays)
+        if rec == "beat":
+            return Heartbeat(worker=meta["worker"], tick=meta["tick"])
+    except KeyError as e:   # parses but fields are missing: still garbled
+        raise ValueError(f"garbled {rec} record: missing {e}") from e
+    if rec in ("shard-ack", "hello"):
+        return meta
+    raise ValueError(f"unexpected event record {rec!r}")

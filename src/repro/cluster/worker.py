@@ -1,26 +1,27 @@
-"""Cluster workers: receive a ``PlanShard`` once, then serve tasks.
+"""Transport-agnostic worker core: one serve loop, every transport.
 
-The worker side of the paper's system: an edge device that holds its
+The worker side of the paper's system is an edge device that holds its
 coded submatrices (as BSR -- it multiplies exactly the nonzero tiles,
 so its per-task cost is nnz-proportional) and answers matvec / matmat /
-aggregate tasks as they stream in.  Two transports implement one
-interface so the dispatcher cannot tell them apart:
+aggregate tasks as they stream in.  This module is everything about
+that device that does NOT depend on how bytes reach it:
 
-  * ``ThreadWorker``  -- a daemon thread with an inbox queue; the default
-    (fast, deterministic with seeded fault injection, used by CI).
-  * ``ProcessWorker`` -- a spawned subprocess speaking wire bytes over a
-    pipe; proves the shard/task/result encoding actually crosses a
-    process boundary (the child's task path is pure numpy + scipy).
+  * ``ShardRuntime``   -- the task table (coded task row -> BSR operator),
+    including the scatter of support-restricted payloads (``bx``/``bi``)
+    back into the zero operand buffer, bitwise-equivalent to dense
+    shipping;
+  * ``serve_loop``     -- the message state machine (shard / task / cancel /
+    stop), cancel-draining, fault decoration (``faults.faulty``), death
+    notices and silent hangs;
+  * ``start_heartbeat``-- the liveness ticker: a side thread beating on
+    the worker's emit channel every ``interval`` seconds until stopped,
+    so compute (or injected latency) never starves liveness.
 
-Both report per-task ``work`` (normalized nonzero-tile count) and
-compute seconds, honour fault injection (``repro.cluster.faults``) --
-latency before replying, ``WorkerFailure`` for fail-stop death -- and
-understand round cancellation (a decoded round's leftover tasks are
-skipped, not computed).
-
-A worker can host more than one shard: the dispatcher re-ships a dead
-worker's shard to a live host (requeue), which simply merges the new
-task rows into its table.
+The transports (``repro.cluster.transport``) supply only the plumbing:
+an inbox of ``(kind, value)`` messages and an ``emit`` callable for
+results/beats.  Thread, pipe and tcp workers therefore run *the same
+code* -- which is what makes the C(n, s) dispatcher-parity sweep a
+property of the stack rather than of one backend.
 """
 
 from __future__ import annotations
@@ -28,12 +29,11 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from collections import deque
 
 import numpy as np
 
-from .faults import NoFaults, WorkerFailure, from_spec
-from .wire import PlanShard, Task, TaskResult, death_notice
+from .faults import NoFaults, WorkerFailure, WorkerHang, faulty
+from .wire import Heartbeat, PlanShard, Task, TaskResult, death_notice
 
 
 class ShardRuntime:
@@ -43,12 +43,14 @@ class ShardRuntime:
         self.tasks: dict[int, dict] = {}
         self.t_pad = 0
         self.c_pad = 0
+        self.bk = 0
 
     def load(self, shard: PlanShard) -> None:
         from scipy import sparse  # noqa: PLC0415 - worker-side heavy dep
 
         self.t_pad = shard.t_pad or self.t_pad
         self.c_pad = shard.c_pad or self.c_pad
+        self.bk = shard.bk or self.bk
         for j, row in enumerate(shard.task_rows):
             entry = {"work": shard.work[j], "bsr": None}
             if shard.tasks:
@@ -60,6 +62,24 @@ class ShardRuntime:
                     blocksize=(shard.bm, shard.bk))
             self.tasks[row] = entry
 
+    def _operand(self, payload: dict) -> np.ndarray:
+        """Materialize the (t_pad, width) input the BSR product reads.
+
+        Dense payloads (``b``) pass through; support-restricted ones
+        (``bx`` rows + ``bi`` block indices) scatter into a zero buffer
+        -- every unshipped row was exactly zero, so the product is
+        bitwise the dense-shipped one.
+        """
+        if "b" in payload:
+            return np.asarray(payload["b"], np.float32)
+        bx = np.asarray(payload["bx"], np.float32)
+        bi = np.asarray(payload["bi"], np.int64)
+        b = np.zeros((self.t_pad, bx.shape[1]), np.float32)
+        if len(bi):
+            rows = (bi[:, None] * self.bk + np.arange(self.bk)).ravel()
+            b[rows] = bx
+        return b
+
     def run(self, task: Task) -> tuple[dict, float]:
         """Execute one task; returns (result arrays, work units)."""
         entry = self.tasks.get(task.task_row)
@@ -68,7 +88,7 @@ class ShardRuntime:
                            f"shard (have {sorted(self.tasks)})")
         if task.op in ("matvec", "matmat"):
             # (c_pad, t_pad) BSR @ (t_pad, width): walks nonzero tiles only
-            y = entry["bsr"] @ np.asarray(task.payload["b"], np.float32)
+            y = entry["bsr"] @ self._operand(task.payload)
             return {"y": y}, entry["work"]
         if task.op == "aggregate":
             # combining is the dispatcher's job; the worker's cost is the
@@ -77,225 +97,98 @@ class ShardRuntime:
         raise ValueError(f"unknown op {task.op!r}")
 
 
-def _serve(worker_id: int, runtime: ShardRuntime, faults, task: Task,
-           tasks_done: int) -> TaskResult:
-    """Shared task execution: fault check, compute, injected latency."""
-    if faults.should_fail(worker_id, tasks_done):
-        raise WorkerFailure(f"worker {worker_id} fail-stop injected")
-    t0 = time.perf_counter()
-    arrays, work = runtime.run(task)
-    dt = time.perf_counter() - t0
-    delay = faults.delay(worker_id, task.task_row, work)
-    if delay > 0:
-        time.sleep(delay)
-    return TaskResult(worker=worker_id, round=task.round,
-                      task_row=task.task_row, ok=True, work=work,
-                      compute_s=dt, arrays=arrays)
+def start_heartbeat(worker_id: int, emit, interval: float,
+                    stop: threading.Event) -> threading.Thread:
+    """Beat ``Heartbeat(worker_id)`` on ``emit`` every ``interval``
+    seconds until ``stop`` is set (or the channel dies).  Runs on its
+    own daemon thread so long tasks and injected latency never starve
+    liveness -- only death, hangs, and shutdown do."""
 
-
-class ThreadWorker:
-    """In-process worker: daemon thread + inbox queue."""
-
-    def __init__(self, worker_id: int, outbox: queue.Queue, faults=None):
-        self.worker_id = worker_id
-        self.outbox = outbox
-        self.faults = faults if faults is not None else NoFaults()
-        self.inbox: queue.Queue = queue.Queue()
-        self.alive = True
-        self._pending: deque = deque()
-        self._cancelled: set[int] = set()
-        self._runtime = ShardRuntime()
-        self._tasks_done = 0
-        self._thread = threading.Thread(
-            target=self._loop, name=f"cluster-worker-{worker_id}",
-            daemon=True)
-        self._thread.start()
-
-    # -- dispatcher-facing interface (shared with ProcessWorker) ----------
-
-    def send_shard(self, shard_bytes: bytes) -> None:
-        self.inbox.put(("shard", shard_bytes))
-
-    def submit(self, task: Task) -> None:
-        self.inbox.put(("task", task))
-
-    def cancel(self, round_id: int) -> None:
-        self.inbox.put(("cancel", round_id))
-
-    def stop(self) -> None:
-        self.inbox.put(("stop", None))
-        self._thread.join(timeout=5)
-
-    # -- loop --------------------------------------------------------------
-
-    def _next(self):
-        if self._pending:
-            return self._pending.popleft()
-        return self.inbox.get()
-
-    def _drain(self) -> None:
-        """Pull everything already queued so cancels annihilate stale
-        tasks before we burn compute (and injected sleep) on them."""
-        while True:
+    def beat():
+        tick = 0
+        while not stop.wait(interval):
+            tick += 1
             try:
-                self._pending.append(self.inbox.get_nowait())
-            except queue.Empty:
+                emit(Heartbeat(worker=worker_id, tick=tick))
+            except Exception:   # channel gone: the pump handles liveness
                 return
 
-    def _loop(self) -> None:
-        while True:
-            kind, val = self._next()
-            if kind == "stop":
-                break
-            if kind == "cancel":
-                self._cancelled.add(val)
-                continue
-            if kind == "shard":
-                self._runtime.load(PlanShard.decode(val))
-                continue
-            task: Task = val
-            self._drain()
-            for m in self._pending:
-                if m[0] == "cancel":
-                    self._cancelled.add(m[1])
-            # rounds are monotonic: cancels for older rounds can never
-            # match again, so the set stays bounded
-            self._cancelled = {c for c in self._cancelled
-                               if c >= task.round}
-            if task.round in self._cancelled:
-                continue
-            try:
-                self.outbox.put(_serve(self.worker_id, self._runtime,
-                                       self.faults, task, self._tasks_done))
-                self._tasks_done += 1
-            except WorkerFailure as e:
-                self.alive = False
-                self.outbox.put(death_notice(self.worker_id, str(e)))
-                return
-            except Exception as e:  # defensive: surface, don't hang round
-                self.outbox.put(TaskResult(
-                    worker=self.worker_id, round=task.round,
-                    task_row=task.task_row, ok=False, error=repr(e)))
-        self.alive = False
+    t = threading.Thread(target=beat, name=f"cluster-beat-{worker_id}",
+                         daemon=True)
+    t.start()
+    return t
 
 
-# ---------------------------------------------------------------------------
-# Subprocess transport
-# ---------------------------------------------------------------------------
+def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
+               stop_beats: threading.Event | None = None) -> str:
+    """The shared worker state machine (see module docstring).
 
-
-def _process_main(conn, worker_id: int, fault_spec) -> None:
-    """Child entry point: wire bytes in, wire bytes out.  The task path
-    runs on numpy + scipy; nothing device-side crosses the pipe."""
-    faults = from_spec(fault_spec)
+    ``inbox`` delivers ``(kind, value)`` messages -- ``shard`` (wire
+    bytes or a decoded ``PlanShard``), ``task`` (wire bytes or a
+    ``Task``), ``cancel`` (round id), ``stop``.  ``emit`` receives
+    ``TaskResult``s.  Returns ``"stop"`` | ``"death"`` | ``"hang"`` so
+    the transport runner knows whether to exit cleanly, notify, or park
+    with the connection open (a hung edge device does not close its
+    socket).
+    """
+    faults = faults if faults is not None else NoFaults()
     runtime = ShardRuntime()
     cancelled: set[int] = set()
-    pending: deque = deque()
+    pending: list = []
     tasks_done = 0
 
-    def nxt():
-        if pending:
-            return pending.popleft()
-        return conn.recv()
+    @faulty(faults)
+    def serve(wid: int, task: Task, done: int) -> TaskResult:
+        t0 = time.perf_counter()
+        arrays, work = runtime.run(task)
+        return TaskResult(worker=wid, round=task.round,
+                          task_row=task.task_row, ok=True, work=work,
+                          compute_s=time.perf_counter() - t0, arrays=arrays)
 
-    try:
+    def finish(status: str) -> str:
+        if stop_beats is not None:
+            stop_beats.set()
+        return status
+
+    while True:
+        kind, val = pending.pop(0) if pending else inbox.get()
+        if kind == "stop":
+            return finish("stop")
+        if kind == "cancel":
+            cancelled.add(val)
+            continue
+        if kind == "shard":
+            runtime.load(PlanShard.decode(val) if isinstance(val, bytes)
+                         else val)
+            continue
+        task: Task = Task.decode(val) if isinstance(val, bytes) else val
+        # drain everything already queued so cancels annihilate stale
+        # tasks before we burn compute (and injected sleep) on them
         while True:
-            kind, val = nxt()
-            if kind == "stop":
-                return
-            if kind == "cancel":
-                cancelled.add(val)
-                continue
-            if kind == "shard":
-                runtime.load(PlanShard.decode(val))
-                continue
-            task = Task.decode(val)
-            while conn.poll():
-                pending.append(conn.recv())
-            for m in pending:
-                if m[0] == "cancel":
-                    cancelled.add(m[1])
-            cancelled = {c for c in cancelled if c >= task.round}
-            if task.round in cancelled:
-                continue
             try:
-                res = _serve(worker_id, runtime, faults, task, tasks_done)
-                tasks_done += 1
-                conn.send(("result", res.encode()))
-            except WorkerFailure as e:
-                conn.send(("result", death_notice(worker_id, str(e)).encode()))
-                return
-            except Exception as e:
-                conn.send(("result", TaskResult(
-                    worker=worker_id, round=task.round,
-                    task_row=task.task_row, ok=False,
-                    error=repr(e)).encode()))
-    except (EOFError, OSError):   # dispatcher went away
-        return
-
-
-class ProcessWorker:
-    """Subprocess worker: same interface as ``ThreadWorker``, transport
-    is wire bytes over a ``multiprocessing`` pipe (spawn context, so the
-    child never inherits jax state)."""
-
-    def __init__(self, worker_id: int, outbox: queue.Queue, faults=None):
-        import multiprocessing as mp  # noqa: PLC0415
-
-        self.worker_id = worker_id
-        self.outbox = outbox
-        self.alive = True
-        self._stopping = False
-        faults = faults if faults is not None else NoFaults()
-        ctx = mp.get_context("spawn")
-        self._conn, child = ctx.Pipe()
-        self._proc = ctx.Process(
-            target=_process_main, args=(child, worker_id, faults.to_spec()),
-            daemon=True)
-        self._proc.start()
-        child.close()
-        self._reader = threading.Thread(target=self._pump, daemon=True)
-        self._reader.start()
-
-    def _pump(self) -> None:
+                pending.append(inbox.get_nowait())
+            except queue.Empty:
+                break
+        for m in pending:
+            if m[0] == "cancel":
+                cancelled.add(m[1])
+        # rounds are monotonic: cancels for older rounds can never
+        # match again, so the set stays bounded
+        cancelled = {c for c in cancelled if c >= task.round}
+        if task.round in cancelled:
+            continue
         try:
-            while True:
-                kind, data = self._conn.recv()
-                if kind == "result":
-                    res = TaskResult.decode(data)
-                    if res.kind == "death":
-                        self.alive = False
-                    self.outbox.put(res)
-        except (EOFError, OSError):
-            if not self._stopping and self.alive:
-                # the process died without a notice: real fail-stop
-                self.alive = False
-                self.outbox.put(death_notice(
-                    self.worker_id, "worker process exited"))
-
-    def send_shard(self, shard_bytes: bytes) -> None:
-        self._conn.send(("shard", shard_bytes))
-
-    def submit(self, task: Task) -> None:
-        self._conn.send(("task", task.encode()))
-
-    def cancel(self, round_id: int) -> None:
-        try:
-            self._conn.send(("cancel", round_id))
-        except (BrokenPipeError, OSError):
-            pass
-
-    def stop(self) -> None:
-        self._stopping = True
-        try:
-            self._conn.send(("stop", None))
-        except (BrokenPipeError, OSError):
-            pass
-        self._proc.join(timeout=5)
-        if self._proc.is_alive():  # pragma: no cover - stuck child
-            self._proc.terminate()
-        self._conn.close()
-        self.alive = False
-
-
-WORKER_BACKENDS = {"thread": ThreadWorker, "process": ProcessWorker}
+            emit(serve(worker_id, task, tasks_done))
+            tasks_done += 1
+        except WorkerHang:
+            return finish("hang")           # silent: no notice, no close
+        except WorkerFailure as e:
+            try:
+                emit(death_notice(worker_id, str(e)))
+            except Exception:
+                pass
+            return finish("death")
+        except Exception as e:  # defensive: surface, don't hang round
+            emit(TaskResult(
+                worker=worker_id, round=task.round,
+                task_row=task.task_row, ok=False, error=repr(e)))

@@ -77,6 +77,11 @@ class CodedConfig:
     # (partial-straggler setting); None = one host per virtual worker.
     cluster: bool = False
     cluster_workers: int | None = None
+    # cluster transport (repro.cluster.transport): "memory" (in-process
+    # threads), "pipe" (spawned subprocesses), "tcp" (localhost
+    # sockets).  None = the REPRO_CLUSTER_TRANSPORT env var, falling
+    # back to "memory".
+    transport: str | None = None
 
 
 @dataclass(frozen=True)

@@ -22,8 +22,11 @@ Straggler sampling routes through ``repro.cluster.faults`` (pass
 ``faults=`` to change the model), so serve-time behavior and the
 cluster bench share one straggler code path.  With
 ``CodedConfig.cluster`` the head is actually *dispatched*: the plan is
-sharded to real workers (``plan.to_cluster``) and each step's logits
-come back from the fastest-k of them -- call ``close()`` when done.
+sharded to real workers (``plan.to_cluster``, transport picked by
+``CodedConfig.transport`` / ``REPRO_CLUSTER_TRANSPORT``) and each
+step's logits come back from the fastest-k of them, with liveness
+measured from worker heartbeats -- call ``close()`` when done (it
+shuts the transport down: sockets, heartbeat threads, processes).
 """
 
 from __future__ import annotations
@@ -84,7 +87,7 @@ class ServeEngine:
             self.s = coded.stragglers
             if coded.cluster:
                 self.coded_cluster = self.coded.to_cluster(
-                    coded.cluster_workers)
+                    coded.cluster_workers, transport=coded.transport)
         self._prefill = jax.jit(
             lambda p, toks: model.prefill(p, toks, max_len=self.max_len))
         self._decode = jax.jit(model.decode_step)
@@ -94,8 +97,11 @@ class ServeEngine:
 
     def _straggler_mask(self) -> jnp.ndarray:
         """Per-step straggler set: fastest-k under the engine's fault
-        model (``repro.cluster.faults``; on a real edge deployment the
-        mask comes from worker heartbeats instead)."""
+        model (``repro.cluster.faults``).  In cluster mode this mask is
+        a *replay constraint* (parity with the in-process plan); pass
+        ``done=None`` to ``coded_logits`` to let the dispatcher race
+        the workers and derive the pattern from heartbeat-measured
+        liveness instead."""
         return jnp.asarray(self.faults.mask(self.coded.scheme.n, self.s))
 
     def _logits(self, logits: jnp.ndarray) -> jnp.ndarray:
@@ -169,7 +175,18 @@ class ServeEngine:
         return head.matvec(hidden, mask).astype(hidden.dtype)
 
     def close(self) -> None:
-        """Release cluster workers (no-op outside cluster mode)."""
+        """Release cluster resources (no-op outside cluster mode).
+
+        Shuts the transport down for real: sockets closed, heartbeat
+        tickers joined, worker processes reaped -- a served engine must
+        leak no fds or threads (asserted by the tcp shutdown test).
+        """
         if self.coded_cluster is not None:
             self.coded_cluster.shutdown()
             self.coded_cluster = None
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -54,18 +54,25 @@ class TrainConfig:
 class Trainer:
     def __init__(self, model, opt_cfg: AdamWConfig, train_cfg: TrainConfig,
                  coded_plans=()):
-        """``coded_plans`` entries are ``CodedPlan``s or ``(plan,
-        provider)`` pairs where ``provider(params)`` returns the plan's
-        current operand (live weights drift; the stored compile-time
-        operand does not)."""
+        """``coded_plans`` entries are ``CodedPlan``s, ``(plan,
+        provider)`` pairs, or ``(plan, provider, cluster)`` triples.
+        ``provider(params)`` returns the plan's current operand (live
+        weights drift; the stored compile-time operand does not);
+        ``cluster`` is an optional ``ClusterPlan`` serving the plan --
+        when a retune recompiles the packed shards, the workers' task
+        tables are stale and the trainer re-ships them
+        (``cluster.reship()``, bytes recorded in ``retunes``)."""
         self.model = model
         self.opt_cfg = opt_cfg
         self.cfg = train_cfg
         self._step_fn = jax.jit(self._make_step())
         self.step_times: list[float] = []
         self.stragglers: list[int] = []
-        self.coded_plans = [p if isinstance(p, tuple) else (p, None)
-                            for p in coded_plans]
+        def norm(entry):
+            entry = entry if isinstance(entry, tuple) else (entry,)
+            return entry + (None,) * (3 - len(entry))
+
+        self.coded_plans = [norm(p) for p in coded_plans]
         self.retunes: list[dict] = []
 
     # ------------------------------------------------------------------
@@ -161,9 +168,18 @@ class Trainer:
         return params, opt_state, history
 
     def _retune(self, params, step: int) -> None:
-        """Re-run the density-based backend pick on registered plans."""
-        for plan, provider in self.coded_plans:
+        """Re-run the density-based backend pick on registered plans.
+
+        A retune that recompiled the operand state leaves any attached
+        cluster's workers holding stale BSR shards -- re-ship them so
+        the next dispatched round computes against the live weights.
+        """
+        for plan, provider, cluster in self.coded_plans:
             before = plan.backend
+            executor_before = plan.executor
             after = plan.retune(provider(params) if provider else None)
-            self.retunes.append({"step": step, "backend": after,
-                                 "changed": after != before})
+            entry = {"step": step, "backend": after,
+                     "changed": after != before}
+            if cluster is not None and plan.executor is not executor_before:
+                entry["reshipped_bytes"] = cluster.reship()
+            self.retunes.append(entry)

@@ -1,17 +1,29 @@
 """Cluster runtime suite (repro.cluster).
 
-Covers: the wire codec (record framing, version gate, dtype fidelity
-for f32/bf16 operands -- the serialization mirror of ``_match_dtype``),
-plan serialization round-trips for every registered scheme, shard
-partitioning, dispatcher parity against the in-process plan under all
-C(n, s) whole-worker patterns (bitwise on the packed backend) and under
-partial-straggler task-level patterns, race-mode correctness with
-latency injection, worker fail-stop with requeue, the subprocess worker
-backend, fault-injector determinism, serve-engine mask routing, and
-online plan re-tuning (``plan.retune`` + trainer integration).
+Covers: the wire codec (record framing, version gate, truncation /
+garbling robustness, dtype fidelity for f32/bf16 operands -- the
+serialization mirror of ``_match_dtype``), plan serialization
+round-trips for every registered scheme, shard partitioning with input
+column supports, dispatcher parity against the in-process plan under
+all C(n, s) whole-worker patterns (bitwise on the packed backend, over
+all three transports: memory, pipe, tcp) and under partial-straggler
+task-level patterns, race-mode correctness with latency injection,
+heartbeat-driven liveness (missed beats -> suspected -> requeue; a
+worker killed mid-round over tcp), the tcp handshake's wire-version
+gate, transport shutdown hygiene (no leaked fds/threads), worker
+fail-stop with requeue, fault-injector determinism (including ``Hang``),
+bytes-on-wire accounting, serve-engine mask routing, the scheme-registry
+CLI, and online plan re-tuning (``plan.retune`` + shard re-shipping +
+trainer integration).
 """
 
 import itertools
+import os
+import signal
+import socket
+import struct
+import threading
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -21,20 +33,26 @@ from repro.api import compile_plan, list_schemes, make_scheme
 from repro.cluster import (
     ClusterPlan,
     FailStop,
+    Hang,
     NoFaults,
     StragglerFaults,
     adversarial_faults,
     dumps_plan,
     loads_plan,
+    resolve_transport,
     shard_plan,
     straggler_mask,
 )
 from repro.cluster.faults import from_spec
 from repro.cluster.wire import (
+    WIRE_VERSION,
+    Heartbeat,
     Task,
     TaskResult,
+    decode_event,
     decode_record,
     encode_record,
+    record_nbytes,
     scheme_from_meta,
     scheme_to_meta,
 )
@@ -90,6 +108,59 @@ class TestWireCodec:
         blob[4] = 0xFF                      # version field
         with pytest.raises(ValueError, match="version"):
             decode_record(bytes(blob))
+
+    def test_truncated_frames_rejected(self):
+        blob = encode_record({"x": 1}, {"a": np.arange(8, dtype=np.float32)})
+        with pytest.raises(ValueError, match="truncated"):
+            decode_record(blob[:6])                 # short header
+        with pytest.raises(ValueError, match="truncated"):
+            decode_record(blob[:20])                # manifest cut off
+        with pytest.raises(ValueError, match="truncated"):
+            decode_record(blob[:-4])                # array payload cut off
+
+    def test_garbled_manifest_rejected(self):
+        blob = bytearray(encode_record({"x": 1}, {}))
+        # flip bytes inside the json manifest
+        blob[14 + 2: 14 + 8] = b"\xff\xfe\xfd\xfc\xfb\xfa"
+        with pytest.raises(ValueError, match="garbled|truncated"):
+            decode_record(bytes(blob))
+
+    def test_structurally_garbled_records_rejected(self):
+        import json
+
+        # manifest parses as json but the array specs are missing
+        # fields: still ValueError, never a KeyError escaping handlers
+        head = json.dumps({"meta": {}, "arrays": [{}]}).encode()
+        blob = struct.pack("<4sHQ", b"RPRC", WIRE_VERSION, len(head)) + head
+        with pytest.raises(ValueError, match="garbled"):
+            decode_record(blob)
+        # an event record that parses but lacks required fields
+        with pytest.raises(ValueError, match="garbled"):
+            decode_event(encode_record({"record": "result"}))
+        with pytest.raises(ValueError, match="garbled"):
+            decode_event(encode_record({"record": "beat"}))
+
+    def test_record_nbytes_exact(self):
+        meta = {"record": "task", "round": 2, "op": "matvec",
+                "task_row": 7, "meta": {"b": 3}}
+        arrays = {"bx": np.ones((16, 3), np.float32),
+                  "bi": np.arange(2, dtype=np.int32)}
+        assert record_nbytes(meta, arrays) == len(encode_record(meta, arrays))
+        t = Task(round=2, op="matvec", task_row=7, payload=arrays,
+                 meta={"b": 3})
+        assert t.nbytes() == len(t.encode())
+
+    def test_heartbeat_and_event_demux(self):
+        hb = Heartbeat(worker=3, tick=17)
+        back = decode_event(hb.encode())
+        assert isinstance(back, Heartbeat)
+        assert (back.worker, back.tick) == (3, 17)
+        res = TaskResult(worker=1, round=2, task_row=4,
+                         arrays={"y": np.ones(2, np.float32)})
+        back = decode_event(res.encode())
+        assert isinstance(back, TaskResult) and back.task_row == 4
+        with pytest.raises(ValueError, match="unexpected event"):
+            decode_event(encode_record({"record": "task"}))
 
     def test_task_result_roundtrip(self):
         t = Task(round=3, op="matvec", task_row=5,
@@ -226,10 +297,38 @@ class TestDispatcherParity:
         n, s = 6, 2
         plan = compile_plan(A, scheme=scheme, n=n, s=s, backend="packed")
         with plan.to_cluster() as cl:
+            assert cl.transport_name == "memory"
             for done in all_straggler_masks(n, s):
                 want = np.asarray(plan.matvec(x, jnp.asarray(done)))
                 got = np.asarray(cl.matvec(x, done))
                 # same BSR products, same cached inverse: bitwise equal
+                np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("transport", ["pipe", "tcp"])
+    def test_whole_worker_patterns_bitwise_socket_transports(
+            self, sparse_operand, transport):
+        # the same C(6, 2) sweep over real process/socket transports:
+        # parity is a property of the stack, not of one byte carrier
+        A, x = sparse_operand
+        n, s = 6, 2
+        plan = compile_plan(A, scheme="proposed", n=n, s=s, backend="packed")
+        with plan.to_cluster(transport=transport) as cl:
+            assert cl.transport_name == transport
+            if transport == "tcp":
+                # every worker digest-verified its shard and acked it
+                import hashlib
+
+                want_acks = {w: hashlib.sha256(blob).hexdigest()
+                             for w, blob in enumerate(cl._shard_bytes)}
+                deadline = time.time() + 10
+                while (cl.transport.shard_acks != want_acks
+                       and time.time() < deadline):
+                    time.sleep(0.02)
+                assert cl.transport.shard_acks == want_acks
+            for done in all_straggler_masks(n, s):
+                want = np.asarray(plan.matvec(x, jnp.asarray(done)))
+                got = np.asarray(cl.matvec(x, done))
                 np.testing.assert_array_equal(got, want)
 
     def test_reference_backend_tolerance(self, sparse_operand):
@@ -421,10 +520,161 @@ class TestFailStopAndTransports:
         done = np.ones(6, bool)
         done[[1, 4]] = False
         want = np.asarray(plan.matvec(x, jnp.asarray(done)))
+        # backend="process" is the legacy spelling of transport="pipe"
         with plan.to_cluster(3, backend="process") as cl:
+            assert cl.transport_name == "pipe"
             got = np.asarray(cl.matvec(x, done))
         # same f32 BSR math on the far side of the pipe
         np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat liveness, tcp handshake, transport hygiene
+# ---------------------------------------------------------------------------
+
+
+class TestLivenessAndTcp:
+    def test_memory_hang_suspected_and_requeued(self, sparse_operand):
+        # n=6, k=5: two silent workers leave 4 live -- decode NEEDS the
+        # heartbeat timeout -> suspected -> requeue sequencing.  No
+        # done= mask anywhere: liveness is measured, not injected.
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=1,
+                            backend="packed")
+        with plan.to_cluster(faults=Hang({0: 0, 3: 0}), heartbeat_s=0.05,
+                             suspect_after=0.4) as cl:
+            got = np.asarray(cl.matvec(x))
+            rep = cl.last_report
+            # one requeued row can complete the decode before the
+            # second hung worker crosses the timeout: 1 or 2 suspected
+            assert 1 <= rep.suspected <= 2
+            assert rep.deaths == 0              # silent, not fail-stop
+            assert rep.requeues >= 1
+            np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+            # the cluster keeps serving on the survivors
+            got = np.asarray(cl.matvec(x))
+            assert cl.last_report.suspected == 0
+            np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+
+    @pytest.mark.slow
+    def test_tcp_hang_suspected_and_requeued(self, sparse_operand):
+        # same sequencing over real sockets: the hung child keeps its
+        # connection open, so ONLY the heartbeat timeout can catch it
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=1,
+                            backend="packed")
+        with plan.to_cluster(transport="tcp", faults=Hang({2: 0, 4: 0}),
+                             heartbeat_s=0.05, suspect_after=0.4) as cl:
+            got = np.asarray(cl.matvec(x))
+            rep = cl.last_report
+            assert 1 <= rep.suspected <= 2 and rep.requeues >= 1
+            np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+
+    @pytest.mark.slow
+    def test_tcp_worker_killed_mid_round(self, sparse_operand):
+        # a worker SIGKILLed between rounds: the dropped connection
+        # surfaces as a death, its shard is re-shipped, the decode is
+        # still correct -- no fault injection, no done= mask
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=1,
+                            backend="packed")
+        with plan.to_cluster(transport="tcp") as cl:
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A), **TOL)
+            os.kill(cl.transport._procs[2].pid, signal.SIGKILL)
+            time.sleep(0.3)
+            got = np.asarray(cl.matvec(x))
+            np.testing.assert_allclose(got, np.asarray(x @ A), **TOL)
+            # the dropped connection surfaced as a death and its rows
+            # were re-homed (shard re-shipped to the heir) -- the next
+            # round decoded correctly without worker 2
+            assert sum(r.deaths for r in cl.reports) == 1
+            assert 2 not in cl.last_report.completed_per_worker
+
+    @pytest.mark.slow
+    def test_tcp_wrong_version_handshake_rejected(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with plan.to_cluster(transport="tcp") as cl:
+            # a client speaking a future wire version is rejected at
+            # the handshake: connection closed, nothing registered
+            blob = bytearray(encode_record({"record": "hello", "worker": 0}))
+            blob[4] = WIRE_VERSION + 1          # bump the header version
+            with socket.create_connection(
+                    ("127.0.0.1", cl.transport.port), timeout=5) as sock:
+                sock.sendall(struct.pack("<I", len(blob)) + bytes(blob))
+                sock.settimeout(5)
+                assert sock.recv(1) == b""      # server closed on us
+            # ... and the cluster is unharmed
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A), **TOL)
+
+    @pytest.mark.slow
+    def test_tcp_shutdown_releases_sockets_and_threads(self,
+                                                       sparse_operand):
+        import gc
+        import warnings
+
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", ResourceWarning)
+            with plan.to_cluster(transport="tcp") as cl:
+                cl.matvec(x)
+            gc.collect()                # unclosed sockets would warn here
+        for t in threading.enumerate():
+            assert not t.name.startswith(("cluster-tcp", "cluster-beat",
+                                          "cluster-worker"))
+
+    def test_memory_shutdown_joins_worker_threads(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with plan.to_cluster() as cl:
+            cl.matvec(x)
+        time.sleep(0.05)
+        leftover = [t.name for t in threading.enumerate()
+                    if t.name.startswith(("cluster-worker", "cluster-beat"))]
+        assert leftover == []
+
+    def test_env_var_selects_transport(self, sparse_operand, monkeypatch):
+        assert resolve_transport(None) == "memory"
+        monkeypatch.setenv("REPRO_CLUSTER_TRANSPORT", "tcp")
+        assert resolve_transport(None) == "tcp"
+        assert resolve_transport("memory") == "memory"   # explicit wins
+        with pytest.raises(ValueError, match="transport"):
+            resolve_transport("carrier-pigeon")
+
+    def test_bytes_on_wire_accounting(self, sparse_operand):
+        # support-restricted task payloads: measured task traffic must
+        # be well under full-operand shipping on a 98%-sparse operand,
+        # and the totals must accumulate across rounds
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with plan.to_cluster() as cl:
+            assert cl.bytes_shards > 0
+            cl.matvec(x)
+            rep = cl.last_report
+            assert 0 < rep.bytes_tasks < rep.bytes_tasks_dense
+            assert rep.bytes_results > 0
+            cl.matvec(x)
+            totals = cl.wire_totals()
+            assert totals["bytes_tasks_total"] == \
+                rep.bytes_tasks + cl.last_report.bytes_tasks
+
+    def test_shard_supports_cover_nonzero_tiles(self, sparse_operand):
+        A, _ = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        for shard in shard_plan(plan, 3):
+            assert len(shard.supports) == len(shard.task_rows)
+            kb = shard.t_pad // shard.bk
+            for sup, task in zip(shard.supports, shard.tasks):
+                assert sorted(sup) == sorted(set(task["indices"].tolist()))
+                assert all(0 <= j < kb for j in sup)
 
 
 # ---------------------------------------------------------------------------
@@ -450,7 +700,8 @@ class TestFaults:
         for inj in (NoFaults(),
                     StragglerFaults(time_scale=2e-3, seed=5),
                     adversarial_faults([2], slowdown=7.0),
-                    FailStop({1: 2}, base=StragglerFaults(seed=9))):
+                    FailStop({1: 2}, base=StragglerFaults(seed=9)),
+                    Hang({0: 1}, base=StragglerFaults(seed=4))):
             back = from_spec(inj.to_spec())
             assert type(back) is type(inj)
             assert back.to_spec() == inj.to_spec()
@@ -464,6 +715,14 @@ class TestFaults:
         assert f.should_fail(0, 2)
         assert not f.should_fail(1, 99)
         assert not f.mask(4, 1)[0]
+
+    def test_hang_predicate(self):
+        h = Hang({1: 1})
+        assert not h.should_hang(1, 0)
+        assert h.should_hang(1, 1)
+        assert not h.should_hang(0, 99)
+        assert not h.should_fail(1, 99)     # silent, never fail-stop
+        assert not h.mask(4, 1)[1]
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +779,35 @@ class TestSurfaceIntegration:
         with pytest.raises(ValueError, match="no operand"):
             agg.retune()
 
+    def test_reship_after_retune(self, sparse_operand):
+        # plan.retune recompiles the packed shards; the cluster's
+        # workers then hold stale BSR tables until reship() re-ships
+        rng = np.random.default_rng(11)
+        t, r = 256, 144
+        A_sparse, x = sparse_operand
+        A_dense = jnp.asarray(rng.standard_normal((t, r)), jnp.float32)
+        plan = compile_plan(A_sparse, scheme="proposed", n=6, s=2)
+        with plan.to_cluster() as cl:
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A_sparse), **TOL)
+            shards_before = cl.bytes_shards
+            assert plan.retune(A_dense) == "reference"
+            sent = cl.reship()
+            assert sent > 0
+            assert cl.bytes_shards == shards_before + sent
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A_dense), **TOL)
+
+    def test_list_schemes_cli(self, capsys):
+        from repro.api.__main__ import format_scheme_table, main
+
+        table = format_scheme_table()
+        assert "proposed" in table and "weight law" in table
+        assert format_scheme_table("mm").count("\n") < table.count("\n")
+        assert main(["--list-schemes"]) == 0
+        out = capsys.readouterr().out
+        assert "repetition" in out and "NO" in out   # resilience column
+
     def test_trainer_retunes_every_n_steps(self, tmp_path):
         from repro.configs import get_smoke_config
         from repro.data.pipeline import DataConfig, make_pipeline
@@ -540,3 +828,33 @@ class TestSurfaceIntegration:
         tr.fit(lambda s: make_pipeline(dcfg, s), resume=False)
         assert [r["step"] for r in tr.retunes] == [1, 3]
         assert all(r["backend"] == "packed" for r in tr.retunes)
+
+    def test_trainer_reships_cluster_after_retune(self):
+        from repro.configs import get_smoke_config
+        from repro.data.pipeline import DataConfig, make_pipeline
+        from repro.models import build_model
+        from repro.optim.adamw import AdamWConfig
+        from repro.train import TrainConfig, Trainer
+
+        rng = np.random.default_rng(12)
+        A_sparse = jnp.asarray(block_sparse(rng, 128, 96, 0.99))
+        A_dense = jnp.asarray(rng.standard_normal((128, 96)), jnp.float32)
+        plan = compile_plan(A_sparse, scheme="proposed", n=6, s=2)
+        cfg = get_smoke_config("phi3-mini-3.8b")
+        model = build_model(cfg, dtype=jnp.float32)
+        dcfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4)
+        with plan.to_cluster() as cl:
+            # the provider drifts the operand across the crossover:
+            # the first retune recompiles and must re-ship the shards
+            tr = Trainer(model, AdamWConfig(lr=1e-3, warmup_steps=2,
+                                            total_steps=4),
+                         TrainConfig(steps=4, ckpt_dir=None, retune_every=2),
+                         coded_plans=[(plan, lambda params: A_dense, cl)])
+            tr.fit(lambda s: make_pipeline(dcfg, s), resume=False)
+            assert tr.retunes[0]["backend"] == "reference"
+            assert tr.retunes[0]["reshipped_bytes"] > 0
+            # second retune: same operand object, nothing recompiled
+            assert "reshipped_bytes" not in tr.retunes[1]
+            x = jnp.asarray(rng.standard_normal(128), jnp.float32)
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A_dense), **TOL)
