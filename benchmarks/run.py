@@ -642,6 +642,168 @@ def cluster_bench(scale: float, rounds: int = 30, seed: int = 7,
 
 
 # ---------------------------------------------------------------------------
+# Fleet sessions: pipelined in-flight rounds + matvec microbatching
+# (framework bench, tracked via BENCH_fleet.json)
+# ---------------------------------------------------------------------------
+
+
+def fleet_bench(scale: float, calls: int = 48, seed: int = 11,
+                json_path: str = "BENCH_fleet.json"):
+    """Session throughput: CodedFleet vs the sequential ClusterPlan.
+
+    One plan, ``calls`` matvec rounds on the memory transport.  The
+    baseline is the blocking ``ClusterPlan`` shim (one round in flight,
+    no coalescing -- the pre-fleet public surface, now without its
+    per-call ``asyncio.run``).  The fleet grid sweeps in-flight caps
+    1/4/16 x microbatch on/off, submitting every call as a future up
+    front: pipelining overlaps round latencies and microbatching
+    coalesces queued matvecs into wider rounds (the MM-regime
+    amortization).  Alongside throughput the bench asserts the
+    redesign's two safety claims: (1) bitwise parity -- explicit-mask
+    rounds match the sequential path exactly, and every race-mode round
+    matches the in-process plan under its observed pattern; (2) no
+    event loop is created per call on the fleet path (``asyncio.run`` /
+    ``new_event_loop`` are counted during the timed section).
+    """
+    import asyncio as _asyncio  # noqa: PLC0415
+    import json as _json  # noqa: PLC0415
+
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.api import CodedFleet, compile_plan  # noqa: PLC0415
+
+    n, k, b = 12, 9, 8
+    t = max(int(4096 * scale) // 128 * 128, 256)
+    r = max(int(4608 * scale) // (k * 8) * (k * 8), k * 8)
+    zeros = 0.98
+    rng = np.random.default_rng(seed)
+    mask = rng.random((t // 8, r // 8)) >= zeros
+    A = jnp.asarray((rng.standard_normal((t, r)) *
+                     np.kron(mask, np.ones((8, 8)))).astype(np.float32))
+    xcalls = [jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+              for _ in range(calls)]
+    plan = compile_plan(A, scheme="proposed", n=n, s=n - k,
+                        backend="packed")
+
+    def stats(lat_s, elapsed):
+        lat_ms = np.asarray(sorted(lat_s)) * 1e3
+        return {"throughput_cps": calls / elapsed,
+                "lat_p50_ms": float(np.percentile(lat_ms, 50)),
+                "lat_p99_ms": float(np.percentile(lat_ms, 99))}
+
+    # -- sequential baseline: the blocking single-plan shim --------------
+    done_fixed = np.ones(n, bool)
+    done_fixed[[3, 7, 10]] = False
+    with plan.to_cluster() as cl:
+        cl.matvec(xcalls[0])                        # warm workers + cache
+        seq_parity = np.asarray(cl.matvec(xcalls[0], done_fixed))
+        lat = []
+        t0 = time.perf_counter()
+        for xc in xcalls:
+            t1 = time.perf_counter()
+            cl.matvec(xc)
+            lat.append(time.perf_counter() - t1)
+        sequential = {"mode": "ClusterPlan sequential", **stats(
+            lat, time.perf_counter() - t0)}
+    emit("fleet/sequential", sequential["lat_p50_ms"] * 1e3,
+         f"cps={sequential['throughput_cps']:.1f}")
+
+    # -- fleet grid: in-flight x microbatch ------------------------------
+    loop_creations = {"n": 0}
+    real_run, real_new = _asyncio.run, _asyncio.new_event_loop
+
+    def counting_run(*a, **kw):
+        loop_creations["n"] += 1
+        return real_run(*a, **kw)
+
+    def counting_new(*a, **kw):
+        loop_creations["n"] += 1
+        return real_new(*a, **kw)
+
+    grid = []
+    parity_ok = True
+    for inflight in (1, 4, 16):
+        for micro in (False, True):
+            with CodedFleet(n, transport="memory", max_inflight=inflight,
+                            microbatch=micro,
+                            queue_cap=calls + 8) as fleet:
+                h = fleet.attach(plan)
+                h.matvec(xcalls[0])                 # warm
+                # bitwise parity, explicit mask: fleet == sequential shim
+                got = np.asarray(h.matvec(xcalls[0], done_fixed))
+                parity_ok &= bool(np.array_equal(got, seq_parity))
+                warm_rounds = len(h.reports)
+                lat = [0.0] * calls
+                t_submit = [0.0] * calls
+                _asyncio.run, _asyncio.new_event_loop = \
+                    counting_run, counting_new
+                try:
+                    t0 = time.perf_counter()
+                    futs = []
+                    for i, xc in enumerate(xcalls):
+                        t_submit[i] = time.perf_counter()
+                        fut = h.submit_matvec(xc)
+                        fut.add_done_callback(
+                            lambda f, i=i: lat.__setitem__(
+                                i, time.perf_counter() - t_submit[i]))
+                        futs.append(fut)
+                    outs = [np.asarray(f.result()) for f in futs]
+                    elapsed = time.perf_counter() - t0
+                finally:
+                    _asyncio.run, _asyncio.new_event_loop = \
+                        real_run, real_new
+                # race-pattern parity: each round's decode must be
+                # bitwise the in-process plan under its observed mask
+                reports = list(h.reports)[warm_rounds:]
+                ci = 0
+                for rep in reports:
+                    pat = jnp.asarray(rep.pattern)
+                    for _ in range(rep.calls):
+                        want = np.asarray(plan.matvec(xcalls[ci], pat))
+                        parity_ok &= bool(np.array_equal(outs[ci], want))
+                        ci += 1
+                row = {"max_inflight": inflight, "microbatch": micro,
+                       "rounds": len(reports),
+                       "max_calls_per_round": max(r.calls
+                                                  for r in reports),
+                       **stats(lat, elapsed)}
+                grid.append(row)
+                emit(f"fleet/inflight{inflight}_mb{int(micro)}",
+                     row["lat_p50_ms"] * 1e3,
+                     f"cps={row['throughput_cps']:.1f};"
+                     f"rounds={row['rounds']}")
+
+    best16 = max((g for g in grid if g["max_inflight"] == 16),
+                 key=lambda g: g["throughput_cps"])
+    speedup = best16["throughput_cps"] / sequential["throughput_cps"]
+    assert parity_ok, "fleet results diverged from the sequential path"
+    assert loop_creations["n"] == 0, (
+        f"fleet path created {loop_creations['n']} event loops during "
+        f"calls; the per-call asyncio.run pattern must not return")
+    assert speedup >= 2.0, (
+        f"fleet at 16 in-flight is only {speedup:.2f}x the sequential "
+        f"ClusterPlan baseline (need >= 2x)")
+    emit("fleet/speedup", 0.0,
+         f"16_inflight_vs_sequential={speedup:.2f}x;parity_bitwise=True;"
+         f"event_loops_created=0")
+
+    payload = {
+        "bench": "fleet",
+        "config": {"n": n, "k": k, "t": t, "r": r, "batch_cols": b,
+                   "zeros": zeros, "calls": calls, "seed": seed,
+                   "backend": "packed", "transport": "memory"},
+        "sequential": sequential,
+        "fleet": grid,
+        "speedup_16_vs_sequential": speedup,
+        "parity_bitwise": bool(parity_ok),
+        "event_loops_created_during_calls": loop_creations["n"],
+    }
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("fleet/json", 0.0, f"wrote={json_path}")
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -656,6 +818,8 @@ def main() -> None:
     ap.add_argument("--cluster-transport", default="memory",
                     choices=("memory", "pipe", "tcp"),
                     help="cluster transport for the cluster bench")
+    ap.add_argument("--fleet-calls", type=int, default=48,
+                    help="matvec calls per configuration in the fleet bench")
     ap.add_argument("--list", action="store_true",
                     help="print the scheme registry table and exit")
     args = ap.parse_args()
@@ -678,6 +842,7 @@ def main() -> None:
         "cluster": lambda: cluster_bench(
             args.scale, rounds=args.cluster_rounds,
             transport=args.cluster_transport),
+        "fleet": lambda: fleet_bench(args.scale, calls=args.fleet_calls),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

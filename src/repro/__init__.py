@@ -15,9 +15,9 @@ algorithmic core in ``repro.core``; execution backends in
 from __future__ import annotations
 
 _API = (
-    "CodedPlan", "SchemeInfo", "block_zero_fraction", "choose_backend",
-    "compile_plan", "list_schemes", "make_scheme", "register_scheme",
-    "scheme_info", "scheme_names",
+    "CodedFleet", "CodedFuture", "CodedPlan", "PlanHandle", "SchemeInfo",
+    "block_zero_fraction", "choose_backend", "compile_plan", "list_schemes",
+    "make_scheme", "register_scheme", "scheme_info", "scheme_names",
 )
 
 _CLUSTER = ("ClusterPlan", "ClusterReport", "dumps_plan", "loads_plan")

@@ -10,7 +10,10 @@ encodings (Alg. 1/2, cyclic, Delta-partition, hetero, dense baselines);
 ``backends`` -- density-measured automatic backend choice (the
 BENCH_runtime.json packed/reference crossover, ``pallas`` on TPU);
 ``plan``     -- ``compile_plan`` -> ``CodedPlan`` with ``matvec`` /
-``matmat`` / ``aggregate`` and a pre-warmed LRU decode cache.
+``matmat`` / ``aggregate`` and a pre-warmed LRU decode cache;
+``fleet``    -- ``CodedFleet`` shared-worker sessions: attach many
+plans to one persistent worker set, submit rounds as ``CodedFuture``s
+with in-flight pipelining and matvec microbatching.
 """
 
 from .backends import (  # noqa: F401
@@ -18,6 +21,11 @@ from .backends import (  # noqa: F401
     block_zero_fraction,
     choose_backend,
     density_crossover,
+)
+from .fleet import (  # noqa: F401
+    CodedFleet,
+    CodedFuture,
+    PlanHandle,
 )
 from .plan import CodedPlan, compile_plan  # noqa: F401
 from .schemes import (  # noqa: F401

@@ -1,0 +1,39 @@
+"""Public fleet-session API: shared workers, async futures,
+microbatched rounds.
+
+    from repro.api.fleet import CodedFleet
+
+    fleet = CodedFleet(n_workers=12, transport="memory")
+    head = fleet.attach(head_plan)        # shards shipped once
+    agg = fleet.attach(agg_plan)          # same workers, second plan
+
+    futs = [head.submit_matvec(x) for x in batches]   # rounds pipeline;
+    ys = [f.result() for f in futs]                   # matvecs coalesce
+    g = agg.submit_aggregate(payloads).result()
+    fleet.close()
+
+A ``CodedFleet`` owns one persistent transport + worker set and one
+long-lived dispatcher event loop; every consumer of coded compute (the
+serve engine's LM head via ``CodedConfig.fleet``, ``CodedMoE``
+experts, ``CodedAggregator.to_cluster(fleet=...)``, trainer-registered
+plans) attaches to the same session instead of hoarding its own
+workers.  Submissions return ``CodedFuture``s (``result`` / ``done`` /
+``add_done_callback`` / ``cancel``) with multiple rounds in flight,
+bounded-queue backpressure, per-plan deadlines, and matvec -> matmat
+microbatching (queued matvecs against one plan coalesce into a wider
+round and decode back out bitwise-identically).  The in-flight cap
+defaults from the ``REPRO_FLEET_MAX_INFLIGHT`` env var.
+
+The implementation lives in ``repro.cluster.fleet`` (it is cluster
+machinery: transports, wire v3 plan routing, liveness); this module is
+the supported import path.
+"""
+
+from ..cluster.fleet import (  # noqa: F401
+    ENV_MAX_INFLIGHT,
+    ClusterReport,
+    CodedFleet,
+    CodedFuture,
+    PlanHandle,
+    default_max_inflight,
+)

@@ -240,6 +240,12 @@ class CodedPlan:
         tune the liveness protocol.  Shut the cluster down (``with``
         block or ``.shutdown()``) when done -- the transport owns real
         sockets/processes/threads.
+
+        A ``ClusterPlan`` is a private single-plan session (one fleet,
+        ``max_inflight=1``).  To share one worker set across several
+        plans -- and get async futures, pipelined in-flight rounds and
+        matvec microbatching -- build a ``repro.api.fleet.CodedFleet``
+        and ``fleet.attach(plan)`` instead.
         """
         from ..cluster import ClusterPlan  # noqa: PLC0415 - optional layer
 

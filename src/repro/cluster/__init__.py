@@ -1,5 +1,5 @@
-"""Cluster runtime: ship compiled plans to workers over pluggable
-transports, measure real straggler mitigation.
+"""Cluster runtime: shared-worker fleet sessions over pluggable
+transports, measuring real straggler mitigation.
 
 The simulator (`repro.core.straggler`) predicts coded-job wall-clock;
 this package *produces* it.  ``compile_plan(...).to_cluster()`` turns a
@@ -17,10 +17,15 @@ precompiled ``CodedPlan`` into a ``ClusterPlan`` with the same
     sockets with a version/digest handshake); pick via
     ``to_cluster(transport=...)``, ``CodedConfig.transport``, or the
     ``REPRO_CLUSTER_TRANSPORT`` env var;
-  * ``dispatcher`` -- the async edge-server loop: broadcast, collect the
-    uniform result/heartbeat stream, decode at the fastest-k task set,
-    partial-straggler credit, deadlines, and heartbeat-derived liveness
-    (missed beats => suspected => shard re-ship + requeue);
+  * ``fleet``      -- the session spine: ``CodedFleet`` owns one persistent
+    worker set + one long-lived dispatcher loop; ``attach(plan)`` ships
+    shards once and returns a ``PlanHandle`` whose ``submit_*`` calls
+    return ``CodedFuture``s -- multiple rounds in flight, queued
+    matvecs microbatched into wider rounds, heartbeat-derived liveness
+    (missed beats => suspected => shard re-ship + requeue across every
+    live round), partial-straggler credit, deadlines;
+  * ``dispatcher`` -- ``ClusterPlan``, the blocking back-compat shim: a
+    private single-plan fleet with ``max_inflight=1``;
   * ``faults``     -- deterministic latency / death / hang injection as a
     decorator around any transport's serve path (it *causes* behaviour
     the protocol then *measures*; liveness never reads it).
@@ -31,6 +36,12 @@ including measured bytes-on-wire per scheme.
 """
 
 from .dispatcher import ClusterPlan, ClusterReport  # noqa: F401
+from .fleet import (  # noqa: F401
+    CodedFleet,
+    CodedFuture,
+    PlanHandle,
+    default_max_inflight,
+)
 from .faults import (  # noqa: F401
     FailStop,
     Hang,

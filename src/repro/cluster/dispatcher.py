@@ -1,109 +1,35 @@
-"""Async edge-server dispatcher: broadcast, collect, decode-at-k.
+"""``ClusterPlan``: the blocking single-plan shim over ``CodedFleet``.
 
-``ClusterPlan`` is the distributed twin of an in-process ``CodedPlan``:
-same ``matvec / matmat / aggregate`` signatures, but each call actually
-ships work to workers and the done pattern is *observed*, not given.
-The dispatcher is written against the ``Transport`` interface
-(``repro.cluster.transport``: memory | pipe | tcp) and cannot tell
-which one it runs over; the coordinator is an asyncio event loop per
-call:
+Through PR 4 this module *was* the dispatcher -- an asyncio event loop
+spun up per call (``asyncio.run`` inside ``matvec``), torn down at
+decode.  The fleet redesign (``repro.cluster.fleet``) moved the whole
+coordination spine -- the uniform event stream, heartbeat-driven
+suspicion, fail-stop requeue with shard re-shipping, partial-straggler
+credit, deadlines, decode-at-fastest-k with the LRU pattern cache --
+into one long-lived session loop shared by many plans and many
+in-flight rounds.  What remains here is the back-compat surface:
 
-  * tasks go out to every (live) worker owning a target row -- with
-    **support-restricted payloads**: a matvec ships only the x-blocks
-    the worker's nonzero tiles read, a matmat only the nonzero coded-B
-    block-rows in that support, so per-task wire traffic scales with
-    omega/k of the dense scheme's (the paper's communication claim,
-    measured as ``bytes_tasks`` per call);
-  * results AND heartbeats stream back on one uniform transport queue;
-    the dispatcher decodes **as soon as any fastest-k task set
-    completes** -- stragglers' leftovers are cancelled, not awaited;
-  * **liveness is measured, not injected**: a worker that misses
-    heartbeats for ``suspect_after`` seconds while owning outstanding
-    rows is *suspected* and handled as fail-stop -- its shard is
-    re-shipped to a live host and its rows requeued -- exactly like an
-    explicit death notice or a dropped connection.  Fault injection
-    (``repro.cluster.faults``) only *causes* such behaviour for
-    deterministic tests; the protocol never reads it;
-  * **partial-straggler credit**: completions are per *task row*, so a
-    slow host serving several virtual workers contributes the rows it
-    finished (Sec. IV-B) -- the decode pattern can include a strict
-    subset of a worker's rows;
-  * decode reuses the plan's LRU cache keyed on the observed pattern,
-    with a greedy independent-row fallback for patterns whose first-k
-    rows are singular (repetition codes).
+    ClusterPlan(plan, n_workers, transport=...)  ==
+        CodedFleet(n_workers, transport=..., max_inflight=1,
+                   microbatch=False).attach(plan)
 
-Passing an explicit ``done=`` mask switches a call to parity mode: only
-those rows are dispatched and the decode uses exactly that pattern, so
-the result is bitwise the in-process packed backend's (the acceptance
-check for the whole wire/worker/dispatcher stack, on all three
-transports).
+with the same blocking ``matvec / matmat / aggregate`` signatures,
+per-round ``ClusterReport``s, bytes-on-wire accounting, and liveness
+semantics as before -- every round is one future submitted to the
+fleet and immediately ``result()``-ed.  Explicit ``done=`` masks stay
+parity mode: only those rows are dispatched and the decode uses
+exactly that pattern, so the result is bitwise the in-process packed
+backend's (the acceptance check for the whole wire/worker/fleet stack,
+on all three transports).
+
+New code should hold a ``CodedFleet`` directly (``repro.api.fleet``):
+shared workers across plans, async futures, pipelined rounds and
+matvec microbatching all live there.
 """
 
 from __future__ import annotations
 
-import asyncio
-import threading
-import time
-from collections import deque
-from dataclasses import dataclass, field
-
-import numpy as np
-
-from .transport import make_transport
-from .wire import Heartbeat, Task, plan_packed, shard_plan
-
-_POLL_S = 0.02          # event-queue poll slice inside the event loop
-
-
-@dataclass
-class ClusterReport:
-    """What one dispatched call observed (the bench's raw material)."""
-
-    op: str
-    round: int
-    wall_s: float = 0.0        # dispatch -> k-th completion + decode
-    decode_s: float = 0.0
-    n_tasks: int = 0
-    n_dispatched: int = 0
-    n_done: int = 0
-    pattern: np.ndarray | None = None       # observed task-done mask
-    rows: np.ndarray | None = None          # rows actually decoded from
-    deaths: int = 0
-    suspected: int = 0         # liveness: missed-heartbeat fail-stops
-    requeues: int = 0
-    deadline_hit: bool = False
-    bytes_tasks: int = 0       # task frames actually put on the wire
-    bytes_results: int = 0     # result payload bytes received
-    bytes_tasks_dense: int = 0  # what full-operand shipping would have cost
-    completed_per_worker: dict = field(default_factory=dict)
-    partial_workers: tuple[int, ...] = ()   # hosts with 0 < done < owned
-    worker_work: dict = field(default_factory=dict)
-
-    def as_dict(self) -> dict:
-        return {
-            "op": self.op, "round": self.round, "wall_s": self.wall_s,
-            "decode_s": self.decode_s, "n_tasks": self.n_tasks,
-            "n_dispatched": self.n_dispatched, "n_done": self.n_done,
-            "deaths": self.deaths, "suspected": self.suspected,
-            "requeues": self.requeues, "deadline_hit": self.deadline_hit,
-            "bytes_tasks": self.bytes_tasks,
-            "bytes_results": self.bytes_results,
-            "bytes_tasks_dense": self.bytes_tasks_dense,
-            "partial_workers": list(self.partial_workers),
-        }
-
-
-def _independent_rows(G: np.ndarray, done_rows, k: int):
-    """Greedy full-rank row pick in completion order, for patterns whose
-    first-k rows are singular (non-MDS baselines like repetition)."""
-    sel: list[int] = []
-    for r in done_rows:
-        trial = sel + [int(r)]
-        if np.linalg.matrix_rank(G[trial]) == len(trial):
-            sel = trial
-            if len(sel) == k:
-                return np.asarray(sel)
-    return None
+from .fleet import ClusterReport, CodedFleet  # noqa: F401 - re-export
 
 
 class ClusterPlan:
@@ -112,7 +38,7 @@ class ClusterPlan:
     Build via ``CodedPlan.to_cluster(...)`` or from shipped bytes via
     ``ClusterPlan.from_bytes(...)``.  Use as a context manager or call
     ``shutdown()`` -- worker threads/processes/sockets are real
-    resources and the transport owns them.
+    resources and the (private, single-plan) fleet owns them.
     """
 
     def __init__(self, plan, n_workers: int | None = None, *,
@@ -122,32 +48,19 @@ class ClusterPlan:
                  suspect_after: float | None = None):
         self.plan = plan
         self.deadline = deadline
-        self.n_tasks = plan.n_tasks
-        self.k = plan.k
-        self.heartbeat_s = heartbeat_s
-        self.suspect_after = suspect_after if suspect_after is not None \
-            else max(8 * heartbeat_s, 2.0)
-        self.packed = plan_packed(plan)
-        shards = shard_plan(plan, n_workers, packed=self.packed)
-        self.n_workers = len(shards)
-        self._load_shards(shards)
-        self._owner = {row: s.worker for s in shards for row in s.task_rows}
-        self._home = dict(self._owner)          # original assignment
+        w = n_workers if n_workers is not None else plan.n
+        if not 1 <= w <= plan.n:
+            raise ValueError(f"n_workers must be in [1, {plan.n}], got {w}")
         # backend= is the legacy worker-backend spelling (thread|process)
-        self.transport = make_transport(
-            transport if transport is not None else backend,
-            self.n_workers, faults=faults, heartbeat_s=heartbeat_s)
-        self.transport_name = self.transport.name
-        self.bytes_shards = self.transport.start(self._shard_bytes)
-        self.bytes_tasks_total = 0
-        # which shard blobs each host currently holds: a host that
-        # inherited a dead peer's shard holds two, and its own heir
-        # must receive BOTH when it dies in turn
-        self._held: dict[int, set[int]] = {w: {w}
-                                           for w in range(self.n_workers)}
-        self._dead: set[int] = set()
-        self._round = 0
-        self.reports: deque[ClusterReport] = deque(maxlen=512)
+        self.fleet = CodedFleet(
+            w, transport=transport if transport is not None else backend,
+            faults=faults, heartbeat_s=heartbeat_s,
+            suspect_after=suspect_after, max_inflight=1, microbatch=False)
+        try:
+            self.handle = self.fleet.attach(plan, deadline=deadline)
+        except BaseException:
+            self.fleet.close()
+            raise
         self._closed = False
 
     # -- lifecycle ---------------------------------------------------------
@@ -163,7 +76,7 @@ class ClusterPlan:
             return
         self._closed = True
         try:
-            self.transport.close()
+            self.fleet.close()
         except Exception:  # pragma: no cover - teardown best-effort
             pass
 
@@ -179,318 +92,56 @@ class ClusterPlan:
         except Exception:
             pass
 
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def n_workers(self) -> int:
+        return self.handle.n_workers
+
+    @property
+    def n_tasks(self) -> int:
+        return self.handle.n_tasks
+
+    @property
+    def k(self) -> int:
+        return self.handle.k
+
+    @property
+    def packed(self):
+        return self.handle._ps.packed
+
+    @property
+    def transport(self):
+        return self.fleet.transport
+
+    @property
+    def transport_name(self) -> str:
+        return self.fleet.transport_name
+
+    @property
+    def reports(self):
+        return self.handle.reports
+
     @property
     def last_report(self) -> ClusterReport | None:
-        return self.reports[-1] if self.reports else None
+        return self.handle.last_report
+
+    @property
+    def bytes_shards(self) -> int:
+        return self.handle.bytes_shards
+
+    @property
+    def bytes_tasks_total(self) -> int:
+        return self.handle.bytes_tasks_total
+
+    @property
+    def _shard_bytes(self) -> list[bytes]:
+        return self.handle.shard_blobs
 
     def wire_totals(self) -> dict:
         """Cumulative bytes-on-wire: shards (shipped once, plus any
         re-shipping) and per-task traffic across all rounds."""
-        return {"transport": self.transport_name,
-                "bytes_shards": self.bytes_shards,
-                "bytes_tasks_total": self.bytes_tasks_total}
-
-    # -- helpers -----------------------------------------------------------
-
-    def _load_shards(self, shards) -> None:
-        """(Re)derive the per-task wire state from freshly cut shards:
-        encoded blobs, work units, and the input column supports (the
-        only x-blocks / coded-B block-rows a task needs shipped --
-        omega/k-proportional traffic)."""
-        self._shard_bytes = [s.encode() for s in shards]
-        self._work = {row: s.work[j] for s in shards
-                      for j, row in enumerate(s.task_rows)}
-        self._support = {row: np.asarray(s.supports[j], np.int64)
-                         for s in shards if s.supports
-                         for j, row in enumerate(s.task_rows)}
-
-    def _task_mask(self, done) -> np.ndarray | None:
-        if done is None:
-            return None
-        mask = np.asarray(self.plan._task_done(np.asarray(done, bool)), bool)
-        if mask.shape[0] != self.n_tasks:
-            raise ValueError(f"done mask covers {mask.shape[0]} tasks, "
-                             f"plan has {self.n_tasks}")
-        return mask
-
-    def _live(self) -> list[int]:
-        return [w for w in range(self.n_workers)
-                if w not in self._dead and self.transport.alive(w)]
-
-    def _submit(self, row: int, task: Task, inflight: dict,
-                report: ClusterReport) -> None:
-        sent = self.transport.submit(self._owner[row], task)
-        report.bytes_tasks += sent
-        self.bytes_tasks_total += sent
-        inflight[row] = self._owner[row]
-
-    def _requeue(self, dead_worker: int, inflight: dict, missing,
-                 make_task, report: ClusterReport) -> int:
-        """Re-home a dead worker's rows; resubmit its outstanding ones."""
-        self._dead.add(dead_worker)
-        live = self._live()
-        if not live:
-            raise RuntimeError("all cluster workers are dead")
-        # least-loaded live host inherits (by currently-owned row count)
-        owned = {w: sum(1 for o in self._owner.values() if o == w)
-                 for w in live}
-        heir = min(live, key=lambda w: (owned[w], w))
-        # re-ship every shard the dead host held -- its own AND any it
-        # previously inherited (a second death must not strand those)
-        for idx in self._held.pop(dead_worker, {dead_worker}):
-            self.bytes_shards += self.transport.ship_shard(
-                heir, self._shard_bytes[idx])
-            self._held[heir].add(idx)
-        moved = 0
-        for row, owner in list(self._owner.items()):
-            if owner == dead_worker:
-                self._owner[row] = heir
-        for row in missing:
-            row = int(row)          # json-safe task ids on the wire
-            if inflight.get(row) == dead_worker:
-                self._submit(row, make_task(row), inflight, report)
-                moved += 1
-        return moved
-
-    def reship(self) -> int:
-        """Re-shard the (re-compiled) plan and re-ship every worker's
-        shard to its current holder.
-
-        ``plan.retune`` swaps the executor's packed state when the
-        operand drifts; the workers' BSR task tables are then stale.
-        The trainer calls this after a retune that recompiled (see
-        ``Trainer coded_plans=``).  Returns bytes shipped.
-        """
-        if self._closed:
-            raise RuntimeError("cluster has been shut down")
-        self.packed = plan_packed(self.plan)
-        shards = shard_plan(self.plan, self.n_workers, packed=self.packed)
-        self._load_shards(shards)
-        sent = 0
-        for host, idxs in self._held.items():
-            if host in self._dead:
-                continue
-            for idx in idxs:
-                sent += self.transport.ship_shard(host,
-                                                  self._shard_bytes[idx])
-        self.bytes_shards += sent
-        return sent
-
-    def _restricted_payload(self, row: int, b_op: np.ndarray) -> dict:
-        """Support-restricted task payload (see module docstring): only
-        the nonzero b block-rows the worker's tiles read are shipped;
-        the worker scatters them back, bitwise-equivalent to dense."""
-        sup = self._support.get(row)
-        packed = self.packed
-        kb = packed.t_pad // packed.bk
-        if sup is None or len(sup) >= kb:
-            return {"b": b_op}
-        blocks = b_op.reshape(kb, packed.bk, b_op.shape[1])
-        # drop support rows where this call's operand is exactly zero
-        # (a sparse coded-B chunk): zero rows contribute nothing.  The
-        # test must treat NaN/inf as nonzero (!= 0 is True for NaN) so
-        # a poisoned operand still propagates instead of being dropped
-        nz = (blocks[sup] != 0).any(axis=(1, 2))
-        sel = sup[nz]
-        bx = blocks[sel].reshape(len(sel) * packed.bk, b_op.shape[1])
-        return {"bx": np.ascontiguousarray(bx), "bi": sel.astype(np.int32)}
-
-    # -- the collection loop ----------------------------------------------
-
-    async def _collect(self, round_id: int, target: np.ndarray,
-                       inflight: dict, make_task, wait_all: bool,
-                       deadline: float | None, report: ClusterReport):
-        """Gather results until decodable (race) or all-target (parity).
-
-        Consumes the transport's uniform event stream: results advance
-        the pattern, heartbeats advance liveness, deaths (explicit
-        notices, dropped connections, or heartbeat-timeout suspicion)
-        trigger shard re-shipping + requeue.
-        """
-        loop = asyncio.get_running_loop()
-        t_start = time.perf_counter()
-        t_end = None if deadline is None else t_start + deadline
-        results: dict[int, dict] = {}
-        order: list[int] = []            # completion order of task rows
-        cache = self.plan._decode_cache()
-        G = np.asarray(cache._G)
-        beats = {w: t_start for w in self._live()}
-
-        def decodable():
-            if len(results) < self.k:
-                return None
-            if wait_all:
-                if len(results) < int(target.sum()):
-                    return None
-                mask = target
-            else:
-                mask = np.zeros(self.n_tasks, bool)
-                mask[list(results)] = True
-            try:
-                dplan = cache.plan(mask)
-                return mask, dplan.rows, dplan.hinv
-            except (ValueError, np.linalg.LinAlgError):
-                rows = _independent_rows(G, order, self.k)
-                if rows is None:
-                    return None
-                hinv = np.linalg.inv(G[rows]).astype(np.float32)
-                return mask, rows, hinv
-
-        def fail_worker(worker: int, cause: str) -> None:
-            if worker in self._dead:
-                return                    # notices are idempotent
-            if cause == "suspected":
-                report.suspected += 1
-            else:
-                report.deaths += 1
-            missing = [r for r in np.flatnonzero(target) if r not in results]
-            report.requeues += self._requeue(worker, inflight, missing,
-                                             make_task, report)
-            beats.pop(worker, None)
-
-        while True:
-            dec = decodable()
-            if dec is not None:
-                break
-            now = time.perf_counter()
-            # heartbeat-driven suspicion: a worker we are waiting on
-            # that has gone silent is handled exactly like fail-stop
-            waiting_on = {inflight.get(int(r)) for r in np.flatnonzero(target)
-                          if int(r) not in results}
-            for w, seen in list(beats.items()):
-                if now - seen <= self.suspect_after:
-                    continue
-                if w in waiting_on:
-                    fail_worker(w, "suspected")
-                else:
-                    beats[w] = now       # idle worker: fresh grace period
-            remaining = None if t_end is None else t_end - now
-            if remaining is not None and remaining <= 0:
-                report.deadline_hit = True
-                if not wait_all:
-                    # accept whatever pattern we have, if it decodes
-                    mask = np.zeros(self.n_tasks, bool)
-                    mask[list(results)] = True
-                    rows = _independent_rows(G, order, self.k)
-                    if rows is not None:
-                        dec = (mask, rows,
-                               np.linalg.inv(G[rows]).astype(np.float32))
-                        break
-                raise TimeoutError(
-                    f"deadline: {len(results)}/{self.k} needed task rows "
-                    f"after {deadline}s")
-            slice_s = _POLL_S if remaining is None \
-                else min(_POLL_S, max(remaining, 1e-4))
-            res = await loop.run_in_executor(None, self.transport.poll,
-                                             slice_s)
-            if res is None:
-                continue
-            if isinstance(res, Heartbeat):
-                if res.worker not in self._dead:
-                    beats[res.worker] = time.perf_counter()
-                continue
-            if res.kind == "death":
-                fail_worker(res.worker, "death")
-                continue
-            if res.round != round_id:
-                continue                      # stale round, already decoded
-            if not res.ok:
-                raise RuntimeError(f"worker {res.worker} failed task "
-                                   f"{res.task_row}: {res.error}")
-            if res.task_row in results or not target[res.task_row]:
-                continue
-            results[res.task_row] = res.arrays
-            order.append(res.task_row)
-            report.bytes_results += sum(int(a.nbytes)
-                                        for a in res.arrays.values())
-            report.completed_per_worker[res.worker] = \
-                report.completed_per_worker.get(res.worker, 0) + 1
-            report.worker_work[res.worker] = \
-                report.worker_work.get(res.worker, 0.0) + res.work
-
-        mask, rows, hinv = dec
-        report.n_done = len(results)
-        report.pattern = mask.copy() if mask is not target else mask
-        report.rows = np.asarray(rows)
-        return results, rows, hinv
-
-    @staticmethod
-    def _run_coordinator(coro):
-        """``asyncio.run`` the collection loop; when the caller already
-        sits inside an event loop (an async serving host), run it on a
-        helper thread instead of raising."""
-        try:
-            asyncio.get_running_loop()
-        except RuntimeError:
-            return asyncio.run(coro)
-        box: dict = {}
-
-        def runner():
-            try:
-                box["value"] = asyncio.run(coro)
-            except BaseException as e:  # noqa: BLE001 - re-raised below
-                box["error"] = e
-
-        t = threading.Thread(target=runner, daemon=True)
-        t.start()
-        t.join()
-        if "error" in box:
-            raise box["error"]
-        return box["value"]
-
-    def _run_round(self, op: str, target: np.ndarray, make_task,
-                   wait_all: bool, deadline: float | None,
-                   dense_payload_bytes: int = 0):
-        if self._closed:
-            raise RuntimeError("cluster has been shut down")
-        if int(target.sum()) < self.k:
-            raise ValueError(f"done mask admits {int(target.sum())} task "
-                             f"rows, need at least k={self.k}")
-        self._round += 1
-        round_id = self._round
-        report = ClusterReport(op=op, round=round_id, n_tasks=self.n_tasks,
-                               n_dispatched=int(target.sum()))
-        t0 = time.perf_counter()
-        # between-rounds hygiene: deaths that surfaced while idle are
-        # handled before dispatching into a void (beats are re-stamped
-        # at collect start, so stale queued ones are simply dropped)
-        for ev in self.transport.drain():
-            if isinstance(ev, Heartbeat):
-                continue
-            if ev.kind == "death" and ev.worker not in self._dead:
-                report.deaths += 1
-                report.requeues += self._requeue(ev.worker, {}, [],
-                                                 make_task, report)
-        inflight: dict[int, int] = {}
-        for row in np.flatnonzero(target):
-            owner = self._owner[int(row)]
-            if owner not in self._dead and not self.transport.alive(owner):
-                # owner died between rounds (no notice seen yet):
-                # re-home before dispatching into a void
-                report.deaths += 1
-                report.requeues += self._requeue(owner, inflight, [],
-                                                 make_task, report)
-            self._submit(int(row), make_task(int(row)), inflight, report)
-        results, rows, hinv = self._run_coordinator(self._collect(
-            round_id, target, inflight, make_task, wait_all,
-            self.deadline if deadline is None else deadline, report))
-        if not wait_all:
-            for w in self._live():
-                self.transport.cancel(w, round_id)
-        report.bytes_tasks_dense = dense_payload_bytes * \
-            max(report.n_dispatched + report.requeues, 1)
-        # partial-straggler accounting: hosts whose decode-time credit is
-        # a strict subset of the task rows they were assigned (Sec. IV-B:
-        # a strong-but-slow device contributes the rows it finished)
-        owned = {}
-        for w in self._home.values():
-            owned[w] = owned.get(w, 0) + 1
-        report.partial_workers = tuple(sorted(
-            w for w, c in owned.items()
-            if 0 < report.completed_per_worker.get(w, 0) < c))
-        report.wall_s = time.perf_counter() - t0
-        self.reports.append(report)
-        return results, rows, hinv, report
+        return self.handle.wire_totals()
 
     # -- public ops (CodedPlan signatures) ---------------------------------
 
@@ -498,134 +149,33 @@ class ClusterPlan:
         """A^T x served by the cluster; ``done=None`` races the workers
         (decode at fastest-k), an explicit mask replays that exact
         pattern (parity mode)."""
-        import jax.numpy as jnp  # noqa: PLC0415
-
-        if self.plan.kind != "mv":
-            raise ValueError(f"matvec needs an mv plan, got {self.plan.kind}")
-        if self.packed is None:
-            raise ValueError("aggregation-only plan: no shards to matvec")
-        x = np.asarray(x, np.float32)
-        squeeze = x.ndim == 1
-        xb = x[None, :] if squeeze else x
-        b = xb.shape[0]
-        packed = self.packed
-        b_op = np.zeros((packed.t_pad, b), np.float32)
-        b_op[: packed.t] = xb.T[: packed.t]
-
-        target = self._target(done)
-        make_task = lambda row: Task(     # noqa: E731
-            round=self._round, op="matvec", task_row=row,
-            payload=self._restricted_payload(row, b_op), meta={"b": b})
-        results, rows, hinv, report = self._run_round(
-            "matvec", target, make_task, wait_all=done is not None,
-            deadline=deadline, dense_payload_bytes=int(b_op.nbytes))
-
-        t_dec = time.perf_counter()
-        y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])
-        u = hinv @ y.reshape(self.k, -1)
-        u = u.reshape(self.k, packed.c_pad, b)[:, : packed.c]
-        out = np.moveaxis(u, 2, 0).reshape(b, -1)[:, : self.plan.r]
-        report.decode_s = time.perf_counter() - t_dec
-        report.wall_s += report.decode_s    # wall = k-th completion + decode
-        out = jnp.asarray(out)
-        return out[0] if squeeze else out
+        self._check_open()
+        return self.handle.submit_matvec(x, done,
+                                         deadline=deadline).result()
 
     def matmat(self, B, done=None, *, deadline: float | None = None):
         """A^T B through paired coded operands, workers doing the
-        per-worker products.  Each task ships only the nonzero coded-B
-        block-rows in the worker's tile support -- the omega_B/k_B
-        bandwidth claim, measured per call."""
-        import jax.numpy as jnp  # noqa: PLC0415
-
-        from ..core.coded_matmul import split_block_columns  # noqa: PLC0415
-        from ..runtime import encode_blocks  # noqa: PLC0415
-
-        plan = self.plan
-        if plan.kind != "mm":
-            raise ValueError(f"matmat needs an mm plan, got {plan.kind}")
-        sch = plan.scheme
-        w = B.shape[1]
-        blocks_b = split_block_columns(jnp.asarray(B), sch.k_B)
-        if plan._sup_b is not None:
-            coded_b = encode_blocks(blocks_b, plan._sup_b, plan._coef_b,
-                                    "packed")
-        else:
-            coded_b = jnp.einsum(
-                "nk,ktc->ntc", jnp.asarray(plan._rb, jnp.float32), blocks_b)
-        b_np = np.asarray(coded_b, np.float32)
-        cb = b_np.shape[2]
-        packed = self.packed
-
-        def make_task(row: int) -> Task:
-            b_op = np.zeros((packed.t_pad, cb), np.float32)
-            b_op[: packed.t] = b_np[row, : packed.t]
-            return Task(round=self._round, op="matmat", task_row=row,
-                        payload=self._restricted_payload(row, b_op),
-                        meta={"cb": cb})
-
-        target = self._target(done)
-        results, rows, hinv, report = self._run_round(
-            "matmat", target, make_task, wait_all=done is not None,
-            deadline=deadline,
-            dense_payload_bytes=int(packed.t_pad * cb * 4))
-
-        t_dec = time.perf_counter()
-        y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])
-        y = y[:, : packed.c]                           # (k, ca, cb)
-        u = hinv @ y.reshape(self.k, -1)
-        u = u.reshape((self.k,) + y.shape[1:])
-        ka, kb = sch.k_A, sch.k_B
-        ca = y.shape[1]
-        out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3)
-        out = out.reshape(ka * ca, kb * cb)[: plan.r, : w]
-        report.decode_s = time.perf_counter() - t_dec
-        report.wall_s += report.decode_s
-        return jnp.asarray(out)
+        per-worker products; each task ships only the nonzero coded-B
+        block-rows in its tile support (the omega_B/k_B claim)."""
+        self._check_open()
+        return self.handle.submit_matmat(B, done,
+                                         deadline=deadline).result()
 
     def aggregate(self, payloads, done=None, *,
                   deadline: float | None = None):
         """Straggler-resilient sum of k shard-gradients, collected from
         real workers (gradient-coding decode: a^T G[rows] = 1^T)."""
-        import jax  # noqa: PLC0415
-        import jax.numpy as jnp  # noqa: PLC0415
+        self._check_open()
+        return self.handle.submit_aggregate(payloads, done,
+                                            deadline=deadline).result()
 
-        plan = self.plan
-        if plan.kind != "mv":
-            raise ValueError("aggregate needs an mv plan")
-        if len(payloads) != self.n_tasks:
-            raise ValueError(f"need {self.n_tasks} worker payloads, "
-                             f"got {len(payloads)}")
-        leaves0, treedef = jax.tree.flatten(payloads[0])
-        flat = [jax.tree.flatten(p)[0] for p in payloads]
-        sizes = np.asarray([sum(np.asarray(x).size for x in leaves)
-                            for leaves in flat], float)
-        work = sizes / max(sizes.max(), 1.0)
+    def reship(self) -> int:
+        """Re-shard the (re-compiled) plan and re-ship every worker's
+        shard to its current holder (see ``Trainer coded_plans=``).
+        Returns bytes shipped."""
+        self._check_open()
+        return self.handle.reship()
 
-        def make_task(row: int) -> Task:
-            return Task(round=self._round, op="aggregate", task_row=row,
-                        payload={f"leaf{i}": np.asarray(x)
-                                 for i, x in enumerate(flat[row])},
-                        meta={"work": float(work[row])})
-
-        target = self._target(done)
-        results, rows, hinv, report = self._run_round(
-            "aggregate", target, make_task, wait_all=done is not None,
-            deadline=deadline)
-
-        t_dec = time.perf_counter()
-        a = hinv.sum(axis=0)               # a^T G[rows] = 1^T
-        out_leaves = []
-        for i in range(len(leaves0)):
-            acc = None
-            for coef, r in zip(a, rows):
-                term = coef * np.asarray(
-                    results[int(r)][f"leaf{i}"], np.float32)
-                acc = term if acc is None else acc + term
-            out_leaves.append(jnp.asarray(acc))
-        report.decode_s = time.perf_counter() - t_dec
-        report.wall_s += report.decode_s
-        return jax.tree.unflatten(treedef, out_leaves)
-
-    def _target(self, done) -> np.ndarray:
-        mask = self._task_mask(done)
-        return np.ones(self.n_tasks, bool) if mask is None else mask
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("cluster has been shut down")

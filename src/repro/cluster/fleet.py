@@ -1,0 +1,1154 @@
+"""CodedFleet: a shared-worker session runtime with async futures,
+in-flight pipelining, and matvec -> matmat microbatching.
+
+The paper's schemes exist to keep *many* edge devices productively
+busy; before this module the repo's public surface was one blocking
+call on one private cluster per plan -- every round span up a fresh
+event loop, workers idled between rounds, and each consumer (LM head,
+MoE experts, gradient aggregator) hoarded its own worker fleet.  A
+``CodedFleet`` replaces that spine:
+
+  * **one session, many plans** -- the fleet owns one persistent
+    transport + worker set and one long-lived dispatcher event loop
+    (created once, never per call).  ``fleet.attach(plan)`` ships the
+    plan's shards once; workers co-host every attached plan's BSR task
+    tables, keyed by the wire-v3 plan id, so the coded LM head, the
+    MoE experts and the gradient aggregator all serve off the *same*
+    devices;
+  * **async futures** -- ``handle.submit_matvec(x)`` returns a
+    ``CodedFuture`` (``result`` / ``done`` / ``add_done_callback`` /
+    ``cancel``) immediately; multiple rounds stay in flight at once,
+    multiplexed over the shared loop and demuxed by ``(plan, round)``
+    from the transport's uniform event stream;
+  * **microbatching** -- queued matvec calls against the same plan
+    coalesce into one wider round (operand columns packed side by
+    side, the paper family's MM-regime insight: coding overhead
+    amortizes across columns -- Das & Ramamoorthy 2021, Das et al.
+    2023).  Decode slices each call's columns back out and resolves
+    its future *bitwise-identically* to a solo round (both the BSR
+    worker product and the cached-inverse decode are column-
+    independent);
+  * **backpressure + deadlines** -- per-plan bounded submission
+    (callers block once ``queue_cap`` calls are unresolved), a fleet
+    in-flight cap (``max_inflight``, default from
+    ``REPRO_FLEET_MAX_INFLIGHT``), and per-plan / per-call deadlines
+    that fail the affected futures without tearing the session down;
+  * the full PR-4 liveness protocol is preserved: heartbeat-driven
+    suspicion, death notices, dropped connections -- all re-homing a
+    dead worker's shards (every attached plan's) to the least-loaded
+    live host and resubmitting its in-flight rows across *all* live
+    rounds.
+
+``ClusterPlan`` (``repro.cluster.dispatcher``) survives as a thin
+back-compat shim: a private single-plan fleet with ``max_inflight=1``
+and microbatching off, so its blocking ``matvec / matmat / aggregate``
+keep their exact semantics (including bitwise parity under explicit
+``done=`` masks) while the per-call ``asyncio.run`` pattern is gone
+everywhere.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import os
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .transport import make_transport
+from .wire import Heartbeat, Task, plan_packed, shard_plan
+
+ENV_MAX_INFLIGHT = "REPRO_FLEET_MAX_INFLIGHT"
+_POLL_S = 0.02          # transport poll slice on the pump thread
+_TICK_S = 0.025         # watchdog period (suspicion + deadlines)
+
+
+def default_max_inflight() -> int:
+    """Fleet in-flight round cap: ``REPRO_FLEET_MAX_INFLIGHT``, else 8."""
+    raw = os.environ.get(ENV_MAX_INFLIGHT, "")
+    try:
+        return max(1, int(raw))
+    except ValueError:
+        return 8
+
+
+@dataclass
+class ClusterReport:
+    """What one dispatched round observed (the bench's raw material)."""
+
+    op: str
+    round: int
+    plan_id: int = 0
+    calls: int = 1             # futures resolved by this round (microbatch)
+    wall_s: float = 0.0        # dispatch -> k-th completion + decode
+    decode_s: float = 0.0
+    n_tasks: int = 0
+    n_dispatched: int = 0
+    n_done: int = 0
+    pattern: np.ndarray | None = None       # observed task-done mask
+    rows: np.ndarray | None = None          # rows actually decoded from
+    deaths: int = 0
+    suspected: int = 0         # liveness: missed-heartbeat fail-stops
+    requeues: int = 0
+    deadline_hit: bool = False
+    bytes_tasks: int = 0       # task frames actually put on the wire
+    bytes_results: int = 0     # result payload bytes received
+    bytes_tasks_dense: int = 0  # what full-operand shipping would have cost
+    completed_per_worker: dict = field(default_factory=dict)
+    partial_workers: tuple[int, ...] = ()   # hosts with 0 < done < owned
+    worker_work: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "op": self.op, "round": self.round, "plan_id": self.plan_id,
+            "calls": self.calls, "wall_s": self.wall_s,
+            "decode_s": self.decode_s, "n_tasks": self.n_tasks,
+            "n_dispatched": self.n_dispatched, "n_done": self.n_done,
+            "deaths": self.deaths, "suspected": self.suspected,
+            "requeues": self.requeues, "deadline_hit": self.deadline_hit,
+            "bytes_tasks": self.bytes_tasks,
+            "bytes_results": self.bytes_results,
+            "bytes_tasks_dense": self.bytes_tasks_dense,
+            "partial_workers": list(self.partial_workers),
+        }
+
+
+def _independent_rows(G: np.ndarray, done_rows, k: int):
+    """Greedy full-rank row pick in completion order, for patterns whose
+    first-k rows are singular (non-MDS baselines like repetition)."""
+    sel: list[int] = []
+    for r in done_rows:
+        trial = sel + [int(r)]
+        if np.linalg.matrix_rank(G[trial]) == len(trial):
+            sel = trial
+            if len(sel) == k:
+                return np.asarray(sel)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Futures
+# ---------------------------------------------------------------------------
+
+
+class CodedFuture:
+    """Handle for one in-flight coded call.
+
+    ``result(timeout)`` blocks for the decoded value (re-raising the
+    round's error), ``done()``/``cancelled()`` poll, ``cancel()``
+    withdraws a still-queued call (a launched round is not
+    cancellable, mirroring ``concurrent.futures`` semantics), and
+    ``add_done_callback(fn)`` fires ``fn(future)`` on resolution --
+    from the fleet's loop thread, so callbacks must not block on other
+    futures.
+    """
+
+    def __init__(self, fleet: "CodedFleet", ps: "_PlanState"):
+        self._fleet = fleet
+        self._ps = ps
+        self._event = threading.Event()
+        self._value = None
+        self._exc: BaseException | None = None
+        self._cancelled = False
+        self._callbacks: list = []
+        self._lock = threading.Lock()
+
+    # -- consumer side -----------------------------------------------------
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def cancelled(self) -> bool:
+        return self._event.is_set() and self._cancelled
+
+    def result(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("coded future not resolved within timeout")
+        if self._cancelled:
+            raise concurrent.futures.CancelledError()
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+    def exception(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("coded future not resolved within timeout")
+        if self._cancelled:
+            raise concurrent.futures.CancelledError()
+        return self._exc
+
+    def add_done_callback(self, fn) -> None:
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def cancel(self) -> bool:
+        """Withdraw the call if it has not been launched into a round
+        yet; returns whether the cancellation took."""
+        return self._fleet._cancel_call(self._ps, self)
+
+    # -- producer side (fleet loop) ---------------------------------------
+
+    def _finish(self, value=None, exc: BaseException | None = None,
+                cancelled: bool = False) -> None:
+        with self._lock:
+            if self._event.is_set():
+                return
+            self._value, self._exc, self._cancelled = value, exc, cancelled
+            callbacks, self._callbacks = self._callbacks, []
+            self._event.set()
+        self._ps.sem.release()          # backpressure slot freed
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:           # callbacks must not kill the loop
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Per-call / per-round / per-plan state
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Call:
+    """One submitted operation, prepared on the caller's thread."""
+
+    op: str
+    future: CodedFuture
+    target: np.ndarray
+    wait_all: bool
+    deadline: float | None
+    width: int = 0                      # matvec: operand columns
+    b_op: np.ndarray | None = None      # matvec operand (t_pad, width)
+    decode: object = None               # op-specific decode closure
+    make_task: object = None            # (row, round_id) -> Task (mm/agg)
+    dense_bytes: int = 0
+
+
+class _Round:
+    """One dispatched round: the unit the event stream advances."""
+
+    def __init__(self, ps: "_PlanState", round_id: int, calls: list[_Call],
+                 make_task, report: ClusterReport, deadline: float | None):
+        self.ps = ps
+        self.round_id = round_id
+        self.calls = calls
+        self.make_task = make_task          # (row) -> Task, round id bound
+        self.report = report
+        self.target = calls[0].target
+        self.wait_all = calls[0].wait_all
+        self.inflight: dict[int, int] = {}  # row -> worker it went to
+        self.results: dict[int, dict] = {}
+        self.order: list[int] = []          # completion order of task rows
+        self.t_start = time.perf_counter()
+        self.deadline_at = None if deadline is None \
+            else self.t_start + deadline
+
+    def missing_on(self, worker: int) -> list[int]:
+        return [int(r) for r in np.flatnonzero(self.target)
+                if int(r) not in self.results
+                and self.inflight.get(int(r)) == worker]
+
+
+class _PlanState:
+    """Fleet-side state of one attached plan."""
+
+    def __init__(self, plan, plan_id: int, n_shards: int, packed, shards):
+        self.plan = plan
+        self.plan_id = plan_id
+        self.n_shards = n_shards
+        self.packed = packed
+        self.default_deadline: float | None = None
+        self.reports: deque[ClusterReport] = deque(maxlen=512)
+        self.bytes_shards = 0
+        self.bytes_tasks_total = 0
+        self.queue: deque[_Call] = deque()
+        self.sem: threading.Semaphore | None = None     # set by the fleet
+        self.detached = False
+        self._load_shards(shards)
+        self.home = dict(self.owner)        # original assignment
+
+    def _load_shards(self, shards) -> None:
+        """(Re)derive per-task wire state from freshly cut shards:
+        encoded blobs, work units, and the input column supports (the
+        only x-blocks / coded-B block-rows a task needs shipped --
+        omega/k-proportional traffic)."""
+        self.shard_blobs = [s.encode() for s in shards]
+        self.owner = {row: s.worker for s in shards for row in s.task_rows}
+        self.work = {row: s.work[j] for s in shards
+                     for j, row in enumerate(s.task_rows)}
+        self.support = {row: np.asarray(s.supports[j], np.int64)
+                        for s in shards if s.supports
+                        for j, row in enumerate(s.task_rows)}
+
+    def restricted_payload(self, row: int, b_op: np.ndarray) -> dict:
+        """Support-restricted task payload: only the nonzero b
+        block-rows the worker's tiles read are shipped; the worker
+        scatters them back, bitwise-equivalent to dense."""
+        sup = self.support.get(row)
+        packed = self.packed
+        kb = packed.t_pad // packed.bk
+        if sup is None or len(sup) >= kb:
+            return {"b": b_op}
+        blocks = b_op.reshape(kb, packed.bk, b_op.shape[1])
+        # drop support rows where this call's operand is exactly zero
+        # (a sparse coded-B chunk): zero rows contribute nothing.  The
+        # test must treat NaN/inf as nonzero (!= 0 is True for NaN) so
+        # a poisoned operand still propagates instead of being dropped
+        nz = (blocks[sup] != 0).any(axis=(1, 2))
+        sel = sup[nz]
+        bx = blocks[sel].reshape(len(sel) * packed.bk, b_op.shape[1])
+        return {"bx": np.ascontiguousarray(bx), "bi": sel.astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# The fleet
+# ---------------------------------------------------------------------------
+
+
+class CodedFleet:
+    """A persistent worker session serving many coded plans (see module
+    docstring).  Construct once, ``attach`` plans, submit rounds, and
+    ``close()`` when done (or use as a context manager) -- the
+    transport owns real threads/processes/sockets.
+    """
+
+    def __init__(self, n_workers: int, *, transport: str | None = None,
+                 faults=None, heartbeat_s: float = 0.25,
+                 suspect_after: float | None = None,
+                 max_inflight: int | None = None,
+                 microbatch: bool = True, microbatch_cols: int = 64,
+                 queue_cap: int | None = None, transport_opts=None):
+        self.n_workers = n_workers
+        self.heartbeat_s = heartbeat_s
+        self.suspect_after = suspect_after if suspect_after is not None \
+            else max(8 * heartbeat_s, 2.0)
+        self.max_inflight = max_inflight if max_inflight is not None \
+            else default_max_inflight()
+        self.microbatch = microbatch
+        self.microbatch_cols = microbatch_cols
+        self.queue_cap = queue_cap if queue_cap is not None \
+            else max(4 * self.max_inflight, 32)
+        self.transport = make_transport(
+            transport, n_workers, faults=faults, heartbeat_s=heartbeat_s,
+            **(transport_opts or {}))
+        self.transport_name = self.transport.name
+        self.bytes_tasks_total = 0
+        self.bytes_shards = 0
+        self._plans: dict[int, _PlanState] = {}
+        self._rounds: dict[tuple[int, int], _Round] = {}
+        self._held: dict[int, set[tuple[int, int]]] = \
+            {w: set() for w in range(n_workers)}
+        self._dead: set[int] = set()
+        self._all_dead: RuntimeError | None = None
+        self._orphan = {"deaths": 0, "suspected": 0}    # between-rounds
+        self._next_plan_id = 1
+        self._round_counter = 0
+        self._rr: list[int] = []            # plan round-robin order
+        self._pump_scheduled = False
+        self._closed = False
+        self.transport.start()              # workers up, no shards yet
+        self._beats = {w: time.perf_counter() for w in range(n_workers)}
+        self._loop = asyncio.new_event_loop()
+        self._loop_thread = threading.Thread(
+            target=self._loop.run_forever, name="coded-fleet-loop",
+            daemon=True)
+        self._loop_thread.start()
+        self._pump_stop = threading.Event()
+        self._pump_thread = threading.Thread(
+            target=self._pump, name="coded-fleet-pump", daemon=True)
+        self._pump_thread.start()
+        self._loop.call_soon_threadsafe(self._tick)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def __enter__(self) -> "CodedFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # pragma: no cover - gc-time safety net
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def close(self) -> None:
+        """Tear the session down: fail unresolved futures, stop the
+        loop and pump, shut the transport (sockets closed, heartbeat
+        tickers joined, children reaped)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._loop.is_running():
+            done = concurrent.futures.Future()
+
+            def fail_all():
+                exc = RuntimeError("fleet closed")
+                for ps in self._plans.values():
+                    while ps.queue:
+                        ps.queue.popleft().future._finish(cancelled=True)
+                for rnd in list(self._rounds.values()):
+                    for call in rnd.calls:
+                        call.future._finish(exc=exc)
+                self._rounds.clear()
+                done.set_result(None)
+
+            try:
+                self._loop.call_soon_threadsafe(fail_all)
+                done.result(timeout=5)
+            except Exception:  # pragma: no cover - teardown best-effort
+                pass
+        self._pump_stop.set()
+        self._pump_thread.join(timeout=2)
+        try:
+            self.transport.close()
+        except Exception:  # pragma: no cover - teardown best-effort
+            pass
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        self._loop_thread.join(timeout=5)
+        self._loop.close()
+
+    def wire_totals(self) -> dict:
+        """Cumulative bytes-on-wire across every attached plan."""
+        return {"transport": self.transport_name,
+                "bytes_shards": self.bytes_shards,
+                "bytes_tasks_total": self.bytes_tasks_total}
+
+    # -- attach / detach ---------------------------------------------------
+
+    def attach(self, plan, *, deadline: float | None = None) -> "PlanHandle":
+        """Ship ``plan``'s shards to the fleet's workers (once) and
+        return a ``PlanHandle`` for submitting rounds against them.
+        Plans smaller than the fleet use its first ``plan.n`` workers;
+        attached plans co-exist on the same worker set."""
+        if self._closed:
+            raise RuntimeError("fleet has been closed")
+        pid = self._next_plan_id
+        self._next_plan_id += 1
+        packed = plan_packed(plan)
+        n_shards = min(self.n_workers, plan.n)
+        shards = shard_plan(plan, n_shards, packed=packed, plan_id=pid)
+        ps = _PlanState(plan, pid, n_shards, packed, shards)
+        ps.default_deadline = deadline
+        ps.sem = threading.Semaphore(self.queue_cap)
+        fut = concurrent.futures.Future()
+        self._loop.call_soon_threadsafe(self._do_attach, ps, fut)
+        fut.result()
+        return PlanHandle(self, ps)
+
+    def _do_attach(self, ps: _PlanState, fut) -> None:
+        try:
+            self._plans[ps.plan_id] = ps
+            self._rr.append(ps.plan_id)
+            sent = 0
+            for idx, blob in enumerate(ps.shard_blobs):
+                holder = idx if idx not in self._dead else self._heir()
+                if holder != idx:       # re-home rows cut for a dead host
+                    for row, o in list(ps.owner.items()):
+                        if o == idx:
+                            ps.owner[row] = holder
+                sent += self.transport.ship_shard(holder, blob)
+                self._held[holder].add((ps.plan_id, idx))
+            ps.bytes_shards += sent
+            self.bytes_shards += sent
+            fut.set_result(sent)
+        except BaseException as e:  # noqa: BLE001 - surface to caller
+            self._plans.pop(ps.plan_id, None)
+            if ps.plan_id in self._rr:
+                self._rr.remove(ps.plan_id)
+            fut.set_exception(e)
+
+    def _do_detach(self, ps: _PlanState, fut) -> None:
+        ps.detached = True
+        self._plans.pop(ps.plan_id, None)
+        if ps.plan_id in self._rr:
+            self._rr.remove(ps.plan_id)
+        while ps.queue:
+            ps.queue.popleft().future._finish(cancelled=True)
+        for key, rnd in list(self._rounds.items()):
+            if rnd.ps is ps:
+                for call in rnd.calls:
+                    call.future._finish(cancelled=True)
+                del self._rounds[key]
+        for held in self._held.values():
+            held.difference_update(
+                {(pid, idx) for pid, idx in held if pid == ps.plan_id})
+        fut.set_result(None)
+        self._pump_queues()
+
+    # -- submission (caller threads) ---------------------------------------
+
+    def _submit_call(self, ps: _PlanState, call: _Call) -> CodedFuture:
+        if self._closed or ps.detached:
+            raise RuntimeError("fleet has been closed"
+                               if self._closed else "plan handle detached")
+        if self._all_dead is not None:
+            raise self._all_dead
+        ps.sem.acquire()                    # bounded-queue backpressure
+        try:
+            self._loop.call_soon_threadsafe(self._enqueue, ps, call)
+        except RuntimeError:                # loop torn down under us
+            ps.sem.release()
+            raise RuntimeError("fleet has been closed") from None
+        return call.future
+
+    def _cancel_call(self, ps: _PlanState, future: CodedFuture) -> bool:
+        if future.done():
+            return future.cancelled()
+        if self._closed:
+            return False
+        answer = concurrent.futures.Future()
+
+        def check():
+            for call in ps.queue:
+                if call.future is future:
+                    ps.queue.remove(call)
+                    call.future._finish(cancelled=True)
+                    answer.set_result(True)
+                    return
+            answer.set_result(False)
+
+        try:
+            self._loop.call_soon_threadsafe(check)
+            return answer.result(timeout=5)
+        except Exception:
+            return False
+
+    # -- loop-side scheduling ---------------------------------------------
+
+    def _enqueue(self, ps: _PlanState, call: _Call) -> None:
+        if ps.detached:
+            call.future._finish(cancelled=True)
+            return
+        if self._all_dead is not None:   # raced the wipeout: fail, not hang
+            call.future._finish(exc=self._all_dead)
+            return
+        ps.queue.append(call)
+        # defer the launch by one loop iteration: a burst of
+        # submissions (all sitting in this iteration's ready queue)
+        # lands in the plan queues BEFORE the pump runs, so queued
+        # matvecs coalesce instead of each grabbing its own in-flight
+        # slot.  For trickling submissions the deferral is ~a few
+        # microseconds.
+        if not self._pump_scheduled:
+            self._pump_scheduled = True
+            self._loop.call_soon(self._deferred_pump)
+
+    def _deferred_pump(self) -> None:
+        self._pump_scheduled = False
+        self._pump_queues()
+
+    def _coalescible(self, a: _Call, b: _Call) -> bool:
+        return (a.op == "matvec" and b.op == "matvec"
+                and not a.wait_all and not b.wait_all
+                and a.deadline == b.deadline)
+
+    def _pump_queues(self) -> None:
+        """Launch queued calls while in-flight slots are free; queued
+        matvecs against the same plan coalesce into one wider round."""
+        while len(self._rounds) < self.max_inflight and not self._closed:
+            ps = next((self._plans[pid] for pid in self._rr
+                       if self._plans[pid].queue), None)
+            if ps is None:
+                return
+            # fairness: rotate the plan we just served to the back
+            self._rr.remove(ps.plan_id)
+            self._rr.append(ps.plan_id)
+            batch = [ps.queue.popleft()]
+            if self.microbatch:
+                width = batch[0].width
+                while (ps.queue and width < self.microbatch_cols
+                       and self._coalescible(batch[0], ps.queue[0])):
+                    nxt = ps.queue.popleft()
+                    batch.append(nxt)
+                    width += nxt.width
+            try:
+                self._launch(ps, batch)
+            except BaseException as e:  # noqa: BLE001 - fail the batch
+                for call in batch:
+                    call.future._finish(exc=e)
+
+    def _launch(self, ps: _PlanState, calls: list[_Call]) -> None:
+        self._round_counter += 1
+        round_id = self._round_counter
+        op = calls[0].op
+        target = calls[0].target
+        report = ClusterReport(
+            op=op, round=round_id, plan_id=ps.plan_id, calls=len(calls),
+            n_tasks=ps.plan.n_tasks, n_dispatched=int(target.sum()),
+            deaths=self._orphan["deaths"],
+            suspected=self._orphan["suspected"])
+        self._orphan = {"deaths": 0, "suspected": 0}
+        if op == "matvec":
+            b_comb = calls[0].b_op if len(calls) == 1 else \
+                np.concatenate([c.b_op for c in calls], axis=1)
+            width = b_comb.shape[1]
+
+            def make_task(row: int) -> Task:
+                return Task(round=round_id, op="matvec", task_row=row,
+                            plan=ps.plan_id,
+                            payload=ps.restricted_payload(row, b_comb),
+                            meta={"b": width})
+
+            dense_bytes = int(b_comb.nbytes)
+        else:
+            call = calls[0]
+            make_task = lambda row: call.make_task(row, round_id)  # noqa: E731
+            dense_bytes = call.dense_bytes
+        rnd = _Round(ps, round_id, calls, make_task, report,
+                     calls[0].deadline)
+        rnd.dense_bytes = dense_bytes
+        self._rounds[(ps.plan_id, round_id)] = rnd
+        try:
+            for row in np.flatnonzero(target):
+                self._submit_row(rnd, int(row))
+        except BaseException:
+            # a failed launch must not leak its in-flight slot -- the
+            # caller fails the batch's futures, we drop the round
+            self._rounds.pop((ps.plan_id, round_id), None)
+            raise
+
+    def _submit_row(self, rnd: _Round, row: int) -> None:
+        owner = rnd.ps.owner[row]
+        sent = self.transport.submit(owner, rnd.make_task(row))
+        rnd.report.bytes_tasks += sent
+        rnd.ps.bytes_tasks_total += sent
+        self.bytes_tasks_total += sent
+        rnd.inflight[row] = owner
+
+    # -- the uniform event stream -----------------------------------------
+
+    def _pump(self) -> None:
+        """Pump thread: transport events -> the fleet loop."""
+        while not self._pump_stop.is_set():
+            try:
+                ev = self.transport.poll(_POLL_S)
+            except Exception:               # transport torn down
+                return
+            if ev is None:
+                continue
+            try:
+                self._loop.call_soon_threadsafe(self._on_event, ev)
+            except RuntimeError:            # loop closed
+                return
+
+    def _on_event(self, ev) -> None:
+        if self._closed:
+            return
+        if isinstance(ev, Heartbeat):
+            if ev.worker not in self._dead:
+                self._beats[ev.worker] = time.perf_counter()
+            return
+        if ev.kind == "death":
+            self._fail_worker(ev.worker, "death")
+            return
+        rnd = self._rounds.get((ev.plan, ev.round))
+        if rnd is None:
+            return                          # stale round, already decoded
+        if not ev.ok:
+            exc = RuntimeError(f"worker {ev.worker} failed task "
+                               f"{ev.task_row}: {ev.error}")
+            self._abort_round(rnd, exc)
+            return
+        if ev.task_row in rnd.results or not rnd.target[ev.task_row]:
+            return
+        rnd.results[ev.task_row] = ev.arrays
+        rnd.order.append(ev.task_row)
+        rep = rnd.report
+        rep.bytes_results += sum(int(a.nbytes) for a in ev.arrays.values())
+        rep.completed_per_worker[ev.worker] = \
+            rep.completed_per_worker.get(ev.worker, 0) + 1
+        rep.worker_work[ev.worker] = \
+            rep.worker_work.get(ev.worker, 0.0) + ev.work
+        dec = self._decodable(rnd)
+        if dec is not None:
+            self._finish_round(rnd, *dec)
+
+    def _decodable(self, rnd: _Round):
+        ps, k = rnd.ps, rnd.ps.plan.k
+        if len(rnd.results) < k:
+            return None
+        if rnd.wait_all:
+            if len(rnd.results) < int(rnd.target.sum()):
+                return None
+            mask = rnd.target
+        else:
+            mask = np.zeros(ps.plan.n_tasks, bool)
+            mask[list(rnd.results)] = True
+        cache = ps.plan._decode_cache()
+        G = np.asarray(cache._G)
+        try:
+            dplan = cache.plan(mask)
+            return mask, dplan.rows, dplan.hinv
+        except (ValueError, np.linalg.LinAlgError):
+            rows = _independent_rows(G, rnd.order, k)
+            if rows is None:
+                return None
+            hinv = np.linalg.inv(G[rows]).astype(np.float32)
+            return mask, rows, hinv
+
+    # -- liveness + deadlines (watchdog) ----------------------------------
+
+    def _tick(self) -> None:
+        if self._closed:
+            return
+        try:
+            now = time.perf_counter()
+            for w, seen in list(self._beats.items()):
+                if now - seen <= self.suspect_after:
+                    continue
+                if any(rnd.missing_on(w) for rnd in self._rounds.values()):
+                    self._fail_worker(w, "suspected")
+                else:
+                    self._beats[w] = now  # idle worker: fresh grace period
+            for rnd in list(self._rounds.values()):
+                if rnd.deadline_at is not None and now > rnd.deadline_at:
+                    self._expire_round(rnd)
+        finally:
+            # the watchdog must survive any single tick's failure --
+            # liveness and deadlines die silently otherwise
+            self._loop.call_later(_TICK_S, self._tick)
+
+    def _expire_round(self, rnd: _Round) -> None:
+        rnd.report.deadline_hit = True
+        if not rnd.wait_all:
+            # accept whatever pattern we have, if it decodes
+            ps, k = rnd.ps, rnd.ps.plan.k
+            G = np.asarray(ps.plan._decode_cache()._G)
+            rows = _independent_rows(G, rnd.order, k)
+            if rows is not None:
+                mask = np.zeros(ps.plan.n_tasks, bool)
+                mask[list(rnd.results)] = True
+                self._finish_round(
+                    rnd, mask, rows, np.linalg.inv(G[rows]).astype(np.float32))
+                return
+        deadline = rnd.deadline_at - rnd.t_start
+        self._abort_round(rnd, TimeoutError(
+            f"deadline: {len(rnd.results)}/{rnd.ps.plan.k} needed task "
+            f"rows after {deadline:.3g}s"))
+
+    def _abort_round(self, rnd: _Round, exc: BaseException) -> None:
+        self._rounds.pop((rnd.ps.plan_id, rnd.round_id), None)
+        for w in self._live():
+            self.transport.cancel(w, rnd.round_id)
+        for call in rnd.calls:
+            call.future._finish(exc=exc)
+        self._pump_queues()
+
+    # -- fail-stop / suspicion / requeue ----------------------------------
+
+    def _live(self) -> list[int]:
+        return [w for w in range(self.n_workers)
+                if w not in self._dead and self.transport.alive(w)]
+
+    def _heir(self) -> int:
+        live = self._live()
+        if not live:
+            raise RuntimeError("all cluster workers are dead")
+        owned = {w: 0 for w in live}
+        for ps in self._plans.values():
+            for o in ps.owner.values():
+                if o in owned:
+                    owned[o] += 1
+        return min(live, key=lambda w: (owned[w], w))
+
+    def _fail_worker(self, worker: int, cause: str) -> None:
+        if worker in self._dead:
+            return                          # notices are idempotent
+        self._dead.add(worker)
+        self._beats.pop(worker, None)
+        live_rounds = sorted(self._rounds.values(),
+                             key=lambda r: r.round_id)
+        # attribute the failure to the oldest live round (the shim's
+        # one-at-a-time reports keep their PR-4 semantics); with no
+        # round in flight it is folded into the next launched one
+        if live_rounds:
+            rep = live_rounds[0].report
+            if cause == "suspected":
+                rep.suspected += 1
+            else:
+                rep.deaths += 1
+        else:
+            self._orphan["suspected" if cause == "suspected"
+                         else "deaths"] += 1
+        try:
+            heir = self._heir()
+        except RuntimeError as e:
+            # no survivors: fail everything in flight AND queued, and
+            # fail-fast future submissions -- a between-rounds wipeout
+            # must not turn into silent hangs
+            self._all_dead = e
+            for rnd in live_rounds:
+                self._abort_round(rnd, e)
+            for ps in self._plans.values():
+                while ps.queue:
+                    ps.queue.popleft().future._finish(exc=e)
+            return
+        # re-ship every shard the dead host held -- its own AND any it
+        # previously inherited (a second death must not strand those)
+        for pid, idx in self._held.pop(worker, set()):
+            ps = self._plans.get(pid)
+            if ps is None:
+                continue
+            sent = self.transport.ship_shard(heir, ps.shard_blobs[idx])
+            ps.bytes_shards += sent
+            self.bytes_shards += sent
+            self._held[heir].add((pid, idx))
+        for ps in self._plans.values():
+            for row, o in list(ps.owner.items()):
+                if o == worker:
+                    ps.owner[row] = heir
+        for rnd in live_rounds:
+            for row in rnd.missing_on(worker):
+                self._submit_row(rnd, row)
+                rnd.report.requeues += 1
+
+    # -- decode + future resolution ---------------------------------------
+
+    def _finish_round(self, rnd: _Round, mask, rows, hinv) -> None:
+        self._rounds.pop((rnd.ps.plan_id, rnd.round_id), None)
+        rep = rnd.report
+        rep.n_done = len(rnd.results)
+        rep.pattern = mask.copy() if mask is not rnd.target else mask
+        rep.rows = np.asarray(rows)
+        rep.bytes_tasks_dense = rnd.dense_bytes * \
+            max(rep.n_dispatched + rep.requeues, 1)
+        if not rnd.wait_all:
+            for w in self._live():
+                self.transport.cancel(w, rnd.round_id)
+        # partial-straggler accounting: hosts whose decode-time credit
+        # is a strict subset of the task rows they were assigned
+        owned: dict[int, int] = {}
+        for w in rnd.ps.home.values():
+            owned[w] = owned.get(w, 0) + 1
+        rep.partial_workers = tuple(sorted(
+            w for w, c in owned.items()
+            if 0 < rep.completed_per_worker.get(w, 0) < c))
+        t_dec = time.perf_counter()
+        try:
+            if rnd.calls[0].op == "matvec":
+                k = rnd.ps.plan.k
+                y = np.stack([np.asarray(rnd.results[int(r)]["y"])
+                              for r in rows])          # (k, c_pad, width)
+                off = 0
+                values = []
+                for call in rnd.calls:
+                    sl = np.ascontiguousarray(y[:, :, off: off + call.width])
+                    values.append(call.decode(sl, rows, hinv))
+                    off += call.width
+            else:
+                values = [rnd.calls[0].decode(rnd.results, rows, hinv)]
+        except BaseException as e:  # noqa: BLE001 - surface to futures
+            for call in rnd.calls:
+                call.future._finish(exc=e)
+            self._pump_queues()
+            return
+        rep.decode_s = time.perf_counter() - t_dec
+        rep.wall_s = time.perf_counter() - rnd.t_start
+        rnd.ps.reports.append(rep)
+        for call, value in zip(rnd.calls, values):
+            call.future._finish(value=value)
+        self._pump_queues()
+
+    # -- re-shipping (plan retune) ----------------------------------------
+
+    def _reship(self, ps: _PlanState) -> int:
+        """Re-shard the (re-compiled) plan and re-ship every shard to
+        its current holder (see ``ClusterPlan.reship``)."""
+        if self._closed:
+            raise RuntimeError("fleet has been closed")
+        packed = plan_packed(ps.plan)
+        shards = shard_plan(ps.plan, ps.n_shards, packed=packed,
+                            plan_id=ps.plan_id)
+        fut = concurrent.futures.Future()
+
+        def swap():
+            try:
+                owner_before = dict(ps.owner)
+                ps.packed = packed
+                ps._load_shards(shards)
+                ps.owner = owner_before     # keep post-failure re-homing
+                sent = 0
+                for host, held in self._held.items():
+                    if host in self._dead:
+                        continue
+                    for pid, idx in held:
+                        if pid != ps.plan_id:
+                            continue
+                        sent += self.transport.ship_shard(
+                            host, ps.shard_blobs[idx])
+                ps.bytes_shards += sent
+                self.bytes_shards += sent
+                fut.set_result(sent)
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        self._loop.call_soon_threadsafe(swap)
+        return fut.result()
+
+
+# ---------------------------------------------------------------------------
+# Plan handles (the per-plan public surface)
+# ---------------------------------------------------------------------------
+
+
+class PlanHandle:
+    """One attached plan's session surface.
+
+    ``submit_*`` return ``CodedFuture``s and never block on the round
+    (only on backpressure); the plain ``matvec / matmat / aggregate``
+    are the blocking conveniences (``submit(...).result()``) that make
+    a handle a drop-in for a ``ClusterPlan`` or an in-process
+    ``CodedPlan``.
+    """
+
+    def __init__(self, fleet: CodedFleet, ps: _PlanState):
+        self.fleet = fleet
+        self._ps = ps
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def plan(self):
+        return self._ps.plan
+
+    @property
+    def plan_id(self) -> int:
+        return self._ps.plan_id
+
+    @property
+    def n_workers(self) -> int:
+        return self._ps.n_shards
+
+    @property
+    def n_tasks(self) -> int:
+        return self._ps.plan.n_tasks
+
+    @property
+    def k(self) -> int:
+        return self._ps.plan.k
+
+    @property
+    def reports(self) -> deque:
+        return self._ps.reports
+
+    @property
+    def last_report(self) -> ClusterReport | None:
+        return self._ps.reports[-1] if self._ps.reports else None
+
+    @property
+    def bytes_shards(self) -> int:
+        return self._ps.bytes_shards
+
+    @property
+    def bytes_tasks_total(self) -> int:
+        return self._ps.bytes_tasks_total
+
+    @property
+    def shard_blobs(self) -> list[bytes]:
+        return self._ps.shard_blobs
+
+    def wire_totals(self) -> dict:
+        """This plan's bytes-on-wire (the fleet aggregates across plans)."""
+        return {"transport": self.fleet.transport_name,
+                "bytes_shards": self._ps.bytes_shards,
+                "bytes_tasks_total": self._ps.bytes_tasks_total}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def detach(self) -> None:
+        """Withdraw this plan from the fleet (queued calls cancelled,
+        in-flight rounds dropped).  The fleet and its workers stay up
+        for the other attached plans."""
+        if self.fleet._closed or self._ps.detached:
+            self._ps.detached = True
+            return
+        fut = concurrent.futures.Future()
+        self.fleet._loop.call_soon_threadsafe(
+            self.fleet._do_detach, self._ps, fut)
+        fut.result(timeout=5)
+
+    def reship(self) -> int:
+        """Re-ship this plan's (re-tuned) shards to their current
+        holders; returns bytes shipped (see ``CodedPlan.retune``)."""
+        return self.fleet._reship(self._ps)
+
+    # -- mask plumbing -----------------------------------------------------
+
+    def _target(self, done) -> tuple[np.ndarray, bool]:
+        plan = self._ps.plan
+        if done is None:
+            return np.ones(plan.n_tasks, bool), False
+        mask = np.asarray(plan._task_done(np.asarray(done, bool)), bool)
+        if mask.shape[0] != plan.n_tasks:
+            raise ValueError(f"done mask covers {mask.shape[0]} tasks, "
+                             f"plan has {plan.n_tasks}")
+        if int(mask.sum()) < plan.k:
+            raise ValueError(f"done mask admits {int(mask.sum())} task "
+                             f"rows, need at least k={plan.k}")
+        return mask, True
+
+    def _deadline(self, deadline) -> float | None:
+        return deadline if deadline is not None \
+            else self._ps.default_deadline
+
+    # -- async submission --------------------------------------------------
+
+    def submit_matvec(self, x, done=None, *,
+                      deadline: float | None = None) -> CodedFuture:
+        """A^T x as a future.  ``done=None`` races the workers (and may
+        be microbatched with other queued matvecs); an explicit mask
+        replays that exact pattern (parity mode, never coalesced)."""
+        ps = self._ps
+        plan = ps.plan
+        if plan.kind != "mv":
+            raise ValueError(f"matvec needs an mv plan, got {plan.kind}")
+        if ps.packed is None:
+            raise ValueError("aggregation-only plan: no shards to matvec")
+        x = np.asarray(x, np.float32)
+        squeeze = x.ndim == 1
+        xb = x[None, :] if squeeze else x
+        b = xb.shape[0]
+        packed = ps.packed
+        b_op = np.zeros((packed.t_pad, b), np.float32)
+        b_op[: packed.t] = xb.T[: packed.t]
+        target, wait_all = self._target(done)
+
+        def decode(y_slice, rows, hinv):
+            import jax.numpy as jnp  # noqa: PLC0415
+
+            k = plan.k
+            u = hinv @ y_slice.reshape(k, -1)
+            u = u.reshape(k, packed.c_pad, b)[:, : packed.c]
+            out = np.moveaxis(u, 2, 0).reshape(b, -1)[:, : plan.r]
+            out = jnp.asarray(out)
+            return out[0] if squeeze else out
+
+        call = _Call(op="matvec", future=CodedFuture(self.fleet, ps),
+                     target=target, wait_all=wait_all,
+                     deadline=self._deadline(deadline), width=b,
+                     b_op=b_op, decode=decode)
+        return self.fleet._submit_call(ps, call)
+
+    def submit_matmat(self, B, done=None, *,
+                      deadline: float | None = None) -> CodedFuture:
+        """A^T B as a future; each task ships only the nonzero coded-B
+        block-rows in the worker's tile support (the omega_B/k_B
+        bandwidth claim, measured per call)."""
+        import jax.numpy as jnp  # noqa: PLC0415
+
+        from ..core.coded_matmul import split_block_columns  # noqa: PLC0415
+        from ..runtime import encode_blocks  # noqa: PLC0415
+
+        ps = self._ps
+        plan = ps.plan
+        if plan.kind != "mm":
+            raise ValueError(f"matmat needs an mm plan, got {plan.kind}")
+        sch = plan.scheme
+        w = B.shape[1]
+        blocks_b = split_block_columns(jnp.asarray(B), sch.k_B)
+        if plan._sup_b is not None:
+            coded_b = encode_blocks(blocks_b, plan._sup_b, plan._coef_b,
+                                    "packed")
+        else:
+            coded_b = jnp.einsum(
+                "nk,ktc->ntc", jnp.asarray(plan._rb, jnp.float32), blocks_b)
+        b_np = np.asarray(coded_b, np.float32)
+        cb = b_np.shape[2]
+        packed = ps.packed
+        target, wait_all = self._target(done)
+
+        def make_task(row: int, round_id: int) -> Task:
+            b_op = np.zeros((packed.t_pad, cb), np.float32)
+            b_op[: packed.t] = b_np[row, : packed.t]
+            return Task(round=round_id, op="matmat", task_row=row,
+                        plan=ps.plan_id,
+                        payload=ps.restricted_payload(row, b_op),
+                        meta={"cb": cb})
+
+        def decode(results, rows, hinv):
+            k = plan.k
+            y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])
+            y = y[:, : packed.c]                       # (k, ca, cb)
+            u = hinv @ y.reshape(k, -1)
+            u = u.reshape((k,) + y.shape[1:])
+            ka, kb = sch.k_A, sch.k_B
+            ca = y.shape[1]
+            out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3)
+            out = out.reshape(ka * ca, kb * cb)[: plan.r, : w]
+            return jnp.asarray(out)
+
+        call = _Call(op="matmat", future=CodedFuture(self.fleet, ps),
+                     target=target, wait_all=wait_all,
+                     deadline=self._deadline(deadline),
+                     make_task=make_task, decode=decode,
+                     dense_bytes=int(packed.t_pad * cb * 4))
+        return self.fleet._submit_call(ps, call)
+
+    def submit_aggregate(self, payloads, done=None, *,
+                         deadline: float | None = None) -> CodedFuture:
+        """Straggler-resilient sum of k shard-gradients as a future
+        (gradient-coding decode: a^T G[rows] = 1^T)."""
+        import jax  # noqa: PLC0415
+        import jax.numpy as jnp  # noqa: PLC0415
+
+        ps = self._ps
+        plan = ps.plan
+        if plan.kind != "mv":
+            raise ValueError("aggregate needs an mv plan")
+        if len(payloads) != plan.n_tasks:
+            raise ValueError(f"need {plan.n_tasks} worker payloads, "
+                             f"got {len(payloads)}")
+        leaves0, treedef = jax.tree.flatten(payloads[0])
+        flat = [jax.tree.flatten(p)[0] for p in payloads]
+        sizes = np.asarray([sum(np.asarray(x).size for x in leaves)
+                            for leaves in flat], float)
+        work = sizes / max(sizes.max(), 1.0)
+        target, wait_all = self._target(done)
+
+        def make_task(row: int, round_id: int) -> Task:
+            return Task(round=round_id, op="aggregate", task_row=row,
+                        plan=ps.plan_id,
+                        payload={f"leaf{i}": np.asarray(x)
+                                 for i, x in enumerate(flat[row])},
+                        meta={"work": float(work[row])})
+
+        def decode(results, rows, hinv):
+            a = hinv.sum(axis=0)           # a^T G[rows] = 1^T
+            out_leaves = []
+            for i in range(len(leaves0)):
+                acc = None
+                for coef, r in zip(a, rows):
+                    term = coef * np.asarray(
+                        results[int(r)][f"leaf{i}"], np.float32)
+                    acc = term if acc is None else acc + term
+                out_leaves.append(jnp.asarray(acc))
+            return jax.tree.unflatten(treedef, out_leaves)
+
+        call = _Call(op="aggregate", future=CodedFuture(self.fleet, ps),
+                     target=target, wait_all=wait_all,
+                     deadline=self._deadline(deadline),
+                     make_task=make_task, decode=decode)
+        return self.fleet._submit_call(ps, call)
+
+    # -- blocking conveniences (CodedPlan signatures) ----------------------
+
+    def matvec(self, x, done=None, *, deadline: float | None = None):
+        return self.submit_matvec(x, done, deadline=deadline).result()
+
+    def matmat(self, B, done=None, *, deadline: float | None = None):
+        return self.submit_matmat(B, done, deadline=deadline).result()
+
+    def aggregate(self, payloads, done=None, *,
+                  deadline: float | None = None):
+        return self.submit_aggregate(payloads, done,
+                                     deadline=deadline).result()

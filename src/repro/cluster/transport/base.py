@@ -61,9 +61,10 @@ class Transport:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def start(self, shard_blobs: list[bytes]) -> int:
-        """Spawn/connect workers, handshake, ship the initial shards.
-        Returns total bytes shipped."""
+    def start(self, shard_blobs: list[bytes] | None = None) -> int:
+        """Spawn/connect workers and handshake; ship the initial shards
+        when given (a fleet starts its worker set bare and ships per
+        ``attach``).  Returns total bytes shipped."""
         raise NotImplementedError
 
     def close(self) -> None:

@@ -30,9 +30,10 @@ class MemoryTransport(Transport):
         self._beat_stops: list[threading.Event] = []
         self._beats: list[threading.Thread] = []
 
-    def start(self, shard_blobs: list[bytes]) -> int:
-        shipped = 0
-        for w, blob in enumerate(shard_blobs):
+    def start(self, shard_blobs: list[bytes] | None = None) -> int:
+        """Spawn the worker set; ship initial shards when given (a fleet
+        starts bare and ships per ``attach``)."""
+        for w in range(self.n_workers):
             inbox: queue.Queue = queue.Queue()
             self._inboxes.append(inbox)
             stop_beats = threading.Event()
@@ -50,8 +51,8 @@ class MemoryTransport(Transport):
             self._threads.append(t)
             self._beats.append(start_heartbeat(
                 w, self.push_event, self.heartbeat_s, stop_beats))
-            shipped += self.ship_shard(w, blob)
-        return shipped
+        return sum(self.ship_shard(w, blob)
+                   for w, blob in enumerate(shard_blobs or []))
 
     def ship_shard(self, worker: int, blob: bytes) -> int:
         self._inboxes[worker].put(("shard", blob))

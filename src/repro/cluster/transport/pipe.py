@@ -76,7 +76,7 @@ class PipeTransport(Transport):
         self._pumps: list[threading.Thread] = []
         self._ready = [threading.Event() for _ in range(n_workers)]
 
-    def start(self, shard_blobs: list[bytes]) -> int:
+    def start(self, shard_blobs: list[bytes] | None = None) -> int:
         import multiprocessing as mp  # noqa: PLC0415
 
         ctx = mp.get_context("spawn")
@@ -95,7 +95,7 @@ class PipeTransport(Transport):
                                     daemon=True)
             pump.start()
             self._pumps.append(pump)
-        for w, blob in enumerate(shard_blobs):
+        for w, blob in enumerate(shard_blobs or []):
             shipped += self.ship_shard(w, blob)
         # don't hand the transport over until every child finished its
         # (slow: spawn + numpy/scipy import) startup -- otherwise the

@@ -123,7 +123,8 @@ def _tcp_worker_main(host: str, port: int, worker_id: int, fault_spec,
                 if rec == "task":
                     inbox.put(("task", Task(
                         round=meta["round"], op=meta["op"],
-                        task_row=meta["task_row"], payload=arrays,
+                        task_row=meta["task_row"],
+                        plan=meta.get("plan", 0), payload=arrays,
                         meta=meta["meta"])))
                 elif rec == "shard-wrap":
                     inner = arrays["blob"].tobytes()
@@ -174,10 +175,20 @@ class TcpTransport(Transport):
     name = "tcp"
 
     def __init__(self, n_workers: int, *, faults=None,
-                 heartbeat_s: float = 0.25, host: str = "127.0.0.1"):
+                 heartbeat_s: float = 0.25, host: str = "127.0.0.1",
+                 port: int = 0, spawn: bool = True,
+                 hello_timeout: float = 60.0):
+        """``spawn=False`` turns this into a multi-host coordinator: no
+        local children are forked -- the server binds ``host:port``
+        (pass a fixed port so operators can point remote devices at it)
+        and ``start`` waits ``hello_timeout`` seconds for ``n_workers``
+        remote ``python -m repro.cluster.worker --connect`` processes to
+        dial in and handshake."""
         super().__init__(n_workers, faults=faults, heartbeat_s=heartbeat_s)
         self.host = host
-        self.port: int | None = None
+        self.spawn = spawn
+        self.hello_timeout = hello_timeout
+        self.port: int | None = port or None
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
         self._server = None
@@ -257,7 +268,7 @@ class TcpTransport(Transport):
 
     # -- Transport interface ----------------------------------------------
 
-    def start(self, shard_blobs: list[bytes]) -> int:
+    def start(self, shard_blobs: list[bytes] | None = None) -> int:
         import multiprocessing as mp  # noqa: PLC0415
 
         self._loop = asyncio.new_event_loop()
@@ -267,23 +278,25 @@ class TcpTransport(Transport):
         self._thread.start()
         try:
             self._server = self._run_coro(
-                asyncio.start_server(self._on_conn, self.host, 0))
+                asyncio.start_server(self._on_conn, self.host,
+                                     self.port or 0))
             self.port = self._server.sockets[0].getsockname()[1]
-            ctx = mp.get_context("spawn")
-            for w in range(self.n_workers):
-                proc = ctx.Process(
-                    target=_tcp_worker_main,
-                    args=(self.host, self.port, w, self.faults.to_spec(),
-                          self.heartbeat_s),
-                    daemon=True)
-                proc.start()
-                self._procs.append(proc)
+            if self.spawn:
+                ctx = mp.get_context("spawn")
+                for w in range(self.n_workers):
+                    proc = ctx.Process(
+                        target=_tcp_worker_main,
+                        args=(self.host, self.port, w, self.faults.to_spec(),
+                              self.heartbeat_s),
+                        daemon=True)
+                    proc.start()
+                    self._procs.append(proc)
             for w, evt in enumerate(self._hello):
-                if not evt.wait(timeout=60):
+                if not evt.wait(timeout=self.hello_timeout):
                     raise RuntimeError(f"tcp worker {w} never completed "
                                        f"the handshake")
             return sum(self.ship_shard(w, blob)
-                       for w, blob in enumerate(shard_blobs))
+                       for w, blob in enumerate(shard_blobs or []))
         except BaseException:
             # failed construction must not leak the loop thread, the
             # server socket, or already-spawned children

@@ -45,8 +45,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 MAGIC = b"RPRC"
-WIRE_VERSION = 2       # v2: heartbeat/hello records, shard col supports,
-                       # support-restricted task payloads
+WIRE_VERSION = 3       # v3: plan/round routing fields on shard / task /
+                       # result records -- workers co-host several
+                       # plans' shards (fleet sessions) and the fleet
+                       # dispatcher demuxes results by (plan, round).
+                       # v2: heartbeat/hello records, shard col
+                       # supports, support-restricted task payloads
 
 _HEADER = struct.Struct("<4sHQ")   # magic, version, manifest length
 
@@ -264,6 +268,8 @@ class PlanShard:
     n: int                     # virtual workers
     k: int
     tasks_per_worker: int
+    plan: int = 0              # fleet plan id: workers co-host several
+                               # plans' shards, keyed by (plan, row)
     t: int = 0
     c: int = 0
     t_pad: int = 0
@@ -276,7 +282,7 @@ class PlanShard:
 
     def encode(self) -> bytes:
         meta = {"record": "shard", "worker": self.worker,
-                "n_workers": self.n_workers,
+                "n_workers": self.n_workers, "plan": self.plan,
                 "task_rows": list(self.task_rows), "kind": self.kind,
                 "scheme_name": self.scheme_name, "n": self.n, "k": self.k,
                 "tasks_per_worker": self.tasks_per_worker, "t": self.t,
@@ -303,6 +309,7 @@ class PlanShard:
                               for part in ("data", "indices", "indptr")})
         return cls(
             worker=meta["worker"], n_workers=meta["n_workers"],
+            plan=meta.get("plan", 0),
             task_rows=tuple(meta["task_rows"]), kind=meta["kind"],
             scheme_name=meta["scheme_name"], n=meta["n"], k=meta["k"],
             tasks_per_worker=meta["tasks_per_worker"], t=meta["t"],
@@ -330,8 +337,8 @@ def plan_packed(plan):
     return pack_coded_blocks(np.asarray(ex.coded), 8, 8)
 
 
-def shard_plan(plan, n_workers: int | None = None, packed=None
-               ) -> list[PlanShard]:
+def shard_plan(plan, n_workers: int | None = None, packed=None,
+               plan_id: int = 0) -> list[PlanShard]:
     """Split a compiled plan into per-physical-worker shards.
 
     Virtual worker ``v`` (and its ``tasks_per_worker`` task rows) lands
@@ -365,7 +372,7 @@ def shard_plan(plan, n_workers: int | None = None, packed=None
             shards.append(PlanShard(
                 worker=host, n_workers=w, task_rows=tuple(rows),
                 kind=plan.kind, scheme_name=plan.scheme.name, n=n_virtual,
-                k=plan.k, tasks_per_worker=per,
+                k=plan.k, tasks_per_worker=per, plan=plan_id,
                 work=tuple(1.0 for _ in rows)))
             continue
         tasks, work, supports = [], [], []
@@ -381,7 +388,7 @@ def shard_plan(plan, n_workers: int | None = None, packed=None
         shards.append(PlanShard(
             worker=host, n_workers=w, task_rows=tuple(rows), kind=plan.kind,
             scheme_name=plan.scheme.name, n=n_virtual, k=plan.k,
-            tasks_per_worker=per, t=packed.t, c=packed.c,
+            tasks_per_worker=per, plan=plan_id, t=packed.t, c=packed.c,
             t_pad=packed.t_pad, c_pad=packed.c_pad, bk=packed.bk,
             bm=packed.bm, work=tuple(work), supports=tuple(supports),
             tasks=tasks))
@@ -408,12 +415,14 @@ class Task:
     round: int
     op: str                                   # matvec | matmat | aggregate
     task_row: int
+    plan: int = 0                             # fleet plan routing (wire v3)
     payload: dict = field(default_factory=dict)   # name -> np.ndarray
     meta: dict = field(default_factory=dict)
 
     def _meta(self) -> dict:
         return {"record": "task", "round": self.round, "op": self.op,
-                "task_row": self.task_row, "meta": self.meta}
+                "task_row": self.task_row, "plan": self.plan,
+                "meta": self.meta}
 
     def encode(self) -> bytes:
         return encode_record(self._meta(), self.payload)
@@ -429,8 +438,8 @@ class Task:
             raise ValueError(
                 f"expected a task record, got {meta.get('record')!r}")
         return cls(round=meta["round"], op=meta["op"],
-                   task_row=meta["task_row"], payload=arrays,
-                   meta=meta["meta"])
+                   task_row=meta["task_row"], plan=meta.get("plan", 0),
+                   payload=arrays, meta=meta["meta"])
 
 
 @dataclass
@@ -445,6 +454,7 @@ class TaskResult:
     worker: int
     round: int
     task_row: int
+    plan: int = 0                              # fleet plan routing (wire v3)
     ok: bool = True
     kind: str = "result"                       # result | death
     error: str = ""
@@ -455,8 +465,8 @@ class TaskResult:
     def encode(self) -> bytes:
         return encode_record(
             {"record": "result", "worker": self.worker, "round": self.round,
-             "task_row": self.task_row, "ok": self.ok, "kind": self.kind,
-             "error": self.error, "work": self.work,
+             "task_row": self.task_row, "plan": self.plan, "ok": self.ok,
+             "kind": self.kind, "error": self.error, "work": self.work,
              "compute_s": self.compute_s}, self.arrays)
 
     @classmethod
@@ -466,8 +476,8 @@ class TaskResult:
             raise ValueError(
                 f"expected a result record, got {meta.get('record')!r}")
         return cls(worker=meta["worker"], round=meta["round"],
-                   task_row=meta["task_row"], ok=meta["ok"],
-                   kind=meta["kind"], error=meta["error"],
+                   task_row=meta["task_row"], plan=meta.get("plan", 0),
+                   ok=meta["ok"], kind=meta["kind"], error=meta["error"],
                    work=meta["work"], compute_s=meta["compute_s"],
                    arrays=arrays)
 
@@ -526,7 +536,8 @@ def decode_event(data: bytes):
     try:
         if rec == "result":
             return TaskResult(worker=meta["worker"], round=meta["round"],
-                              task_row=meta["task_row"], ok=meta["ok"],
+                              task_row=meta["task_row"],
+                              plan=meta.get("plan", 0), ok=meta["ok"],
                               kind=meta["kind"], error=meta["error"],
                               work=meta["work"], compute_s=meta["compute_s"],
                               arrays=arrays)

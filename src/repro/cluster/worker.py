@@ -6,13 +6,17 @@ so its per-task cost is nnz-proportional) and answers matvec / matmat /
 aggregate tasks as they stream in.  This module is everything about
 that device that does NOT depend on how bytes reach it:
 
-  * ``ShardRuntime``   -- the task table (coded task row -> BSR operator),
-    including the scatter of support-restricted payloads (``bx``/``bi``)
-    back into the zero operand buffer, bitwise-equivalent to dense
-    shipping;
+  * ``ShardRuntime``   -- the task table (plan id + coded task row -> BSR
+    operator).  Since wire v3 a worker co-hosts *several plans'* shards
+    (a fleet session ships every attached plan to the same worker set),
+    so tasks are keyed by ``(plan, row)`` and each plan keeps its own
+    geometry for the scatter of support-restricted payloads
+    (``bx``/``bi``) back into the zero operand buffer,
+    bitwise-equivalent to dense shipping;
   * ``serve_loop``     -- the message state machine (shard / task / cancel /
-    stop), cancel-draining, fault decoration (``faults.faulty``), death
-    notices and silent hangs;
+    stop) with cancel-draining, fault decoration (``faults.faulty``),
+    death notices and silent hangs; results echo the task's plan id so
+    the fleet dispatcher can demux multiple in-flight rounds;
   * ``start_heartbeat``-- the liveness ticker: a side thread beating on
     the worker's emit channel every ``interval`` seconds until stopped,
     so compute (or injected latency) never starves liveness.
@@ -22,6 +26,13 @@ an inbox of ``(kind, value)`` messages and an ``emit`` callable for
 results/beats.  Thread, pipe and tcp workers therefore run *the same
 code* -- which is what makes the C(n, s) dispatcher-parity sweep a
 property of the stack rather than of one backend.
+
+Run ``python -m repro.cluster.worker --connect host:port --id N`` to
+join a remote tcp fleet from another machine: the process dials the
+coordinator, handshakes (hello record carrying the wire version),
+downloads its shards (sha256-verified), heartbeats, and serves until
+the coordinator says stop (the ROADMAP "multi-host tcp deployment"
+entry point).
 """
 
 from __future__ import annotations
@@ -37,20 +48,18 @@ from .wire import Heartbeat, PlanShard, Task, TaskResult, death_notice
 
 
 class ShardRuntime:
-    """Task table: coded task row -> BSR operator + work units."""
+    """Task table: (plan id, coded task row) -> BSR operator + work."""
 
     def __init__(self):
-        self.tasks: dict[int, dict] = {}
-        self.t_pad = 0
-        self.c_pad = 0
-        self.bk = 0
+        self.tasks: dict[tuple[int, int], dict] = {}
+        # per-plan operand geometry (t_pad, bk) for the support scatter
+        self.geometry: dict[int, tuple[int, int]] = {}
 
     def load(self, shard: PlanShard) -> None:
         from scipy import sparse  # noqa: PLC0415 - worker-side heavy dep
 
-        self.t_pad = shard.t_pad or self.t_pad
-        self.c_pad = shard.c_pad or self.c_pad
-        self.bk = shard.bk or self.bk
+        if shard.t_pad:
+            self.geometry[shard.plan] = (shard.t_pad, shard.bk)
         for j, row in enumerate(shard.task_rows):
             entry = {"work": shard.work[j], "bsr": None}
             if shard.tasks:
@@ -60,9 +69,9 @@ class ShardRuntime:
                      np.array(t["indptr"])),
                     shape=(shard.c_pad, shard.t_pad),
                     blocksize=(shard.bm, shard.bk))
-            self.tasks[row] = entry
+            self.tasks[(shard.plan, row)] = entry
 
-    def _operand(self, payload: dict) -> np.ndarray:
+    def _operand(self, plan: int, payload: dict) -> np.ndarray:
         """Materialize the (t_pad, width) input the BSR product reads.
 
         Dense payloads (``b``) pass through; support-restricted ones
@@ -72,23 +81,25 @@ class ShardRuntime:
         """
         if "b" in payload:
             return np.asarray(payload["b"], np.float32)
+        t_pad, bk = self.geometry[plan]
         bx = np.asarray(payload["bx"], np.float32)
         bi = np.asarray(payload["bi"], np.int64)
-        b = np.zeros((self.t_pad, bx.shape[1]), np.float32)
+        b = np.zeros((t_pad, bx.shape[1]), np.float32)
         if len(bi):
-            rows = (bi[:, None] * self.bk + np.arange(self.bk)).ravel()
+            rows = (bi[:, None] * bk + np.arange(bk)).ravel()
             b[rows] = bx
         return b
 
     def run(self, task: Task) -> tuple[dict, float]:
         """Execute one task; returns (result arrays, work units)."""
-        entry = self.tasks.get(task.task_row)
+        entry = self.tasks.get((task.plan, task.task_row))
         if entry is None:
-            raise KeyError(f"task row {task.task_row} not in this worker's "
-                           f"shard (have {sorted(self.tasks)})")
+            raise KeyError(
+                f"task (plan {task.plan}, row {task.task_row}) not in this "
+                f"worker's shards (have {sorted(self.tasks)})")
         if task.op in ("matvec", "matmat"):
             # (c_pad, t_pad) BSR @ (t_pad, width): walks nonzero tiles only
-            y = entry["bsr"] @ self._operand(task.payload)
+            y = entry["bsr"] @ self._operand(task.plan, task.payload)
             return {"y": y}, entry["work"]
         if task.op == "aggregate":
             # combining is the dispatcher's job; the worker's cost is the
@@ -142,8 +153,9 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
         t0 = time.perf_counter()
         arrays, work = runtime.run(task)
         return TaskResult(worker=wid, round=task.round,
-                          task_row=task.task_row, ok=True, work=work,
-                          compute_s=time.perf_counter() - t0, arrays=arrays)
+                          task_row=task.task_row, plan=task.plan, ok=True,
+                          work=work, compute_s=time.perf_counter() - t0,
+                          arrays=arrays)
 
     def finish(status: str) -> str:
         if stop_beats is not None:
@@ -172,9 +184,12 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
         for m in pending:
             if m[0] == "cancel":
                 cancelled.add(m[1])
-        # rounds are monotonic: cancels for older rounds can never
-        # match again, so the set stays bounded
-        cancelled = {c for c in cancelled if c >= task.round}
+        # round ids are fleet-monotonic, but a requeued task can reach
+        # this worker AFTER newer rounds' traffic (its first owner
+        # died), so keep a trailing window of old cancels rather than
+        # pruning everything below the current round -- the set stays
+        # bounded either way
+        cancelled = {c for c in cancelled if c >= task.round - 64}
         if task.round in cancelled:
             continue
         try:
@@ -191,4 +206,61 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
         except Exception as e:  # defensive: surface, don't hang round
             emit(TaskResult(
                 worker=worker_id, round=task.round,
-                task_row=task.task_row, ok=False, error=repr(e)))
+                task_row=task.task_row, plan=task.plan,
+                ok=False, error=repr(e)))
+
+
+# ---------------------------------------------------------------------------
+# Standalone remote worker (multi-host tcp deployment)
+# ---------------------------------------------------------------------------
+
+
+def run_remote_worker(host: str, port: int, worker_id: int, *,
+                      heartbeat_s: float = 0.25,
+                      connect_timeout: float = 30.0) -> None:
+    """Join a tcp fleet on another host: dial, hello-handshake, download
+    shards, heartbeat, serve until the coordinator stops us.  The whole
+    protocol is the tcp transport's worker child -- a remote device and
+    a locally-spawned one are indistinguishable to the coordinator.
+    Dialing retries for ``connect_timeout`` seconds so devices may come
+    up before the coordinator binds its port."""
+    from .transport.tcp import _tcp_worker_main  # noqa: PLC0415
+
+    deadline = time.monotonic() + connect_timeout
+    while True:
+        try:
+            _tcp_worker_main(host, port, worker_id, NoFaults().to_spec(),
+                             heartbeat_s)
+            return
+        except ConnectionError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.2)
+
+
+def main(argv=None) -> None:
+    import argparse  # noqa: PLC0415
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cluster.worker",
+        description="Join a running tcp fleet as a remote edge worker.")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="coordinator address (TcpTransport server)")
+    ap.add_argument("--id", type=int, required=True, dest="worker_id",
+                    help="worker id assigned by the fleet operator "
+                         "(must be unique and < the fleet's n_workers)")
+    ap.add_argument("--heartbeat", type=float, default=0.25,
+                    help="liveness beat interval in seconds")
+    ap.add_argument("--connect-timeout", type=float, default=30.0,
+                    help="seconds to keep retrying the initial dial")
+    args = ap.parse_args(argv)
+    host, _, port = args.connect.rpartition(":")
+    if not host or not port.isdigit():
+        ap.error(f"--connect wants HOST:PORT, got {args.connect!r}")
+    run_remote_worker(host, int(port), args.worker_id,
+                      heartbeat_s=args.heartbeat,
+                      connect_timeout=args.connect_timeout)
+
+
+if __name__ == "__main__":
+    main()

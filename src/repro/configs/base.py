@@ -82,6 +82,15 @@ class CodedConfig:
     # sockets).  None = the REPRO_CLUSTER_TRANSPORT env var, falling
     # back to "memory".
     transport: str | None = None
+    # shared fleet session (repro.api.fleet.CodedFleet): when set, the
+    # engine ATTACHES its coded-head plan to this externally-owned
+    # fleet instead of spinning up a private cluster -- the LM head,
+    # CodedMoE experts and gradient aggregator then serve off the same
+    # persistent worker set.  engine.close() detaches the plan but
+    # leaves the fleet (and its workers) running for the other
+    # consumers; whoever built the fleet closes it.  Overrides
+    # cluster=/cluster_workers when set.
+    fleet: object | None = None
 
 
 @dataclass(frozen=True)

@@ -15,8 +15,6 @@ Computations at the Edge", 2024):
 """
 
 from .assignment import (  # noqa: F401
-    MM_SCHEMES,
-    MV_SCHEMES,
     HeteroSystem,
     MMScheme,
     MVScheme,

@@ -22,7 +22,6 @@ layers (coded matmul, coded linear, benchmarks) consume.
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -343,46 +342,11 @@ def cyclic31_mm(n: int, k_A: int, k_B: int) -> MMScheme:
                     supports_A=tuple(sup_a), supports_B=tuple(sup_b))
 
 
-class _DeprecatedSchemeDict(dict):
-    """Deprecation shim: the old per-kind constructor dicts.
-
-    Superseded by the scheme registry -- ``repro.api.make_scheme(name,
-    n=..., k_A=...)`` / ``repro.api.list_schemes()`` -- which carries
-    metadata (weight law, regime, straggler resilience) and feeds plan
-    compilation.  Lookups still work so existing callers keep running;
-    they just warn.
-    """
-
-    def __init__(self, alias: str, data: dict):
-        super().__init__(data)
-        self._alias = alias
-
-    def __getitem__(self, name):
-        warnings.warn(
-            f"{self._alias}[{name!r}] is deprecated; use "
-            f"repro.api.make_scheme({name!r}, ...) via the scheme registry",
-            DeprecationWarning, stacklevel=2)
-        return super().__getitem__(name)
-
-
-MV_SCHEMES = _DeprecatedSchemeDict("MV_SCHEMES", {
-    "proposed": proposed_mv,
-    "poly": poly_mv,
-    "orthopoly": orthopoly_mv,
-    "rkrp": rkrp_mv,
-    "cyclic31": cyclic31_mv,
-    "scs36": scs_mv,
-    "class29": class_based_mv,
-    "repetition": repetition_mv,
-})
-
-MM_SCHEMES = _DeprecatedSchemeDict("MM_SCHEMES", {
-    "proposed": proposed_mm,
-    "poly": poly_mm,
-    "orthopoly": orthopoly_mm,
-    "rkrp": rkrp_mm,
-    "cyclic31": cyclic31_mm,
-})
+# The old MV_SCHEMES / MM_SCHEMES constructor dicts (deprecated in
+# PR 2) are gone: the scheme registry -- ``repro.api.make_scheme(name,
+# n=..., k_A=...)`` / ``repro.api.list_schemes()`` -- is the single
+# lookup surface.  The free constructors above remain the canonical
+# implementations the registry wraps.
 
 
 # ---------------------------------------------------------------------------

@@ -277,11 +277,21 @@ class CodedMoE:
     single ``done`` mask applies to all expert matmuls (the workers are
     the same physical devices); outputs match ``moe_block`` to fp32
     tolerance under any <= s straggler pattern.
+
+    Pass ``fleet=`` (a ``repro.api.fleet.CodedFleet``) to *dispatch*
+    the expert matmuls instead of computing them in-process: every
+    expert plan attaches to the shared session (the same workers that
+    serve the coded LM head), and the forward pipelines rounds through
+    async futures -- all experts' gate+up products go in flight
+    together, each expert's down product is submitted the moment its
+    activation is ready.  The fleet's owner closes it; ``detach()``
+    withdraws this layer's plans early.
     """
 
     def __init__(self, p: dict, moe: MoEConfig, n_workers: int = 6,
                  stragglers: int = 2, seed: int = 0,
-                 scheme: str = "proposed", backend: str | None = "auto"):
+                 scheme: str = "proposed", backend: str | None = "auto",
+                 fleet=None):
         from ..api.plan import compile_plan  # noqa: PLC0415 - layering
         from ..api.schemes import make_scheme  # noqa: PLC0415
 
@@ -289,12 +299,16 @@ class CodedMoE:
         self.moe = moe
         self.n = n_workers
         self.s = stragglers
+        self.fleet = fleet
         sch = make_scheme(scheme, n=n_workers, k_A=n_workers - stragglers)
         e = moe.n_experts
 
         def plans(w):          # w: (E, din, dout) stacked expert weights
-            return [compile_plan(w[i], scheme=sch, seed=seed + i,
-                                 backend=backend) for i in range(e)]
+            built = [compile_plan(w[i], scheme=sch, seed=seed + i,
+                                  backend=backend) for i in range(e)]
+            if fleet is None:
+                return built
+            return [fleet.attach(pl) for pl in built]
 
         self.gate = plans(p["w_gate"])
         self.up = plans(p["w_up"])
@@ -302,7 +316,16 @@ class CodedMoE:
 
     def backends(self) -> list[str]:
         """Resolved backend per expert-gate plan (density may differ)."""
-        return [pl.backend for pl in self.gate]
+        return [pl.plan.backend if self.fleet is not None else pl.backend
+                for pl in self.gate]
+
+    def detach(self) -> None:
+        """Withdraw this layer's plans from the shared fleet (no-op for
+        the in-process path)."""
+        if self.fleet is None:
+            return
+        for handle in self.gate + self.up + self.down:
+            handle.detach()
 
     def __call__(self, x: jnp.ndarray, done: jnp.ndarray | None = None
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -320,17 +343,38 @@ class CodedMoE:
             tokens[tok_id], mode="drop")
         xe = buf.reshape(e, cap, d)
 
-        # --- coded expert FFN: three plan.matvec calls per expert ------
-        outs = []
-        for i in range(e):
-            g = self.gate[i].matvec(xe[i], done)          # (cap, h)
-            u = self.up[i].matvec(xe[i], done)
-            y = self.down[i].matvec(
-                (jax.nn.silu(g) * u).astype(xe.dtype), done)
-            outs.append(y)
+        if self.fleet is not None:
+            outs = self._dispatch_experts(xe, done)
+        else:
+            # --- coded expert FFN: three plan.matvec calls per expert --
+            outs = []
+            for i in range(e):
+                g = self.gate[i].matvec(xe[i], done)      # (cap, h)
+                u = self.up[i].matvec(xe[i], done)
+                y = self.down[i].matvec(
+                    (jax.nn.silu(g) * u).astype(xe.dtype), done)
+                outs.append(y)
         ye = jnp.stack(outs).astype(x.dtype)              # (e, cap, d)
         out = _combine_slots(ye, fp, tok_id, keep, dest, t, x.dtype)
 
         if moe.n_shared_experts:
             out = out + _shared_expert(p["shared"], tokens)
         return out.reshape(b, s, d), aux
+
+    def _dispatch_experts(self, xe: jnp.ndarray, done) -> list:
+        """Fleet path: pipeline every expert's FFN through futures.
+
+        All gate+up rounds go in flight at once; each down round is
+        submitted as soon as its expert's activation is available, so
+        expert i+1's gate product overlaps expert i's down product on
+        the shared workers.
+        """
+        e = xe.shape[0]
+        gate_f = [self.gate[i].submit_matvec(xe[i], done) for i in range(e)]
+        up_f = [self.up[i].submit_matvec(xe[i], done) for i in range(e)]
+        down_f = []
+        for i in range(e):
+            h = (jax.nn.silu(gate_f[i].result())
+                 * up_f[i].result()).astype(xe.dtype)
+            down_f.append(self.down[i].submit_matvec(h, done))
+        return [f.result() for f in down_f]

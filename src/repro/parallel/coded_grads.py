@@ -121,10 +121,24 @@ class CodedAggregator:
             return cluster.aggregate(payloads, done)
         return self.plan().aggregate(payloads, done)
 
-    def to_cluster(self, n_workers: int | None = None, **kw):
-        """A ``ClusterPlan`` over this aggregator's (aggregation-only)
-        plan: real workers, fault injection, partial-straggler credit --
-        the training-time analogue of the coded serving head."""
+    def to_cluster(self, n_workers: int | None = None, *, fleet=None, **kw):
+        """Serve this aggregator's (aggregation-only) plan from real
+        workers -- the training-time analogue of the coded serving head.
+
+        With ``fleet=`` (a ``repro.api.fleet.CodedFleet``) the plan
+        *attaches* to that existing session and the returned
+        ``PlanHandle`` aggregates off the same workers the LM head /
+        MoE experts already run on (the fleet's owner closes it).
+        Otherwise a private single-plan ``ClusterPlan`` is built as
+        before: real workers, fault injection, partial-straggler
+        credit.
+        """
+        if fleet is not None:
+            if kw or n_workers is not None:
+                raise ValueError("fleet= attaches to an existing session; "
+                                 "n_workers/transport/faults belong to the "
+                                 "fleet's constructor")
+            return fleet.attach(self.plan())
         from ..cluster import ClusterPlan  # noqa: PLC0415 - layering
 
         return ClusterPlan(self.plan(), n_workers, **kw)

@@ -19,6 +19,7 @@ masks fall back to the reference solve path in the executor.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 
@@ -48,6 +49,11 @@ class DecodeCache:
         self._plans: OrderedDict[bytes, DecodePlan] = OrderedDict()
         self.hits = 0
         self.misses = 0   # == number of host-side k x k inversions run
+        # a plan shared with a fleet session is consulted from the
+        # fleet's loop thread while the owner may use it in-process
+        # (or retune it) concurrently -- the LRU bookkeeping must not
+        # corrupt under that interleaving
+        self._lock = threading.Lock()
 
     def plan(self, done) -> DecodePlan:
         mask = np.asarray(done, dtype=bool)
@@ -56,11 +62,12 @@ class DecodeCache:
                 f"done mask shape {mask.shape} incompatible with "
                 f"{self._G.shape[0]} tasks")
         key = np.packbits(mask).tobytes()
-        cached = self._plans.get(key)
-        if cached is not None:
-            self._plans.move_to_end(key)
-            self.hits += 1
-            return cached
+        with self._lock:
+            cached = self._plans.get(key)
+            if cached is not None:
+                self._plans.move_to_end(key)
+                self.hits += 1
+                return cached
 
         rows = np.flatnonzero(mask)[: self.k]
         if rows.shape[0] < self.k:
@@ -69,10 +76,11 @@ class DecodeCache:
         hinv = np.linalg.inv(self._G[rows]).astype(np.float32)
         plan = DecodePlan(key=key, rows=rows, hinv=hinv,
                           hinv_dev=jnp.asarray(hinv))
-        self._plans[key] = plan
-        self.misses += 1
-        if len(self._plans) > self.maxsize:
-            self._plans.popitem(last=False)
+        with self._lock:
+            self._plans[key] = plan
+            self.misses += 1
+            if len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
         return plan
 
     def patterns(self) -> np.ndarray:
@@ -84,10 +92,12 @@ class DecodeCache:
         pre-warmed without shipping the factorisations themselves.
         """
         n = self._G.shape[0]
-        if not self._plans:
+        with self._lock:
+            keys = list(self._plans)
+        if not keys:
             return np.zeros((0, n), bool)
         rows = [np.unpackbits(np.frombuffer(key, np.uint8))[:n]
-                for key in self._plans]
+                for key in keys]
         return np.asarray(rows, bool)
 
     def __len__(self) -> int:

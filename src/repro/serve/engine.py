@@ -27,6 +27,10 @@ sharded to real workers (``plan.to_cluster``, transport picked by
 step's logits come back from the fastest-k of them, with liveness
 measured from worker heartbeats -- call ``close()`` when done (it
 shuts the transport down: sockets, heartbeat threads, processes).
+With ``CodedConfig.fleet`` the head instead *attaches* to a shared
+``CodedFleet`` session -- same workers as the MoE experts and the
+gradient aggregator, rounds multiplexed over the fleet's persistent
+dispatcher loop -- and ``close()`` merely detaches.
 """
 
 from __future__ import annotations
@@ -67,6 +71,7 @@ class ServeEngine:
             else StragglerFaults(rng=self.rng)
         self.coded = None
         self.coded_cluster = None
+        self._owns_cluster = True
         if coded is not None and coded.enabled:
             from ..api.schemes import scheme_info, scheme_names  # noqa: PLC0415
 
@@ -85,7 +90,13 @@ class ServeEngine:
                 n=coded.n_workers, s=coded.stragglers,
                 seed=coded.seed, backend=coded.backend or "auto")
             self.s = coded.stragglers
-            if coded.cluster:
+            if coded.fleet is not None:
+                # shared session: attach to the externally-owned fleet
+                # (workers co-host other consumers' plans); close()
+                # detaches without tearing the fleet down
+                self.coded_cluster = coded.fleet.attach(self.coded)
+                self._owns_cluster = False
+            elif coded.cluster:
                 self.coded_cluster = self.coded.to_cluster(
                     coded.cluster_workers, transport=coded.transport)
         self._prefill = jax.jit(
@@ -177,12 +188,18 @@ class ServeEngine:
     def close(self) -> None:
         """Release cluster resources (no-op outside cluster mode).
 
-        Shuts the transport down for real: sockets closed, heartbeat
-        tickers joined, worker processes reaped -- a served engine must
-        leak no fds or threads (asserted by the tcp shutdown test).
+        A private cluster is shut down for real: sockets closed,
+        heartbeat tickers joined, worker processes reaped -- a served
+        engine must leak no fds or threads (asserted by the tcp
+        shutdown test).  A plan attached to a shared ``CodedConfig.
+        fleet`` is only detached: the fleet and its workers keep
+        serving the other consumers, and its owner closes it.
         """
         if self.coded_cluster is not None:
-            self.coded_cluster.shutdown()
+            if self._owns_cluster:
+                self.coded_cluster.shutdown()
+            else:
+                self.coded_cluster.detach()
             self.coded_cluster = None
 
     def __enter__(self) -> "ServeEngine":

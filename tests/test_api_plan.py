@@ -29,7 +29,7 @@ from repro.api import (
     scheme_info,
     scheme_names,
 )
-from repro.core.assignment import MM_SCHEMES, MV_SCHEMES, MVScheme
+from repro.core.assignment import MVScheme
 
 TOL = dict(rtol=5e-3, atol=5e-3)
 
@@ -419,14 +419,19 @@ class TestPlanOps:
 
 
 class TestShims:
-    def test_scheme_dict_lookups_warn(self):
-        with pytest.warns(DeprecationWarning, match="make_scheme"):
-            MV_SCHEMES["proposed"]
-        with pytest.warns(DeprecationWarning, match="make_scheme"):
-            MM_SCHEMES["poly"]
-        # non-lookup mapping uses stay silent (iteration, membership)
-        assert "proposed" in MV_SCHEMES
-        assert set(MM_SCHEMES) >= {"proposed", "poly"}
+    def test_scheme_dicts_removed_registry_covers(self):
+        # the PR-2 deprecation shims are gone; the registry is the only
+        # lookup surface and it covers everything the dicts offered
+        import repro.core.assignment as assignment
+
+        assert not hasattr(assignment, "MV_SCHEMES")
+        assert not hasattr(assignment, "MM_SCHEMES")
+        assert {"proposed", "poly", "orthopoly", "rkrp", "cyclic31",
+                "scs36", "class29", "repetition"} <= set(scheme_names("mv"))
+        assert {"proposed", "poly", "orthopoly", "rkrp",
+                "cyclic31"} <= set(scheme_names("mm"))
+        sch = make_scheme("poly", n=12, k_A=9)
+        assert sch.name == "poly" and sch.omega_A == 9
 
     def test_coded_operator_exposes_its_plan(self):
         from repro.core import CodedOperator, proposed_mv

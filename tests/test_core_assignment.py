@@ -6,8 +6,8 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.api import make_scheme
 from repro.core import (
-    MV_SCHEMES,
     appearances,
     alg1_supports,
     cyclic31_mm,
@@ -122,7 +122,7 @@ class TestAlg2Structure:
 class TestBaselines:
     def test_dense_schemes_full_weight(self):
         for name in ("poly", "orthopoly", "rkrp"):
-            sch = MV_SCHEMES[name](12, 9)
+            sch = make_scheme(name, n=12, k_A=9)
             assert sch.omega_A == 9
             assert all(len(t) == 9 for t in sch.supports)
 
@@ -144,7 +144,7 @@ class TestBaselines:
             assert ok, (fn.__name__, fail, chk)
 
     def test_repetition_not_threshold_optimal(self):
-        sch = MV_SCHEMES["repetition"](6, 4)
+        sch = make_scheme("repetition", n=6, k_A=4)
         assert not sch.threshold_optimal
 
 

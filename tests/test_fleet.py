@@ -1,0 +1,547 @@
+"""CodedFleet session suite (repro.api.fleet / repro.cluster.fleet).
+
+Covers: interleaved in-flight rounds across >= 2 attached plans on all
+three transports with bitwise parity vs sequential execution, matvec ->
+matmat microbatching (coalesced rounds decode each call's columns back
+bitwise-identically to solo rounds), ``CodedFuture`` semantics
+(``result`` / ``done`` / ``add_done_callback`` / cancellation of queued
+calls), bounded-queue backpressure, per-call deadlines failing only the
+affected future, ``fleet.close()`` fd/thread leak hygiene (alongside
+the existing ServeEngine one), the ``REPRO_FLEET_MAX_INFLIGHT`` env
+default, the standalone remote worker entry point
+(``python -m repro.cluster.worker --connect``), and the consumer
+surfaces sharing one fleet: serve-engine LM head via
+``CodedConfig.fleet``, ``CodedMoE`` expert pipelining, and
+``CodedAggregator.to_cluster(fleet=...)``.
+"""
+
+import concurrent.futures
+import itertools
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CodedFleet, compile_plan
+from repro.api.fleet import default_max_inflight
+from repro.cluster import StragglerFaults
+
+TOL = dict(rtol=5e-3, atol=5e-3)
+
+
+def block_sparse(rng, t, r, zeros, bs=8, dtype=np.float32):
+    mask = rng.random((t // bs, r // bs)) >= zeros
+    a = rng.standard_normal((t, r)).astype(dtype)
+    return a * np.kron(mask, np.ones((bs, bs), dtype))
+
+
+def all_straggler_masks(n, s):
+    for pat in itertools.combinations(range(n), s):
+        done = np.ones(n, bool)
+        done[list(pat)] = False
+        yield done
+
+
+@pytest.fixture(scope="module")
+def operands():
+    rng = np.random.default_rng(3)
+    t, r = 256, 144
+    A = jnp.asarray(block_sparse(rng, t, r, 0.98))
+    A2 = jnp.asarray(block_sparse(rng, t, 96, 0.98))
+    xs = jnp.asarray(rng.standard_normal((8, t)), jnp.float32)
+    return A, A2, xs
+
+
+# ---------------------------------------------------------------------------
+# In-flight rounds across plans, all transports
+# ---------------------------------------------------------------------------
+
+
+class TestInterleavedRounds:
+    @pytest.mark.parametrize("transport", ["memory", "pipe", "tcp"])
+    def test_two_plans_interleaved_bitwise(self, operands, transport):
+        if transport != "memory":
+            pytest.importorskip("scipy")
+        A, A2, xs = operands
+        n, s = 6, 2
+        p1 = compile_plan(A, scheme="proposed", n=n, s=s, backend="packed")
+        p2 = compile_plan(A2, scheme="cyclic31", n=n, s=s, backend="packed")
+        masks = list(all_straggler_masks(n, s))[:6]
+        with CodedFleet(n, transport=transport, max_inflight=4) as fleet:
+            h1 = fleet.attach(p1)
+            h2 = fleet.attach(p2)
+            # submit everything up front: rounds from both plans are in
+            # flight simultaneously, demuxed by (plan, round) on one
+            # uniform event stream
+            futs = []
+            for i, done in enumerate(masks):
+                futs.append(("p1", i, done, h1.submit_matvec(xs[i], done)))
+                futs.append(("p2", i, done, h2.submit_matvec(xs[i], done)))
+            for which, i, done, fut in futs:
+                plan = p1 if which == "p1" else p2
+                want = np.asarray(plan.matvec(xs[i], jnp.asarray(done)))
+                np.testing.assert_array_equal(np.asarray(fut.result()), want)
+            assert len(h1.reports) == len(masks)
+            assert len(h2.reports) == len(masks)
+
+    def test_matmat_and_aggregate_futures(self):
+        rng = np.random.default_rng(5)
+        t = 144
+        A = jnp.asarray(block_sparse(rng, t, 72, 0.95))
+        B = jnp.asarray(block_sparse(rng, t, 48, 0.95))
+        mm = compile_plan(A, scheme="proposed", n=12, k_A=3, k_B=3,
+                          backend="packed")
+        agg = compile_plan(scheme="proposed", n=6, s=2)
+        payloads = [{"g": jnp.asarray(rng.standard_normal(16), jnp.float32)}
+                    for _ in range(6)]
+        with CodedFleet(12, max_inflight=4) as fleet:
+            hm = fleet.attach(mm)
+            ha = fleet.attach(agg)
+            done_mm = np.ones(12, bool)
+            done_ag = np.ones(6, bool)
+            fm = hm.submit_matmat(B, done_mm)
+            fa = ha.submit_aggregate(payloads, done_ag)
+            np.testing.assert_array_equal(
+                np.asarray(fm.result()),
+                np.asarray(mm.matmat(B, jnp.asarray(done_mm))))
+            np.testing.assert_allclose(
+                np.asarray(fa.result()["g"]),
+                np.asarray(agg.aggregate(payloads,
+                                         jnp.asarray(done_ag))["g"]),
+                rtol=1e-5, atol=1e-5)
+
+    def test_race_mode_pattern_parity(self, operands):
+        # race-mode decode must be bitwise the in-process plan under
+        # the *observed* pattern the report records
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6, max_inflight=2) as fleet:
+            h = fleet.attach(plan)
+            futs = [h.submit_matvec(xs[i]) for i in range(4)]
+            outs = [np.asarray(f.result()) for f in futs]
+        # rounds launch in submission order (round ids are monotonic),
+        # so sorting reports by round maps each call to its pattern
+        # even when completions interleave or calls coalesce
+        reports = sorted(h.reports, key=lambda r: r.round)
+        assert sum(r.calls for r in reports) == 4
+        call_patterns = [r.pattern for r in reports for _ in range(r.calls)]
+        for i, (out, pat) in enumerate(zip(outs, call_patterns)):
+            want = np.asarray(plan.matvec(xs[i], jnp.asarray(pat)))
+            np.testing.assert_array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# Microbatching
+# ---------------------------------------------------------------------------
+
+
+class TestMicrobatching:
+    def test_queued_matvecs_coalesce_bitwise(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        # slow the workers so rounds 2..4 are provably queued while
+        # round 1 is in flight -> they must coalesce into ONE round
+        faults = StragglerFaults(time_scale=1.0, seed=1)
+        with CodedFleet(6, max_inflight=1, microbatch=True,
+                        faults=faults) as fleet:
+            h = fleet.attach(plan)
+            futs = [h.submit_matvec(xs[i]) for i in range(4)]
+            outs = [np.asarray(f.result()) for f in futs]
+        reports = list(h.reports)
+        # the queued calls coalesced: strictly fewer rounds than calls
+        assert len(reports) <= 2
+        assert max(r.calls for r in reports) >= 3
+        assert sum(r.calls for r in reports) == 4
+        # every call decodes bitwise vs the in-process plan under its
+        # round's observed pattern -- coalescing is invisible to values
+        call_patterns = [r.pattern for r in reports for _ in range(r.calls)]
+        for i, (out, pat) in enumerate(zip(outs, call_patterns)):
+            want = np.asarray(plan.matvec(xs[i], jnp.asarray(pat)))
+            np.testing.assert_array_equal(out, want)
+
+    def test_microbatch_off_keeps_rounds_solo(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        faults = StragglerFaults(time_scale=1.0, seed=1)
+        with CodedFleet(6, max_inflight=1, microbatch=False,
+                        faults=faults) as fleet:
+            h = fleet.attach(plan)
+            futs = [h.submit_matvec(xs[i]) for i in range(3)]
+            [f.result() for f in futs]
+        assert [r.calls for r in h.reports] == [1, 1, 1]
+
+    def test_column_cap_bounds_coalescing(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        faults = StragglerFaults(time_scale=1.0, seed=1)
+        with CodedFleet(6, max_inflight=1, microbatch=True,
+                        microbatch_cols=2, faults=faults) as fleet:
+            h = fleet.attach(plan)
+            futs = [h.submit_matvec(xs[i]) for i in range(5)]
+            [f.result() for f in futs]
+        # width cap 2: after the first solo round, coalesced rounds
+        # stop growing once 2 columns are packed
+        assert all(r.calls <= 2 for r in h.reports)
+        assert sum(r.calls for r in h.reports) == 5
+
+
+# ---------------------------------------------------------------------------
+# Futures: callbacks, cancellation, deadlines, backpressure
+# ---------------------------------------------------------------------------
+
+
+class TestCodedFuture:
+    def test_done_and_callback(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        fired = threading.Event()
+        with CodedFleet(6) as fleet:
+            h = fleet.attach(plan)
+            fut = h.submit_matvec(xs[0])
+            fut.add_done_callback(lambda f: fired.set())
+            fut.result()
+            assert fired.wait(timeout=5)
+            assert fut.done() and not fut.cancelled()
+            assert fut.exception() is None
+            # callbacks added after resolution fire immediately
+            late = threading.Event()
+            fut.add_done_callback(lambda f: late.set())
+            assert late.is_set()
+
+    def test_cancel_queued_call(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        faults = StragglerFaults(time_scale=1.0, seed=1)
+        with CodedFleet(6, max_inflight=1, microbatch=False,
+                        faults=faults) as fleet:
+            h = fleet.attach(plan)
+            f1 = h.submit_matvec(xs[0])     # launches immediately
+            f2 = h.submit_matvec(xs[1])     # queued behind it
+            assert f2.cancel()
+            assert f2.cancelled()
+            with pytest.raises(concurrent.futures.CancelledError):
+                f2.result()
+            # the launched round is not cancellable and still resolves
+            assert not f1.cancel()
+            np.testing.assert_allclose(
+                np.asarray(f1.result()), np.asarray(xs[0] @ A), **TOL)
+        assert len(h.reports) == 1          # the cancelled call never ran
+
+    def test_deadline_fails_only_its_future(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        slow = StragglerFaults(time_scale=30.0, seed=1)   # ~minutes/task
+        with CodedFleet(6, max_inflight=2, faults=slow) as fleet:
+            h = fleet.attach(plan)
+            doomed = h.submit_matvec(xs[0], np.ones(6, bool), deadline=0.2)
+            with pytest.raises(TimeoutError):
+                doomed.result()
+            assert isinstance(doomed.exception(), TimeoutError)
+        # the fleet survives the expiry: nothing else was torn down
+
+    def test_backpressure_bounds_queue(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        faults = StragglerFaults(time_scale=1.0, seed=1)
+        with CodedFleet(6, max_inflight=1, microbatch=False, queue_cap=2,
+                        faults=faults) as fleet:
+            h = fleet.attach(plan)
+            t0 = time.perf_counter()
+            futs = [h.submit_matvec(xs[i % 8]) for i in range(6)]
+            blocked_s = time.perf_counter() - t0
+            [f.result() for f in futs]
+        # with only 2 unresolved calls admitted at a time, the 6
+        # submissions cannot all have been accepted instantly
+        assert blocked_s > 0.05
+
+
+# ---------------------------------------------------------------------------
+# Session hygiene
+# ---------------------------------------------------------------------------
+
+
+class TestSessionLifecycle:
+    def test_close_joins_fleet_threads(self, operands):
+        A, A2, xs = operands
+        p1 = compile_plan(A, scheme="proposed", n=6, s=2, backend="packed")
+        p2 = compile_plan(A2, scheme="proposed", n=6, s=2, backend="packed")
+        with CodedFleet(6) as fleet:
+            h1, h2 = fleet.attach(p1), fleet.attach(p2)
+            h1.matvec(xs[0])
+            h2.matvec(xs[1])
+        time.sleep(0.05)
+        leftover = [t.name for t in threading.enumerate()
+                    if t.name.startswith(("coded-fleet", "cluster-worker",
+                                          "cluster-beat"))]
+        assert leftover == []
+
+    def test_tcp_close_releases_sockets_and_threads(self, operands):
+        import gc
+        import warnings
+
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", ResourceWarning)
+            with CodedFleet(6, transport="tcp") as fleet:
+                h = fleet.attach(plan)
+                h.matvec(xs[0])
+            gc.collect()                # unclosed sockets would warn here
+        for t in threading.enumerate():
+            assert not t.name.startswith(("coded-fleet", "cluster-tcp",
+                                          "cluster-beat", "cluster-worker"))
+
+    def test_detach_keeps_fleet_serving_other_plans(self, operands):
+        A, A2, xs = operands
+        p1 = compile_plan(A, scheme="proposed", n=6, s=2, backend="packed")
+        p2 = compile_plan(A2, scheme="proposed", n=6, s=2, backend="packed")
+        with CodedFleet(6) as fleet:
+            h1, h2 = fleet.attach(p1), fleet.attach(p2)
+            h1.matvec(xs[0])
+            h1.detach()
+            with pytest.raises(RuntimeError, match="detached"):
+                h1.submit_matvec(xs[0])
+            np.testing.assert_allclose(np.asarray(h2.matvec(xs[1])),
+                                       np.asarray(xs[1] @ A2), **TOL)
+
+    def test_submit_after_close_raises(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        fleet = CodedFleet(6)
+        h = fleet.attach(plan)
+        fleet.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            h.submit_matvec(xs[0])
+
+    def test_env_var_sets_inflight_default(self, monkeypatch):
+        monkeypatch.delenv("REPRO_FLEET_MAX_INFLIGHT", raising=False)
+        assert default_max_inflight() == 8
+        monkeypatch.setenv("REPRO_FLEET_MAX_INFLIGHT", "3")
+        assert default_max_inflight() == 3
+        fleet = CodedFleet(2)
+        try:
+            assert fleet.max_inflight == 3
+        finally:
+            fleet.close()
+
+    def test_all_workers_dead_between_rounds_fails_fast(self, operands):
+        from repro.cluster import FailStop
+
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        # every worker dies on its first served task: the round in
+        # flight (or the ones after it) must surface the wipeout as a
+        # RuntimeError on the future, and later submissions must
+        # fail fast instead of hanging forever
+        with CodedFleet(6, faults=FailStop(
+                {w: 0 for w in range(6)})) as fleet:
+            h = fleet.attach(plan)
+            with pytest.raises(RuntimeError, match="dead"):
+                h.matvec(xs[0], deadline=30.0)
+            with pytest.raises(RuntimeError, match="dead"):
+                h.submit_matvec(xs[1])
+
+    def test_failstop_requeues_across_plans(self, operands):
+        from repro.cluster import FailStop
+
+        A, A2, xs = operands
+        p1 = compile_plan(A, scheme="proposed", n=6, s=2, backend="packed")
+        p2 = compile_plan(A2, scheme="proposed", n=6, s=2, backend="packed")
+        with CodedFleet(6, faults=FailStop({0: 0})) as fleet:
+            h1, h2 = fleet.attach(p1), fleet.attach(p2)
+            # worker 0 dies serving its first task; BOTH plans' shards
+            # held by it must re-home and both plans keep answering
+            np.testing.assert_allclose(np.asarray(h1.matvec(xs[0])),
+                                       np.asarray(xs[0] @ A), **TOL)
+            np.testing.assert_allclose(np.asarray(h2.matvec(xs[1])),
+                                       np.asarray(xs[1] @ A2), **TOL)
+            np.testing.assert_allclose(np.asarray(h1.matvec(xs[2])),
+                                       np.asarray(xs[2] @ A), **TOL)
+            total_deaths = sum(r.deaths for r in
+                               list(h1.reports) + list(h2.reports))
+            assert total_deaths == 1
+
+
+# ---------------------------------------------------------------------------
+# Remote worker entry point (multi-host tcp)
+# ---------------------------------------------------------------------------
+
+
+class TestRemoteWorker:
+    @pytest.mark.slow
+    def test_remote_workers_join_tcp_fleet(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        # reserve a port for the coordinator so the "remote" workers
+        # (separate python processes running the module entry point)
+        # know where to dial before the fleet exists
+        probe = socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        port = probe.getsockname()[1]
+        probe.close()
+        env = {**os.environ,
+               "PYTHONPATH": os.pathsep.join(
+                   ["src"] + os.environ.get("PYTHONPATH", "").split(
+                       os.pathsep)).rstrip(os.pathsep)}
+        procs = [subprocess.Popen(
+            [sys.executable, "-m", "repro.cluster.worker",
+             "--connect", f"127.0.0.1:{port}", "--id", str(w)],
+            env=env, cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+            for w in range(2)]
+        try:
+            with CodedFleet(2, transport="tcp",
+                            transport_opts={"spawn": False,
+                                            "port": port}) as fleet:
+                h = fleet.attach(plan)
+                done = np.ones(6, bool)
+                done[[2, 5]] = False
+                got = np.asarray(h.matvec(xs[0], done))
+                want = np.asarray(plan.matvec(xs[0], jnp.asarray(done)))
+                np.testing.assert_array_equal(got, want)
+            for p in procs:
+                assert p.wait(timeout=30) == 0
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.kill()
+
+    def test_cli_rejects_bad_address(self):
+        from repro.cluster.worker import main
+
+        with pytest.raises(SystemExit):
+            main(["--connect", "no-port-here", "--id", "0"])
+
+
+# ---------------------------------------------------------------------------
+# Consumer surfaces sharing one fleet
+# ---------------------------------------------------------------------------
+
+
+class TestSharedConsumers:
+    def test_engine_and_aggregator_share_one_fleet(self):
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.configs.base import CodedConfig
+        from repro.models import build_model
+        from repro.parallel.coded_grads import CodedAggregator
+        from repro.serve import ServeEngine
+
+        cfg = get_smoke_config("qwen3-14b")
+        model = build_model(cfg, dtype=jnp.float32)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        with CodedFleet(6, max_inflight=4) as fleet:
+            eng = ServeEngine(
+                model, params, cfg, batch_size=2, max_len=32,
+                coded=CodedConfig(enabled=True, n_workers=6, stragglers=2,
+                                  fleet=fleet))
+            agg = CodedAggregator.build(6, 2, seed=0)
+            agg_handle = agg.to_cluster(fleet=fleet)
+            assert agg_handle.fleet is fleet
+            assert eng.coded_cluster.fleet is fleet
+
+            hidden = jnp.asarray(rng.standard_normal(
+                (2, cfg.d_model)), jnp.float32)
+            head = params["embed"].T if cfg.tie_embeddings \
+                else params["head"]
+            out = eng.coded_logits(hidden)
+            np.testing.assert_allclose(np.asarray(out),
+                                       np.asarray(hidden @ head), **TOL)
+
+            shard_grads = [
+                {"g": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+                for _ in range(4)]
+            payloads = [agg.worker_payload(w, shard_grads)
+                        for w in range(6)]
+            done = jnp.asarray(np.ones(6, bool))
+            got = np.asarray(agg.aggregate(payloads, done,
+                                           cluster=agg_handle)["g"])
+            want = np.asarray(agg.aggregate(payloads, done)["g"])
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+            # engine close only DETACHES from the shared fleet; the
+            # aggregator keeps serving on the same workers
+            eng.close()
+            assert eng.coded_cluster is None
+            got2 = np.asarray(agg.aggregate(payloads, done,
+                                            cluster=agg_handle)["g"])
+            np.testing.assert_allclose(got2, want, rtol=1e-5, atol=1e-5)
+
+    def test_coded_moe_pipelines_experts_on_fleet(self):
+        import jax
+
+        from repro.configs.base import MoEConfig
+        from repro.models.moe import CodedMoE, init_moe_params
+
+        moe = MoEConfig(n_experts=2, top_k=1, d_expert=48)
+        p = init_moe_params(jax.random.key(0), 64, moe)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((2, 4, 64)), jnp.float32)
+        done = np.ones(6, bool)
+        done[[1, 4]] = False
+        local = CodedMoE(p, moe, n_workers=6, stragglers=2,
+                         backend="packed")
+        with CodedFleet(6, max_inflight=4) as fleet:
+            dispatched = CodedMoE(p, moe, n_workers=6, stragglers=2,
+                                  backend="packed", fleet=fleet)
+            o_fleet, aux_f = dispatched(x, jnp.asarray(done))
+            o_local, aux_l = local(x, jnp.asarray(done))
+            np.testing.assert_array_equal(np.asarray(o_fleet),
+                                          np.asarray(o_local))
+            np.testing.assert_allclose(float(aux_f), float(aux_l))
+            # 3 plans per expert attached and served
+            assert len(dispatched.gate[0].reports) == 1
+            dispatched.detach()
+
+    def test_trainer_reships_through_fleet_handle(self):
+        from repro.train.trainer import TrainConfig, Trainer
+
+        rng = np.random.default_rng(0)
+        t, r = 128, 72
+        dense = jnp.asarray(rng.standard_normal((t, r)), jnp.float32)
+        sparse = jnp.asarray(block_sparse(rng, t, r, 0.995))
+        plan = compile_plan(sparse, scheme="proposed", n=6, s=2)
+        assert plan.backend == "packed"
+
+        class TinyModel:
+            def init(self, key):
+                return {"w": dense}
+
+            def train_loss(self, params, batch):
+                return jnp.mean(params["w"] ** 2)
+
+        with CodedFleet(6) as fleet:
+            handle = fleet.attach(plan)
+            shards_before = handle.bytes_shards
+            trainer = Trainer(
+                TinyModel(),
+                __import__("repro.optim.adamw",
+                           fromlist=["AdamWConfig"]).AdamWConfig(lr=1e-3),
+                TrainConfig(steps=1, retune_every=1, log_every=100),
+                coded_plans=[(plan, lambda prm: prm["w"], handle)])
+            trainer.fit(lambda start: iter(
+                [{"x": np.zeros((1,), np.float32)}] * 4), resume=False)
+            assert trainer.retunes and trainer.retunes[0]["changed"]
+            assert trainer.retunes[0]["backend"] == "reference"
+            assert trainer.retunes[0]["reshipped_bytes"] > 0
+            assert handle.bytes_shards > shards_before
