@@ -28,6 +28,12 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
                      omega_B/k_B bandwidth claim) and a
                      partial-straggler exact-parity check
                      -> BENCH_cluster.json
+  chaos           -- deterministic fault schedules (kill, hang, slow,
+                     partition, garble, leave, join, reconnect) against
+                     a live fleet per transport; asserts bitwise parity
+                     within the resilience budget and graceful
+                     degradation past it; recovery latency p50/p99 per
+                     fault type -> BENCH_chaos.json
 
 ``--list`` prints the scheme registry table instead of benching.
 
@@ -804,6 +810,66 @@ def fleet_bench(scale: float, calls: int = 48, seed: int = 11,
 
 
 # ---------------------------------------------------------------------------
+# Chaos sweep: deterministic fault schedules against a live fleet
+# (robustness bench, tracked via BENCH_chaos.json)
+# ---------------------------------------------------------------------------
+
+
+def chaos_bench(seed: int = 5, transports=("memory", "tcp"),
+                json_path: str = "BENCH_chaos.json"):
+    """Deterministic chaos smoke: seeded fault schedules (kill, hang,
+    slow, partition, garbled frame, graceful leave, live join,
+    reconnect) against a live ``CodedFleet``, per transport.
+
+    Two schedules run per transport: one *within* the resilience
+    budget (<= s concurrent failures -- every future must resolve, and
+    ``run_chaos`` asserts each resolved value is bitwise the local
+    replay of its observed pattern) and one *past* it (the fleet must
+    degrade gracefully: re-encode at reduced resilience or fail fast
+    with a structured ``FleetDegraded`` -- never a hang).  The JSON
+    records, per schedule, recovery latency p50/p99 per fault type and
+    the future outcome counts (resolved-clean / resolved-degraded /
+    failed).
+    """
+    import json as _json  # noqa: PLC0415
+
+    from repro.cluster.chaos import (  # noqa: PLC0415
+        run_chaos,
+        scripted_schedule,
+    )
+
+    n, s = 6, 2
+    runs = []
+    for transport in transports:
+        for label, budget, n_events in (("within-budget", s, 5),
+                                        ("past-budget", s + 2, 8)):
+            sched = scripted_schedule(seed, n, s, duration=2.5,
+                                      n_events=n_events, budget=budget)
+            t0 = time.perf_counter()
+            res = run_chaos(sched, transport=transport, n=n, s=s,
+                            seed=seed, calls=20, spacing_s=0.12,
+                            warmup_s=15.0 if transport != "memory" else 3.0,
+                            suspect_after=0.8)
+            wall = time.perf_counter() - t0
+            d = res.as_dict()
+            d["label"] = label
+            d["wall_s"] = wall
+            runs.append(d)
+            counts = d["futures"]
+            assert counts["clean"] + counts["degraded"] \
+                + counts["failed"] == 20
+            emit(f"chaos/{transport}/{label}", wall * 1e6,
+                 f"maxcc={d['max_concurrent_failures']};"
+                 f"clean={counts['clean']};degraded={counts['degraded']};"
+                 f"failed={counts['failed']}")
+    payload = {"bench": "chaos", "seed": seed, "n": n, "s": s,
+               "runs": runs}
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("chaos/json", 0.0, f"wrote={json_path}")
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -820,6 +886,10 @@ def main() -> None:
                     help="cluster transport for the cluster bench")
     ap.add_argument("--fleet-calls", type=int, default=48,
                     help="matvec calls per configuration in the fleet bench")
+    ap.add_argument("--chaos-seed", type=int, default=5,
+                    help="schedule seed for the chaos bench")
+    ap.add_argument("--chaos-transports", default="memory,tcp",
+                    help="comma-separated transports for the chaos bench")
     ap.add_argument("--list", action="store_true",
                     help="print the scheme registry table and exit")
     args = ap.parse_args()
@@ -843,6 +913,9 @@ def main() -> None:
             args.scale, rounds=args.cluster_rounds,
             transport=args.cluster_transport),
         "fleet": lambda: fleet_bench(args.scale, calls=args.fleet_calls),
+        "chaos": lambda: chaos_bench(
+            args.chaos_seed,
+            transports=tuple(args.chaos_transports.split(","))),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -25,6 +25,7 @@ from .backends import (  # noqa: F401
 from .fleet import (  # noqa: F401
     CodedFleet,
     CodedFuture,
+    FleetDegraded,
     PlanHandle,
 )
 from .plan import CodedPlan, compile_plan  # noqa: F401

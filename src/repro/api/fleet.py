@@ -24,16 +24,29 @@ microbatching (queued matvecs against one plan coalesce into a wider
 round and decode back out bitwise-identically).  The in-flight cap
 defaults from the ``REPRO_FLEET_MAX_INFLIGHT`` env var.
 
+The session is *elastic* and self-healing: ``fleet.add_worker()``
+admits a device into the running session (every attached plan's shards
+are caught up and ownership rebalances), ``fleet.remove_worker(w)``
+drains in-flight rows before closing the channel, and worker loss
+degrades gracefully -- shards re-home, plans re-encode at reduced
+resilience (``k`` preserved, ``s`` shrunk) using heartbeat-derived
+per-worker throughput for hetero capacities, and below ``min_workers``
+(env ``REPRO_FLEET_MIN_WORKERS``) futures fail fast with a structured
+``FleetDegraded`` carrying the recovery action -- never a hang.
+
 The implementation lives in ``repro.cluster.fleet`` (it is cluster
-machinery: transports, wire v3 plan routing, liveness); this module is
+machinery: transports, wire plan routing, liveness); this module is
 the supported import path.
 """
 
 from ..cluster.fleet import (  # noqa: F401
     ENV_MAX_INFLIGHT,
+    ENV_MIN_WORKERS,
     ClusterReport,
     CodedFleet,
     CodedFuture,
+    FleetDegraded,
     PlanHandle,
     default_max_inflight,
+    default_min_workers,
 )

@@ -28,24 +28,48 @@ precompiled ``CodedPlan`` into a ``ClusterPlan`` with the same
     private single-plan fleet with ``max_inflight=1``;
   * ``faults``     -- deterministic latency / death / hang injection as a
     decorator around any transport's serve path (it *causes* behaviour
-    the protocol then *measures*; liveness never reads it).
+    the protocol then *measures*; liveness never reads it), including
+    wall-clock-scripted fault windows (``ScriptedFaults``);
+  * ``chaos``      -- the deterministic chaos harness: seeded fault
+    schedules (kill / hang / slow / partition / garble / leave / join /
+    reconnect) driven against a live fleet with bitwise-parity and
+    no-hang assertions (``run_chaos``);
+  * ``retry``      -- ``RetryPolicy``: bounded exponential backoff with
+    deterministic jitter, shared by worker dialing and transport ops.
+
+The fleet is *elastic* (wire v4): ``fleet.add_worker()`` admits a
+device into the running session (shard catch-up + welcome),
+``fleet.remove_worker()`` drains before removing, and worker loss
+degrades gracefully -- shards re-home, plans re-encode at reduced
+resilience (``k`` preserved), and below ``min_workers`` futures fail
+fast with a structured ``FleetDegraded`` instead of hanging.
 
 ``python benchmarks/run.py --only cluster`` runs the paper-shaped
 experiment over this stack and writes ``BENCH_cluster.json`` --
 including measured bytes-on-wire per scheme.
 """
 
+from .chaos import (  # noqa: F401
+    ChaosEvent,
+    ChaosResult,
+    max_concurrent_failures,
+    run_chaos,
+    scripted_schedule,
+)
 from .dispatcher import ClusterPlan, ClusterReport  # noqa: F401
 from .fleet import (  # noqa: F401
     CodedFleet,
     CodedFuture,
+    FleetDegraded,
     PlanHandle,
     default_max_inflight,
+    default_min_workers,
 )
 from .faults import (  # noqa: F401
     FailStop,
     Hang,
     NoFaults,
+    ScriptedFaults,
     StragglerFaults,
     WorkerFailure,
     WorkerHang,
@@ -53,6 +77,7 @@ from .faults import (  # noqa: F401
     faulty,
     straggler_mask,
 )
+from .retry import RetryPolicy  # noqa: F401
 from .transport import (  # noqa: F401
     TRANSPORTS,
     Transport,
@@ -64,6 +89,8 @@ from .wire import (  # noqa: F401
     PlanShard,
     Task,
     TaskResult,
+    WorkerJoin,
+    WorkerLeave,
     dumps_plan,
     loads_plan,
     shard_plan,

@@ -247,6 +247,85 @@ class FailStop:
 
 @_register
 @dataclass
+class ScriptedFaults:
+    """Wall-clock-scripted fault windows: the chaos harness's injector.
+
+    Each window is a plain dict ``{"kind", "worker", "t0", "t1"?,
+    ...}`` with times in seconds *relative to a shared epoch*
+    (``time.time()``-based, so subprocess and socket workers agree on
+    when a window opens without any cross-process clock plumbing):
+
+      * ``kill``      -- fail-stop while ``t0 <= now < t1`` (death
+        notice on the next served task; a worker respawned after the
+        window serves normally -- the reconnect scenario);
+      * ``hang``      -- go silent while the window is open: no result,
+        no beats, connection held (heartbeat-timeout territory);
+      * ``slow``      -- add ``delay_s`` seconds to every task served
+        inside the window (a transient straggler);
+      * ``partition`` -- unreachable for the window: heartbeats are
+        muted (``should_mute``) and any task served inside the window
+        is held back until the window heals -- from the dispatcher's
+        side the worker is suspected, then comes back.
+
+    Latency composition delegates to ``base`` (so chaos can ride on a
+    straggler model); ``to_spec``/``from_spec`` round-trip the whole
+    schedule, epoch included, for pipe/tcp worker children.
+    """
+
+    windows: list = field(default_factory=list)
+    epoch: float = 0.0
+    base: object = field(default_factory=NoFaults)
+
+    def _now(self) -> float:
+        return time.time() - self.epoch
+
+    def _open(self, kind: str, worker: int, now: float | None = None):
+        now = self._now() if now is None else now
+        for win in self.windows:
+            if win["kind"] != kind or win["worker"] != worker:
+                continue
+            if win["t0"] <= now < win.get("t1", float("inf")):
+                yield win
+
+    def should_fail(self, worker: int, tasks_done: int) -> bool:
+        if self.base.should_fail(worker, tasks_done):
+            return True
+        return any(True for _ in self._open("kill", worker))
+
+    def should_hang(self, worker: int, tasks_done: int) -> bool:
+        return any(True for _ in self._open("hang", worker))
+
+    def should_mute(self, worker: int) -> bool:
+        """Heartbeat mute hook (``start_heartbeat``): beats are dropped
+        while a partition window is open for this worker."""
+        return any(True for _ in self._open("partition", worker))
+
+    def delay(self, worker: int, task_row: int, work: float) -> float:
+        d = self.base.delay(worker, task_row, work)
+        now = self._now()
+        for win in self._open("slow", worker, now):
+            d += float(win.get("delay_s", 0.05))
+        for win in self._open("partition", worker, now):
+            # results cross the partition only once it heals
+            d = max(d, win.get("t1", now) - now)
+        return d
+
+    def mask(self, n: int, s: int) -> np.ndarray:
+        return self.base.mask(n, s)
+
+    def to_spec(self) -> dict:
+        return {"kind": "ScriptedFaults",
+                "windows": [dict(w) for w in self.windows],
+                "epoch": float(self.epoch), "base": self.base.to_spec()}
+
+    @classmethod
+    def _from_spec(cls, spec: dict) -> "ScriptedFaults":
+        return cls(windows=[dict(w) for w in spec["windows"]],
+                   epoch=spec["epoch"], base=from_spec(spec["base"]))
+
+
+@_register
+@dataclass
 class Hang:
     """Silent-worker injection: ``hang_after[w]`` = tasks worker ``w``
     completes before going mute (0 = hangs on first task).  Unlike

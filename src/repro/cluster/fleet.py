@@ -1,5 +1,6 @@
-"""CodedFleet: a shared-worker session runtime with async futures,
-in-flight pipelining, and matvec -> matmat microbatching.
+"""CodedFleet: a self-healing shared-worker session runtime with async
+futures, in-flight pipelining, matvec microbatching, and elastic
+membership.
 
 The paper's schemes exist to keep *many* edge devices productively
 busy; before this module the repo's public surface was one blocking
@@ -12,7 +13,7 @@ MoE experts, gradient aggregator) hoarded its own worker fleet.  A
     transport + worker set and one long-lived dispatcher event loop
     (created once, never per call).  ``fleet.attach(plan)`` ships the
     plan's shards once; workers co-host every attached plan's BSR task
-    tables, keyed by the wire-v3 plan id, so the coded LM head, the
+    tables, keyed by the wire plan id, so the coded LM head, the
     MoE experts and the gradient aggregator all serve off the *same*
     devices;
   * **async futures** -- ``handle.submit_matvec(x)`` returns a
@@ -25,26 +26,48 @@ MoE experts, gradient aggregator) hoarded its own worker fleet.  A
     side, the paper family's MM-regime insight: coding overhead
     amortizes across columns -- Das & Ramamoorthy 2021, Das et al.
     2023).  Decode slices each call's columns back out and resolves
-    its future *bitwise-identically* to a solo round (both the BSR
-    worker product and the cached-inverse decode are column-
-    independent);
+    its future *bitwise-identically* to a solo round;
   * **backpressure + deadlines** -- per-plan bounded submission
-    (callers block once ``queue_cap`` calls are unresolved), a fleet
-    in-flight cap (``max_inflight``, default from
-    ``REPRO_FLEET_MAX_INFLIGHT``), and per-plan / per-call deadlines
-    that fail the affected futures without tearing the session down;
-  * the full PR-4 liveness protocol is preserved: heartbeat-driven
-    suspicion, death notices, dropped connections -- all re-homing a
-    dead worker's shards (every attached plan's) to the least-loaded
-    live host and resubmitting its in-flight rows across *all* live
-    rounds.
+    (callers block once ``queue_cap`` calls are unresolved -- or, with
+    ``admission="shed"``, get an immediate ``FleetDegraded`` instead of
+    queueing: bounded-queue admission control), a fleet in-flight cap
+    (``max_inflight``, default from ``REPRO_FLEET_MAX_INFLIGHT``), and
+    per-plan / per-call deadlines that fail the affected futures
+    without tearing the session down;
+  * **elastic membership (wire v4)** -- ``fleet.add_worker()`` admits a
+    device into the *running* session: the transport pushes a
+    ``WorkerJoin``, the fleet catches the newcomer up (every attached
+    plan's shards, rebalanced off the most-loaded holders) and confirms
+    with a welcome frame.  ``fleet.remove_worker(w)`` drains first:
+    future rows re-home immediately, in-flight rows get ``timeout``
+    seconds to finish on the leaver, then the channel closes without a
+    death notice.  A worker failed by *suspicion* (not a real death)
+    that heartbeats again is re-admitted automatically -- a healed
+    partition restores capacity without operator action;
+  * **graceful degradation** -- worker loss re-homes shards (PR-4
+    semantics) and, once the live set can no longer host a plan's
+    ``n`` coded tasks at full strength, the plan is *re-encoded* for
+    the shrunken fleet under a fresh plan id: ``k`` is preserved while
+    resilience ``s = n' - k`` shrinks (resilience degrades before
+    availability).  Per-worker throughput EWMAs (measured from
+    submit->result latency) feed ``proposed-hetero`` capacities on
+    re-encode, so a slow-but-alive device gets proportionally fewer
+    virtual tiles.  Below ``min_workers``
+    (``REPRO_FLEET_MIN_WORKERS``) the fleet fails fast: every future
+    resolves with a structured ``FleetDegraded`` carrying the recovery
+    action -- never a hang;
+  * the full liveness protocol: heartbeat-driven *two-phase* suspicion
+    (a worker with outstanding rows is first marked suspected; a late
+    beat inside ``suspect_grace`` un-suspects it before any re-ship),
+    death notices, dropped connections -- all re-homing a dead
+    worker's shards to the least-loaded live host and resubmitting its
+    in-flight rows across all live rounds.
 
 ``ClusterPlan`` (``repro.cluster.dispatcher``) survives as a thin
 back-compat shim: a private single-plan fleet with ``max_inflight=1``
 and microbatching off, so its blocking ``matvec / matmat / aggregate``
 keep their exact semantics (including bitwise parity under explicit
-``done=`` masks) while the per-call ``asyncio.run`` pattern is gone
-everywhere.
+``done=`` masks).
 """
 
 from __future__ import annotations
@@ -60,9 +83,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .transport import make_transport
-from .wire import Heartbeat, Task, plan_packed, shard_plan
+from .wire import Heartbeat, Task, WorkerJoin, WorkerLeave, plan_packed, \
+    shard_plan
 
 ENV_MAX_INFLIGHT = "REPRO_FLEET_MAX_INFLIGHT"
+ENV_MIN_WORKERS = "REPRO_FLEET_MIN_WORKERS"
 _POLL_S = 0.02          # transport poll slice on the pump thread
 _TICK_S = 0.025         # watchdog period (suspicion + deadlines)
 
@@ -74,6 +99,43 @@ def default_max_inflight() -> int:
         return max(1, int(raw))
     except ValueError:
         return 8
+
+
+def default_min_workers() -> int:
+    """Availability floor: ``REPRO_FLEET_MIN_WORKERS``, else 1.  Below
+    it the fleet fails futures fast instead of limping on."""
+    raw = os.environ.get(ENV_MIN_WORKERS, "")
+    try:
+        return max(1, int(raw))
+    except ValueError:
+        return 1
+
+
+class FleetDegraded(RuntimeError):
+    """The fleet degraded past what this call can survive.
+
+    ``action`` says what happened and what recovery looks like:
+
+    * ``"re-encode"`` -- the plan was re-encoded for a shrunken fleet
+      while this call was queued and its inputs were tied to the old
+      geometry (explicit ``done=`` masks, per-task aggregate payloads).
+      Recovery: resubmit against the current plan.
+    * ``"shed"`` -- bounded-queue admission control rejected the call
+      (``admission="shed"`` and ``queue_cap`` unresolved calls).
+      Recovery: back off and resubmit, or raise ``queue_cap``.
+    * ``"fail"`` -- live workers dropped below the availability floor
+      (``min_workers``) or to zero.  Recovery: ``fleet.add_worker()``
+      (or lower ``REPRO_FLEET_MIN_WORKERS``).
+
+    Subclasses ``RuntimeError`` so pre-elastic callers that caught the
+    broad class keep working.
+    """
+
+    def __init__(self, message: str, *, action: str = "fail",
+                 plan_id: int | None = None):
+        super().__init__(message)
+        self.action = action
+        self.plan_id = plan_id
 
 
 @dataclass
@@ -218,7 +280,16 @@ class CodedFuture:
 
 @dataclass
 class _Call:
-    """One submitted operation, prepared on the caller's thread."""
+    """One submitted operation, prepared on the caller's thread.
+
+    ``built_for`` records which plan *version* (plan id) the geometry-
+    dependent fields (operand padding, decode closure, target mask)
+    were built against; ``rebuild`` re-derives them from the raw input
+    when the plan was re-encoded while the call sat queued.  Calls
+    whose inputs are tied to the old geometry (explicit ``done=``
+    masks, per-task aggregate payloads) carry ``rebuild=None`` and fail
+    with ``FleetDegraded(action="re-encode")`` at launch instead.
+    """
 
     op: str
     future: CodedFuture
@@ -230,6 +301,8 @@ class _Call:
     decode: object = None               # op-specific decode closure
     make_task: object = None            # (row, round_id) -> Task (mm/agg)
     dense_bytes: int = 0
+    built_for: int = 0                  # plan id the fields were built for
+    rebuild: object = None              # (call) -> None re-prep, or None
 
 
 class _Round:
@@ -247,6 +320,7 @@ class _Round:
         self.inflight: dict[int, int] = {}  # row -> worker it went to
         self.results: dict[int, dict] = {}
         self.order: list[int] = []          # completion order of task rows
+        self.sent_at: dict[int, float] = {}  # row -> submit stamp (EWMA)
         self.t_start = time.perf_counter()
         self.deadline_at = None if deadline is None \
             else self.t_start + deadline
@@ -258,9 +332,18 @@ class _Round:
 
 
 class _PlanState:
-    """Fleet-side state of one attached plan."""
+    """Fleet-side state of one attached plan.
 
-    def __init__(self, plan, plan_id: int, n_shards: int, packed, shards):
+    ``plan_id`` changes on re-encode (workers key task tables by
+    ``(plan, row)``, so a re-encoded plan MUST ship under a fresh id or
+    stale rows would shadow new ones); ``versions`` keeps every plan
+    object ever served under this state, keyed by the plan id it served
+    as -- the chaos harness replays a report's pattern against
+    ``versions[report.plan_id]`` for bitwise parity.
+    """
+
+    def __init__(self, plan, plan_id: int, n_shards: int, packed, shards,
+                 hosts: list[int] | None = None):
         self.plan = plan
         self.plan_id = plan_id
         self.n_shards = n_shards
@@ -272,14 +355,22 @@ class _PlanState:
         self.queue: deque[_Call] = deque()
         self.sem: threading.Semaphore | None = None     # set by the fleet
         self.detached = False
-        self._load_shards(shards)
+        self.versions: dict[int, object] = {plan_id: plan}
+        self.pending_reencode = False
+        self.max_shards = n_shards          # full-strength shard count
+        self.ratio = max(1, -(-plan.n // n_shards))  # coded rows per host
+        self._plan_cache: dict[tuple, object] = {}   # re-encode memo
+        self._load_shards(shards, hosts)
         self.home = dict(self.owner)        # original assignment
 
-    def _load_shards(self, shards) -> None:
+    def _load_shards(self, shards, hosts: list[int] | None = None) -> None:
         """(Re)derive per-task wire state from freshly cut shards:
-        encoded blobs, work units, and the input column supports (the
+        encoded blobs, work units, the input column supports (the
         only x-blocks / coded-B block-rows a task needs shipped --
-        omega/k-proportional traffic)."""
+        omega/k-proportional traffic), and the shard->rows map the
+        elastic rebalancer moves ownership by.  ``hosts`` maps the
+        cut's host indices to actual worker ids (an elastic fleet's
+        roster is not ``range(n)``)."""
         self.shard_blobs = [s.encode() for s in shards]
         self.owner = {row: s.worker for s in shards for row in s.task_rows}
         self.work = {row: s.work[j] for s in shards
@@ -287,6 +378,12 @@ class _PlanState:
         self.support = {row: np.asarray(s.supports[j], np.int64)
                         for s in shards if s.supports
                         for j, row in enumerate(s.task_rows)}
+        self.shard_rows = [list(s.task_rows) for s in shards]
+        self.shard_hosts = [s.worker for s in shards]
+        if hosts is not None:
+            remap = {h: hosts[h] for h in range(len(hosts))}
+            self.owner = {row: remap[o] for row, o in self.owner.items()}
+            self.shard_hosts = [remap[h] for h in self.shard_hosts]
 
     def restricted_payload(self, row: int, b_op: np.ndarray) -> dict:
         """Support-restricted task payload: only the nonzero b
@@ -314,28 +411,45 @@ class _PlanState:
 
 
 class CodedFleet:
-    """A persistent worker session serving many coded plans (see module
-    docstring).  Construct once, ``attach`` plans, submit rounds, and
-    ``close()`` when done (or use as a context manager) -- the
+    """A persistent, self-healing worker session serving many coded
+    plans (see module docstring).  Construct once, ``attach`` plans,
+    submit rounds, grow/shrink with ``add_worker``/``remove_worker``,
+    and ``close()`` when done (or use as a context manager) -- the
     transport owns real threads/processes/sockets.
     """
 
     def __init__(self, n_workers: int, *, transport: str | None = None,
                  faults=None, heartbeat_s: float = 0.25,
                  suspect_after: float | None = None,
+                 suspect_grace: float | None = None,
                  max_inflight: int | None = None,
                  microbatch: bool = True, microbatch_cols: int = 64,
-                 queue_cap: int | None = None, transport_opts=None):
+                 queue_cap: int | None = None,
+                 min_workers: int | None = None,
+                 admission: str = "block", transport_opts=None):
+        if admission not in ("block", "shed"):
+            raise ValueError(f"admission must be 'block' or 'shed', "
+                             f"got {admission!r}")
         self.n_workers = n_workers
         self.heartbeat_s = heartbeat_s
         self.suspect_after = suspect_after if suspect_after is not None \
             else max(8 * heartbeat_s, 2.0)
+        # two-phase suspicion: a missed-beat worker with outstanding
+        # rows is *suspected* first; only after the grace elapses with
+        # still no beat is it failed.  Small by default -- the grace
+        # exists to let an in-flight late beat cancel the re-ship, not
+        # to extend the timeout.
+        self.suspect_grace = suspect_grace if suspect_grace is not None \
+            else 2 * _TICK_S
         self.max_inflight = max_inflight if max_inflight is not None \
             else default_max_inflight()
         self.microbatch = microbatch
         self.microbatch_cols = microbatch_cols
         self.queue_cap = queue_cap if queue_cap is not None \
             else max(4 * self.max_inflight, 32)
+        self.min_workers = min_workers if min_workers is not None \
+            else default_min_workers()
+        self.admission = admission
         self.transport = make_transport(
             transport, n_workers, faults=faults, heartbeat_s=heartbeat_s,
             **(transport_opts or {}))
@@ -345,17 +459,26 @@ class CodedFleet:
         self._plans: dict[int, _PlanState] = {}
         self._rounds: dict[tuple[int, int], _Round] = {}
         self._held: dict[int, set[tuple[int, int]]] = \
-            {w: set() for w in range(n_workers)}
+            {w: set() for w in self.transport.workers()}
         self._dead: set[int] = set()
+        self._suspected: dict[int, float] = {}      # worker -> first miss
+        self._leaving: set[int] = set()
+        self._draining: dict[int, tuple] = {}       # worker -> (deadline, fut)
+        self._join_waiters: dict[int, concurrent.futures.Future] = {}
+        self._rate: dict[int, float] = {}           # worker -> work/s EWMA
         self._all_dead: RuntimeError | None = None
         self._orphan = {"deaths": 0, "suspected": 0}    # between-rounds
         self._next_plan_id = 1
         self._round_counter = 0
         self._rr: list[int] = []            # plan round-robin order
         self._pump_scheduled = False
+        self._reencoding = False
         self._closed = False
+        self._close_lock = threading.Lock()
+        self.event_log: deque[dict] = deque(maxlen=4096)
         self.transport.start()              # workers up, no shards yet
-        self._beats = {w: time.perf_counter() for w in range(n_workers)}
+        self._beats = {w: time.perf_counter()
+                       for w in self.transport.workers()}
         self._loop = asyncio.new_event_loop()
         self._loop_thread = threading.Thread(
             target=self._loop.run_forever, name="coded-fleet-loop",
@@ -384,10 +507,13 @@ class CodedFleet:
     def close(self) -> None:
         """Tear the session down: fail unresolved futures, stop the
         loop and pump, shut the transport (sockets closed, heartbeat
-        tickers joined, children reaped)."""
-        if self._closed:
-            return
-        self._closed = True
+        tickers joined, children reaped).  Idempotent and thread-safe
+        -- concurrent/double close is a no-op, and closing mid-round
+        fails the in-flight futures rather than hanging them."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
         if self._loop.is_running():
             done = concurrent.futures.Future()
 
@@ -400,6 +526,14 @@ class CodedFleet:
                     for call in rnd.calls:
                         call.future._finish(exc=exc)
                 self._rounds.clear()
+                for _, fut in self._draining.values():
+                    if fut is not None and not fut.done():
+                        fut.set_exception(exc)
+                self._draining.clear()
+                for fut in self._join_waiters.values():
+                    if not fut.done():
+                        fut.set_exception(exc)
+                self._join_waiters.clear()
                 done.set_result(None)
 
             try:
@@ -423,21 +557,86 @@ class CodedFleet:
                 "bytes_shards": self.bytes_shards,
                 "bytes_tasks_total": self.bytes_tasks_total}
 
+    def _log_event(self, kind: str, **fields) -> None:
+        """Membership / degradation journal (bounded; chaos + ops
+        introspection -- ``fleet.event_log``)."""
+        self.event_log.append({"t": time.time(), "kind": kind, **fields})
+
+    # -- elastic membership (public surface) -------------------------------
+
+    def live_workers(self) -> list[int]:
+        """Current live worker ids (transport-alive, not failed)."""
+        return self._live()
+
+    def worker_capacities(self, workers=None, levels: int = 4) -> list[int]:
+        """Integer device speeds from the throughput EWMAs (submit ->
+        result work/s), quantized to ``1..levels`` -- the ``capacities``
+        vector ``proposed-hetero`` virtualizes devices with.  Workers
+        without a measured rate yet get the median live rate."""
+        ws = list(workers) if workers is not None else self._live()
+        rates = [self._rate.get(w, 0.0) for w in ws]
+        known = sorted(r for r in rates if r > 0)
+        if not known:
+            return [1] * len(ws)
+        fallback = known[len(known) // 2]
+        rates = [r if r > 0 else fallback for r in rates]
+        top = max(rates)
+        return [max(1, round(levels * r / top)) for r in rates]
+
+    def add_worker(self, worker: int | None = None, *,
+                   timeout: float = 60.0) -> int:
+        """Admit one worker into the running session: the transport
+        spawns/accepts the channel, the fleet catches it up with every
+        attached plan's shards and confirms with a welcome frame.
+        Blocks until the catch-up finished; returns the worker id."""
+        if self._closed:
+            raise RuntimeError("fleet has been closed")
+        w = self.transport.add_worker(worker)
+        waiter = concurrent.futures.Future()
+
+        def register():
+            if w in self._beats and w not in self._dead:
+                if not waiter.done():
+                    waiter.set_result(w)    # join event already processed
+            else:
+                self._join_waiters[w] = waiter
+
+        self._loop.call_soon_threadsafe(register)
+        waiter.result(timeout)
+        return w
+
+    def remove_worker(self, worker: int, *, drain: bool = True,
+                      timeout: float = 10.0) -> None:
+        """Gracefully remove one worker: its shards and future rows
+        re-home immediately; with ``drain=True`` its in-flight rows get
+        ``timeout`` seconds to finish before being requeued; then the
+        channel closes without a death notice."""
+        if self._closed:
+            raise RuntimeError("fleet has been closed")
+        fut = concurrent.futures.Future()
+        self._loop.call_soon_threadsafe(
+            self._begin_leave, int(worker), drain, timeout, fut)
+        fut.result(timeout + 15.0)
+
     # -- attach / detach ---------------------------------------------------
 
     def attach(self, plan, *, deadline: float | None = None) -> "PlanHandle":
         """Ship ``plan``'s shards to the fleet's workers (once) and
         return a ``PlanHandle`` for submitting rounds against them.
-        Plans smaller than the fleet use its first ``plan.n`` workers;
-        attached plans co-exist on the same worker set."""
+        The cut targets the *live* roster (an elastic fleet may have
+        grown or shrunk); plans smaller than the fleet use its first
+        ``plan.n`` live workers, and attached plans co-exist on the
+        same worker set."""
         if self._closed:
             raise RuntimeError("fleet has been closed")
         pid = self._next_plan_id
         self._next_plan_id += 1
         packed = plan_packed(plan)
-        n_shards = min(self.n_workers, plan.n)
+        hosts = self._live() or self.transport.workers()
+        n_shards = max(1, min(len(hosts), plan.n))
+        hosts = hosts[:n_shards]
         shards = shard_plan(plan, n_shards, packed=packed, plan_id=pid)
-        ps = _PlanState(plan, pid, n_shards, packed, shards)
+        ps = _PlanState(plan, pid, n_shards, packed, shards, hosts)
         ps.default_deadline = deadline
         ps.sem = threading.Semaphore(self.queue_cap)
         fut = concurrent.futures.Future()
@@ -451,13 +650,14 @@ class CodedFleet:
             self._rr.append(ps.plan_id)
             sent = 0
             for idx, blob in enumerate(ps.shard_blobs):
-                holder = idx if idx not in self._dead else self._heir()
-                if holder != idx:       # re-home rows cut for a dead host
-                    for row, o in list(ps.owner.items()):
-                        if o == idx:
-                            ps.owner[row] = holder
+                want = ps.shard_hosts[idx]
+                alive = want not in self._dead and self.transport.alive(want)
+                holder = want if alive else self._heir()
+                if holder != want:      # re-home rows cut for a dead host
+                    for row in ps.shard_rows[idx]:
+                        ps.owner[row] = holder
                 sent += self.transport.ship_shard(holder, blob)
-                self._held[holder].add((ps.plan_id, idx))
+                self._held.setdefault(holder, set()).add((ps.plan_id, idx))
             ps.bytes_shards += sent
             self.bytes_shards += sent
             fut.set_result(sent)
@@ -493,7 +693,13 @@ class CodedFleet:
                                if self._closed else "plan handle detached")
         if self._all_dead is not None:
             raise self._all_dead
-        ps.sem.acquire()                    # bounded-queue backpressure
+        # bounded-queue backpressure: block (default) or shed
+        if not ps.sem.acquire(blocking=self.admission != "shed"):
+            raise FleetDegraded(
+                f"plan {ps.plan_id} admission queue is full "
+                f"({self.queue_cap} unresolved calls); back off and "
+                f"resubmit, or raise queue_cap",
+                action="shed", plan_id=ps.plan_id)
         try:
             self._loop.call_soon_threadsafe(self._enqueue, ps, call)
         except RuntimeError:                # loop torn down under us
@@ -554,10 +760,16 @@ class CodedFleet:
 
     def _pump_queues(self) -> None:
         """Launch queued calls while in-flight slots are free; queued
-        matvecs against the same plan coalesce into one wider round."""
+        matvecs against the same plan coalesce into one wider round.
+        Plans with a pending re-encode hold their queue until the swap
+        lands (applied here once their in-flight rounds drain)."""
+        if self._closed or self._all_dead is not None:
+            return
+        self._drain_reencodes()
         while len(self._rounds) < self.max_inflight and not self._closed:
             ps = next((self._plans[pid] for pid in self._rr
-                       if self._plans[pid].queue), None)
+                       if self._plans[pid].queue
+                       and not self._plans[pid].pending_reencode), None)
             if ps is None:
                 return
             # fairness: rotate the plan we just served to the back
@@ -578,6 +790,30 @@ class CodedFleet:
                     call.future._finish(exc=e)
 
     def _launch(self, ps: _PlanState, calls: list[_Call]) -> None:
+        # launch-time rebuild: the plan may have been re-encoded (new
+        # plan id, new geometry) while these calls sat queued
+        fresh: list[_Call] = []
+        for c in calls:
+            if c.built_for == ps.plan_id:
+                fresh.append(c)
+                continue
+            if c.rebuild is None:
+                c.future._finish(exc=FleetDegraded(
+                    f"plan was re-encoded (now id {ps.plan_id}) while this "
+                    f"call was queued and its inputs are tied to the old "
+                    f"geometry; resubmit against the current plan",
+                    action="re-encode", plan_id=ps.plan_id))
+                continue
+            try:
+                c.rebuild(c)
+                fresh.append(c)
+            except BaseException as e:  # noqa: BLE001 - fail just this call
+                c.future._finish(exc=FleetDegraded(
+                    f"rebuilding call after re-encode failed: {e!r}",
+                    action="re-encode", plan_id=ps.plan_id))
+        if not fresh:
+            return
+        calls = fresh
         self._round_counter += 1
         round_id = self._round_counter
         op = calls[0].op
@@ -624,6 +860,7 @@ class CodedFleet:
         rnd.ps.bytes_tasks_total += sent
         self.bytes_tasks_total += sent
         rnd.inflight[row] = owner
+        rnd.sent_at[row] = time.perf_counter()
 
     # -- the uniform event stream -----------------------------------------
 
@@ -645,8 +882,25 @@ class CodedFleet:
         if self._closed:
             return
         if isinstance(ev, Heartbeat):
-            if ev.worker not in self._dead:
-                self._beats[ev.worker] = time.perf_counter()
+            w = ev.worker
+            if w in self._dead:
+                if self.transport.alive(w):
+                    # a beat from a worker *we* failed but the transport
+                    # never saw die: suspicion misfired (healed
+                    # partition, late beat after re-ship) -- re-admit
+                    self._log_event("readmit", worker=w)
+                    self._admit_worker(w)
+                return
+            self._beats[w] = time.perf_counter()
+            # a late beat inside the grace window un-suspects the
+            # worker before any re-ship happens (two-phase suspicion)
+            self._suspected.pop(w, None)
+            return
+        if isinstance(ev, WorkerJoin):
+            self._admit_worker(ev.worker)
+            return
+        if isinstance(ev, WorkerLeave):
+            self._begin_leave(ev.worker, True, 10.0, None)
             return
         if ev.kind == "death":
             self._fail_worker(ev.worker, "death")
@@ -669,9 +923,21 @@ class CodedFleet:
             rep.completed_per_worker.get(ev.worker, 0) + 1
         rep.worker_work[ev.worker] = \
             rep.worker_work.get(ev.worker, 0.0) + ev.work
+        sent_at = rnd.sent_at.get(ev.task_row)
+        if sent_at is not None:
+            # throughput EWMA: work units per second of submit->result
+            # latency.  Feeds hetero capacities on re-encode, so a
+            # slow-but-alive device gets proportionally fewer tiles.
+            rate = max(float(ev.work), 1e-3) / \
+                max(time.perf_counter() - sent_at, 1e-6)
+            prev = self._rate.get(ev.worker)
+            self._rate[ev.worker] = rate if prev is None \
+                else 0.7 * prev + 0.3 * rate
         dec = self._decodable(rnd)
         if dec is not None:
             self._finish_round(rnd, *dec)
+        if self._draining:
+            self._check_draining()
 
     def _decodable(self, rnd: _Round):
         ps, k = rnd.ps, rnd.ps.plan.k
@@ -705,14 +971,25 @@ class CodedFleet:
             now = time.perf_counter()
             for w, seen in list(self._beats.items()):
                 if now - seen <= self.suspect_after:
+                    self._suspected.pop(w, None)
                     continue
-                if any(rnd.missing_on(w) for rnd in self._rounds.values()):
+                if not any(rnd.missing_on(w)
+                           for rnd in self._rounds.values()):
+                    # idle silent worker: nothing outstanding, nothing
+                    # to re-home -- fresh grace, NOT failed
+                    self._beats[w] = now
+                    self._suspected.pop(w, None)
+                    continue
+                first = self._suspected.setdefault(w, now)
+                if now - first >= self.suspect_grace:
+                    self._suspected.pop(w, None)
                     self._fail_worker(w, "suspected")
-                else:
-                    self._beats[w] = now  # idle worker: fresh grace period
+            if self._draining:
+                self._check_draining()
             for rnd in list(self._rounds.values()):
                 if rnd.deadline_at is not None and now > rnd.deadline_at:
                     self._expire_round(rnd)
+            self._drain_reencodes()
         finally:
             # the watchdog must survive any single tick's failure --
             # liveness and deadlines die silently otherwise
@@ -747,11 +1024,12 @@ class CodedFleet:
     # -- fail-stop / suspicion / requeue ----------------------------------
 
     def _live(self) -> list[int]:
-        return [w for w in range(self.n_workers)
+        return [w for w in self.transport.workers()
                 if w not in self._dead and self.transport.alive(w)]
 
-    def _heir(self) -> int:
-        live = self._live()
+    def _heir(self, exclude=frozenset()) -> int:
+        live = [w for w in self._live()
+                if w not in exclude and w not in self._leaving]
         if not live:
             raise RuntimeError("all cluster workers are dead")
         owned = {w: 0 for w in live}
@@ -766,6 +1044,10 @@ class CodedFleet:
             return                          # notices are idempotent
         self._dead.add(worker)
         self._beats.pop(worker, None)
+        self._suspected.pop(worker, None)
+        self._leaving.discard(worker)
+        drain = self._draining.pop(worker, None)
+        self._log_event(cause, worker=worker)
         live_rounds = sorted(self._rounds.values(),
                              key=lambda r: r.round_id)
         # attribute the failure to the oldest live round (the shim's
@@ -782,27 +1064,34 @@ class CodedFleet:
                          else "deaths"] += 1
         try:
             heir = self._heir()
-        except RuntimeError as e:
+        except RuntimeError:
             # no survivors: fail everything in flight AND queued, and
             # fail-fast future submissions -- a between-rounds wipeout
             # must not turn into silent hangs
+            e = FleetDegraded(
+                "all cluster workers are dead; add workers "
+                "(fleet.add_worker) to recover", action="fail")
             self._all_dead = e
+            self._log_event("degraded-wipeout")
             for rnd in live_rounds:
                 self._abort_round(rnd, e)
             for ps in self._plans.values():
                 while ps.queue:
                     ps.queue.popleft().future._finish(exc=e)
+            if drain is not None and drain[1] is not None \
+                    and not drain[1].done():
+                drain[1].set_exception(e)
             return
         # re-ship every shard the dead host held -- its own AND any it
         # previously inherited (a second death must not strand those)
         for pid, idx in self._held.pop(worker, set()):
             ps = self._plans.get(pid)
-            if ps is None:
+            if ps is None or pid != ps.plan_id:
                 continue
             sent = self.transport.ship_shard(heir, ps.shard_blobs[idx])
             ps.bytes_shards += sent
             self.bytes_shards += sent
-            self._held[heir].add((pid, idx))
+            self._held.setdefault(heir, set()).add((pid, idx))
         for ps in self._plans.values():
             for row, o in list(ps.owner.items()):
                 if o == worker:
@@ -811,6 +1100,318 @@ class CodedFleet:
             for row in rnd.missing_on(worker):
                 self._submit_row(rnd, row)
                 rnd.report.requeues += 1
+        if drain is not None and drain[1] is not None \
+                and not drain[1].done():
+            drain[1].set_result(None)       # leaver died mid-drain: done
+        self._maybe_degrade()
+
+    # -- elastic membership (loop side) ------------------------------------
+
+    def _admit_worker(self, worker: int) -> None:
+        """A ``WorkerJoin`` landed (or a suspicion-failed worker beat
+        again): catch the worker up with every attached plan's shards,
+        rebalance row ownership toward it, confirm the join."""
+        if self._closed:
+            return
+        self._dead.discard(worker)
+        self._suspected.pop(worker, None)
+        self._leaving.discard(worker)
+        self._draining.pop(worker, None)
+        self._held.setdefault(worker, set())
+        self._beats[worker] = time.perf_counter()
+        if self._all_dead is not None:
+            # a live worker again: lift the fail-fast (already-failed
+            # futures stay failed; new submissions are accepted)
+            self._all_dead = None
+            self._log_event("recovered", worker=worker)
+        for ps in self._plans.values():
+            self._rebalance_to(ps, worker)
+        try:
+            self.transport.confirm_join(worker, plans=len(self._plans))
+        except Exception:                   # informational only
+            pass
+        self._log_event("join", worker=worker)
+        waiter = self._join_waiters.pop(worker, None)
+        if waiter is not None and not waiter.done():
+            waiter.set_result(worker)
+        self._maybe_degrade()               # restore resilience if possible
+        self._pump_queues()
+
+    def _rebalance_to(self, ps: _PlanState, joiner: int) -> bool:
+        """Move shards of one plan toward ``joiner``: orphaned shards
+        (held only by dead workers) first, then one at a time off the
+        most-loaded live holder while the joiner holds none or the
+        imbalance is >= 2.  Rows move with their shard, so the joiner
+        ends up serving every attached plan."""
+        moved = False
+        live = set(self._live())
+
+        def count(w: int) -> int:
+            return sum(1 for pid, _ in self._held.get(w, ())
+                       if pid == ps.plan_id)
+
+        # orphans: shards stranded on dead holders (post-wipeout joins)
+        for w, held in list(self._held.items()):
+            if w in live or w == joiner:
+                continue
+            for pid, idx in list(held):
+                if pid != ps.plan_id:
+                    continue
+                held.discard((pid, idx))
+                moved |= self._move_shard(ps, idx, joiner)
+        while True:
+            holders = [w for w in live
+                       if w != joiner and w not in self._leaving
+                       and count(w) > 0]
+            if not holders:
+                break
+            big = max(holders, key=count)
+            if count(joiner) == 0 or count(big) - count(joiner) >= 2:
+                idx = next(i for pid, i in self._held[big]
+                           if pid == ps.plan_id)
+                self._held[big].discard((ps.plan_id, idx))
+                moved |= self._move_shard(ps, idx, joiner)
+            else:
+                break
+        return moved
+
+    def _move_shard(self, ps: _PlanState, idx: int, to: int) -> bool:
+        """Ship shard ``idx`` to ``to`` and re-home its rows there.
+        In-flight rows stay where they were submitted (the old holder
+        keeps its loaded task table until the plan is dropped), so no
+        round is disturbed."""
+        sent = self.transport.ship_shard(to, ps.shard_blobs[idx])
+        ps.bytes_shards += sent
+        self.bytes_shards += sent
+        self._held.setdefault(to, set()).add((ps.plan_id, idx))
+        for row in ps.shard_rows[idx]:
+            ps.owner[row] = to
+        return True
+
+    def _begin_leave(self, worker: int, drain: bool, timeout: float,
+                     fut) -> None:
+        """Loop-side start of a graceful leave: re-home shards and
+        future rows now, let in-flight rows drain, then tear the
+        channel down without a death notice."""
+        if worker in self._dead or not self.transport.alive(worker):
+            try:                            # already gone: drop from roster
+                self.transport.remove_worker(worker)
+            except Exception:
+                pass
+            if fut is not None and not fut.done():
+                fut.set_result(None)
+            return
+        if worker in self._leaving:
+            if fut is not None and not fut.done():
+                fut.set_result(None)        # concurrent leave: first wins
+            return
+        self._leaving.add(worker)
+        self._log_event("leave-begin", worker=worker, drain=drain)
+        try:
+            for pid, idx in list(self._held.get(worker, ())):
+                ps = self._plans.get(pid)
+                if ps is None or pid != ps.plan_id:
+                    self._held[worker].discard((pid, idx))
+                    continue
+                heir = self._heir(exclude={worker})
+                self._held[worker].discard((pid, idx))
+                self._move_shard(ps, idx, heir)
+        except RuntimeError:
+            # the leaver is the last live worker: refuse, never strand
+            self._leaving.discard(worker)
+            if fut is not None and not fut.done():
+                fut.set_exception(FleetDegraded(
+                    f"cannot remove worker {worker}: no live worker to "
+                    f"inherit its shards; add a worker first",
+                    action="fail"))
+            return
+        deadline_at = time.perf_counter() + (timeout if drain else 0.0)
+        self._draining[worker] = (deadline_at, fut)
+        self._check_draining()
+
+    def _check_draining(self) -> None:
+        """Finish leaves whose in-flight rows drained (or timed out --
+        then requeue the leftovers on the new owners)."""
+        now = time.perf_counter()
+        for w, (deadline_at, fut) in list(self._draining.items()):
+            leftovers = [(rnd, rows) for rnd in self._rounds.values()
+                         if (rows := rnd.missing_on(w))]
+            if leftovers and now < deadline_at:
+                continue
+            for rnd, rows in leftovers:
+                for row in rows:
+                    self._submit_row(rnd, row)  # owner already re-homed
+                    rnd.report.requeues += 1
+            self._finish_leave(w, fut)
+
+    def _finish_leave(self, worker: int, fut) -> None:
+        self._draining.pop(worker, None)
+        self._dead.add(worker)
+        self._beats.pop(worker, None)
+        self._suspected.pop(worker, None)
+        self._held.pop(worker, None)
+        try:
+            self.transport.remove_worker(worker)
+        except Exception:                   # transport without live leave
+            pass
+        self._leaving.discard(worker)
+        self._log_event("leave", worker=worker)
+        if fut is not None and not fut.done():
+            fut.set_result(None)
+        self._maybe_degrade()
+        self._pump_queues()
+
+    # -- graceful degradation ----------------------------------------------
+
+    def _maybe_degrade(self) -> None:
+        """Roster changed: enforce the availability floor, then retarget
+        every plan's resilience to the live set (re-encode deferred
+        until the plan's in-flight rounds drain)."""
+        live = self._live()
+        m = len(live)
+        if m == 0:
+            return                          # wipeout path already handled
+        if m < self.min_workers:
+            exc = FleetDegraded(
+                f"{m} live workers, below the availability floor "
+                f"min_workers={self.min_workers}; add workers "
+                f"(fleet.add_worker) or lower {ENV_MIN_WORKERS}",
+                action="fail")
+            self._all_dead = exc            # fail-fast future submissions
+            self._log_event("degraded-floor", live=m,
+                            floor=self.min_workers)
+            for rnd in sorted(self._rounds.values(),
+                              key=lambda r: r.round_id):
+                self._abort_round(rnd, exc)
+            for ps in self._plans.values():
+                while ps.queue:
+                    ps.queue.popleft().future._finish(exc=exc)
+            return
+        for ps in self._plans.values():
+            plan = ps.plan
+            if getattr(plan, "executor", None) is None \
+                    or getattr(plan, "_A", None) is None:
+                continue                    # aggregation-only: nothing to cut
+            if ps.n_shards != min(m, ps.max_shards):
+                ps.pending_reencode = True
+        self._drain_reencodes()
+
+    def _drain_reencodes(self) -> None:
+        if self._reencoding:
+            return
+        self._reencoding = True
+        try:
+            for ps in list(self._plans.values()):
+                if ps.pending_reencode and not any(
+                        r.ps is ps for r in self._rounds.values()):
+                    try:
+                        self._reencode(ps)
+                    except Exception as e:  # keep-old is always safe
+                        ps.pending_reencode = False
+                        self._log_event("reencode-failed",
+                                        plan=ps.plan_id, error=repr(e))
+        finally:
+            self._reencoding = False
+
+    def _reencode_scheme(self, ps: _PlanState, m: int, live: list[int]):
+        """Pick the replacement scheme for ``m`` live hosts.  Returns
+        ``(plan, cut_capacities)`` -- the compiled plan for the new
+        ``(n', k')`` (resilience shrinks before availability: ``k`` is
+        preserved whenever ``n' >= k``) and the capacities the shard
+        cut should follow (None for a uniform cut)."""
+        from ..api.plan import compile_plan  # noqa: PLC0415 - avoid cycle
+        from ..api.schemes import make_scheme  # noqa: PLC0415
+
+        first_pid = min(ps.versions)
+        plan0 = ps.versions[first_pid]
+        if m == ps.max_shards:
+            # full strength restored: reuse the original compile
+            return plan0, None
+        sch0 = plan0.scheme
+        n_target = m * ps.ratio
+        caps = self.worker_capacities(live)
+        virt = None
+        if (plan0.kind == "mv" and len(set(caps)) > 1
+                and sch0.name in ("proposed", "proposed-hetero")):
+            # measurably uneven devices: capacity-virtualize the cut
+            # (Sec. IV-B) so slow-but-alive hosts get fewer tiles
+            total = sum(caps)
+            virt = [max(1, round(c * n_target / total)) for c in caps]
+            n_new = sum(virt)
+            k_new = min(plan0.k, n_new)
+            try:
+                sch = make_scheme("proposed-hetero", capacities=virt,
+                                  k_A=k_new)
+            except (ValueError, KeyError):
+                virt = None
+        if virt is None:
+            n_new, k_new = n_target, min(plan0.k, n_target)
+            if plan0.kind == "mv":
+                sch = make_scheme(sch0.name, n=n_new, k_A=k_new)
+            else:
+                # mm resilience is n - k_A*k_B; k_A/k_B are structural
+                sch = make_scheme(sch0.name, n=n_new, k_A=sch0.k_A,
+                                  k_B=sch0.k_B)
+        key = (sch.name, n_new, k_new, tuple(virt) if virt else None)
+        plan = ps._plan_cache.get(key)
+        if plan is None:
+            plan = compile_plan(plan0._A, scheme=sch, seed=plan0.seed,
+                                backend=plan0.backend,
+                                cache_size=plan0.cache_size)
+            ps._plan_cache[key] = plan
+        return plan, virt
+
+    def _reencode(self, ps: _PlanState) -> None:
+        """Swap one plan to an encoding sized for the live roster,
+        under a FRESH plan id (worker task tables key ``(plan, row)``;
+        reusing the id would let stale rows shadow new ones).  Runs
+        only with no in-flight rounds on the plan, so no round ever
+        sees two encodings."""
+        ps.pending_reencode = False
+        live = self._live()
+        m = max(1, min(len(live), ps.max_shards))
+        hosts = live[:m]
+        old_pid = ps.plan_id
+        try:
+            new_plan, cut_caps = self._reencode_scheme(ps, m, hosts)
+        except (ValueError, KeyError) as e:
+            # scheme family can't be cut at this size (lcm constraints,
+            # n' < k_A*k_B, ...): KEEP the old encoding -- re-homed
+            # owners already make it correct, just without restored
+            # resilience accounting
+            self._log_event("reencode-keep", plan=old_pid, error=repr(e))
+            return
+        new_pid = self._next_plan_id
+        self._next_plan_id += 1
+        packed = plan_packed(new_plan)
+        shards = shard_plan(new_plan, m, packed=packed, plan_id=new_pid,
+                            capacities=cut_caps)
+        for held in self._held.values():
+            held.difference_update(
+                {(p, i) for p, i in held if p == old_pid})
+        self._plans.pop(old_pid, None)
+        self._rr[self._rr.index(old_pid)] = new_pid
+        ps.plan = new_plan
+        ps.plan_id = new_pid
+        ps.packed = packed
+        ps.n_shards = m
+        ps._load_shards(shards, hosts)
+        ps.home = dict(ps.owner)
+        ps.versions[new_pid] = new_plan
+        self._plans[new_pid] = ps
+        sent = 0
+        for idx in range(len(ps.shard_blobs)):
+            holder = ps.shard_hosts[idx]
+            sent += self.transport.ship_shard(holder, ps.shard_blobs[idx])
+            self._held.setdefault(holder, set()).add((new_pid, idx))
+        ps.bytes_shards += sent
+        self.bytes_shards += sent
+        for w in self.transport.workers():
+            if self.transport.alive(w):     # free the stale task tables
+                self.transport.drop_plan(w, old_pid)
+        self._log_event("reencode", plan=old_pid, new_plan=new_pid,
+                        n=new_plan.n, k=new_plan.k, s=new_plan.s,
+                        hosts=hosts, capacities=cut_caps)
 
     # -- decode + future resolution ---------------------------------------
 
@@ -925,6 +1526,12 @@ class PlanHandle:
     def plan_id(self) -> int:
         return self._ps.plan_id
 
+    def plan_version(self, plan_id: int):
+        """The plan object that served under ``plan_id`` (re-encodes
+        allocate fresh ids; chaos parity replays a report's pattern
+        against the exact version that produced it)."""
+        return self._ps.versions.get(plan_id)
+
     @property
     def n_workers(self) -> int:
         return self._ps.n_shards
@@ -1009,34 +1616,44 @@ class PlanHandle:
         be microbatched with other queued matvecs); an explicit mask
         replays that exact pattern (parity mode, never coalesced)."""
         ps = self._ps
-        plan = ps.plan
-        if plan.kind != "mv":
-            raise ValueError(f"matvec needs an mv plan, got {plan.kind}")
+        if ps.plan.kind != "mv":
+            raise ValueError(f"matvec needs an mv plan, got {ps.plan.kind}")
         if ps.packed is None:
             raise ValueError("aggregation-only plan: no shards to matvec")
         x = np.asarray(x, np.float32)
         squeeze = x.ndim == 1
         xb = x[None, :] if squeeze else x
         b = xb.shape[0]
-        packed = ps.packed
-        b_op = np.zeros((packed.t_pad, b), np.float32)
-        b_op[: packed.t] = xb.T[: packed.t]
-        target, wait_all = self._target(done)
-
-        def decode(y_slice, rows, hinv):
-            import jax.numpy as jnp  # noqa: PLC0415
-
-            k = plan.k
-            u = hinv @ y_slice.reshape(k, -1)
-            u = u.reshape(k, packed.c_pad, b)[:, : packed.c]
-            out = np.moveaxis(u, 2, 0).reshape(b, -1)[:, : plan.r]
-            out = jnp.asarray(out)
-            return out[0] if squeeze else out
-
         call = _Call(op="matvec", future=CodedFuture(self.fleet, ps),
-                     target=target, wait_all=wait_all,
-                     deadline=self._deadline(deadline), width=b,
-                     b_op=b_op, decode=decode)
+                     target=None, wait_all=False,
+                     deadline=self._deadline(deadline), width=b)
+
+        def build(c: _Call) -> None:
+            # everything geometry-dependent, derived from the plan
+            # version current at build/launch time
+            plan, packed = ps.plan, ps.packed
+            b_op = np.zeros((packed.t_pad, b), np.float32)
+            b_op[: packed.t] = xb.T[: packed.t]
+            c.b_op = b_op
+            c.target, c.wait_all = self._target(done)
+            k, c_pad, c_log, r = plan.k, packed.c_pad, packed.c, plan.r
+
+            def decode(y_slice, rows, hinv):
+                import jax.numpy as jnp  # noqa: PLC0415
+
+                u = hinv @ y_slice.reshape(k, -1)
+                u = u.reshape(k, c_pad, b)[:, : c_log]
+                out = np.moveaxis(u, 2, 0).reshape(b, -1)[:, : r]
+                out = jnp.asarray(out)
+                return out[0] if squeeze else out
+
+            c.decode = decode
+            c.built_for = ps.plan_id
+
+        build(call)
+        # explicit masks are in this plan version's task coordinates:
+        # they cannot survive a re-encode, so they don't get a rebuild
+        call.rebuild = None if done is not None else build
         return self.fleet._submit_call(ps, call)
 
     def submit_matmat(self, B, done=None, *,
@@ -1044,60 +1661,74 @@ class PlanHandle:
         """A^T B as a future; each task ships only the nonzero coded-B
         block-rows in the worker's tile support (the omega_B/k_B
         bandwidth claim, measured per call)."""
-        import jax.numpy as jnp  # noqa: PLC0415
-
-        from ..core.coded_matmul import split_block_columns  # noqa: PLC0415
-        from ..runtime import encode_blocks  # noqa: PLC0415
-
         ps = self._ps
-        plan = ps.plan
-        if plan.kind != "mm":
-            raise ValueError(f"matmat needs an mm plan, got {plan.kind}")
-        sch = plan.scheme
+        if ps.plan.kind != "mm":
+            raise ValueError(f"matmat needs an mm plan, got {ps.plan.kind}")
         w = B.shape[1]
-        blocks_b = split_block_columns(jnp.asarray(B), sch.k_B)
-        if plan._sup_b is not None:
-            coded_b = encode_blocks(blocks_b, plan._sup_b, plan._coef_b,
-                                    "packed")
-        else:
-            coded_b = jnp.einsum(
-                "nk,ktc->ntc", jnp.asarray(plan._rb, jnp.float32), blocks_b)
-        b_np = np.asarray(coded_b, np.float32)
-        cb = b_np.shape[2]
-        packed = ps.packed
-        target, wait_all = self._target(done)
-
-        def make_task(row: int, round_id: int) -> Task:
-            b_op = np.zeros((packed.t_pad, cb), np.float32)
-            b_op[: packed.t] = b_np[row, : packed.t]
-            return Task(round=round_id, op="matmat", task_row=row,
-                        plan=ps.plan_id,
-                        payload=ps.restricted_payload(row, b_op),
-                        meta={"cb": cb})
-
-        def decode(results, rows, hinv):
-            k = plan.k
-            y = np.stack([np.asarray(results[int(r)]["y"]) for r in rows])
-            y = y[:, : packed.c]                       # (k, ca, cb)
-            u = hinv @ y.reshape(k, -1)
-            u = u.reshape((k,) + y.shape[1:])
-            ka, kb = sch.k_A, sch.k_B
-            ca = y.shape[1]
-            out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3)
-            out = out.reshape(ka * ca, kb * cb)[: plan.r, : w]
-            return jnp.asarray(out)
-
         call = _Call(op="matmat", future=CodedFuture(self.fleet, ps),
-                     target=target, wait_all=wait_all,
-                     deadline=self._deadline(deadline),
-                     make_task=make_task, decode=decode,
-                     dense_bytes=int(packed.t_pad * cb * 4))
+                     target=None, wait_all=False,
+                     deadline=self._deadline(deadline))
+
+        def build(c: _Call) -> None:
+            import jax.numpy as jnp  # noqa: PLC0415
+
+            from ..core.coded_matmul import split_block_columns  # noqa: PLC0415
+            from ..runtime import encode_blocks  # noqa: PLC0415
+
+            plan, packed = ps.plan, ps.packed
+            sch = plan.scheme
+            blocks_b = split_block_columns(jnp.asarray(B), sch.k_B)
+            if plan._sup_b is not None:
+                coded_b = encode_blocks(blocks_b, plan._sup_b,
+                                        plan._coef_b, "packed")
+            else:
+                coded_b = jnp.einsum(
+                    "nk,ktc->ntc", jnp.asarray(plan._rb, jnp.float32),
+                    blocks_b)
+            b_np = np.asarray(coded_b, np.float32)
+            cb = b_np.shape[2]
+            c.target, c.wait_all = self._target(done)
+            pid = ps.plan_id
+
+            def make_task(row: int, round_id: int) -> Task:
+                b_op = np.zeros((packed.t_pad, cb), np.float32)
+                b_op[: packed.t] = b_np[row, : packed.t]
+                return Task(round=round_id, op="matmat", task_row=row,
+                            plan=pid,
+                            payload=ps.restricted_payload(row, b_op),
+                            meta={"cb": cb})
+
+            def decode(results, rows, hinv):
+                import jax.numpy as jnp  # noqa: PLC0415
+
+                k = plan.k
+                y = np.stack([np.asarray(results[int(r)]["y"])
+                              for r in rows])
+                y = y[:, : packed.c]                   # (k, ca, cb)
+                u = hinv @ y.reshape(k, -1)
+                u = u.reshape((k,) + y.shape[1:])
+                ka, kb = sch.k_A, sch.k_B
+                ca = y.shape[1]
+                out = u.reshape(ka, kb, ca, cb).transpose(0, 2, 1, 3)
+                out = out.reshape(ka * ca, kb * cb)[: plan.r, : w]
+                return jnp.asarray(out)
+
+            c.make_task = make_task
+            c.decode = decode
+            c.dense_bytes = int(packed.t_pad * cb * 4)
+            c.built_for = ps.plan_id
+
+        build(call)
+        call.rebuild = None if done is not None else build
         return self.fleet._submit_call(ps, call)
 
     def submit_aggregate(self, payloads, done=None, *,
                          deadline: float | None = None) -> CodedFuture:
         """Straggler-resilient sum of k shard-gradients as a future
-        (gradient-coding decode: a^T G[rows] = 1^T)."""
+        (gradient-coding decode: a^T G[rows] = 1^T).  Payloads are
+        per-task-row, so the call is tied to its plan version: if the
+        plan is re-encoded while this sits queued it fails with
+        ``FleetDegraded(action="re-encode")`` instead of mis-summing."""
         import jax  # noqa: PLC0415
         import jax.numpy as jnp  # noqa: PLC0415
 
@@ -1137,7 +1768,8 @@ class PlanHandle:
         call = _Call(op="aggregate", future=CodedFuture(self.fleet, ps),
                      target=target, wait_all=wait_all,
                      deadline=self._deadline(deadline),
-                     make_task=make_task, decode=decode)
+                     make_task=make_task, decode=decode,
+                     built_for=ps.plan_id)
         return self.fleet._submit_call(ps, call)
 
     # -- blocking conveniences (CodedPlan signatures) ----------------------

@@ -33,6 +33,13 @@ class Transport:
     ``cancel`` / ``close`` and keep ``self._dead`` honest (a worker is
     transport-dead once a death notice or channel loss was observed;
     *suspicion* from missed heartbeats is the dispatcher's job).
+
+    Membership is dynamic since wire v4: ``n_workers`` is the *initial*
+    roster (ids ``0..n-1``), ``add_worker`` / ``remove_worker`` grow
+    and shrink it at runtime, and every membership gain surfaces as a
+    ``WorkerJoin`` on the uniform event stream so the dispatcher can
+    catch the newcomer up.  ``close`` is idempotent (guarded by
+    ``self._closing``) and safe mid-round.
     """
 
     name = "base"
@@ -48,7 +55,8 @@ class Transport:
         # no information -- the dispatcher re-stamps liveness at round
         # start), so idle time never grows memory
         self._beat_cap = max(64, 4 * n_workers)
-        self._dead = [False] * n_workers
+        self._known: set[int] = set(range(n_workers))
+        self._dead: set[int] = set()
         self._closing = False
 
     def push_event(self, event) -> None:
@@ -81,6 +89,45 @@ class Transport:
     def cancel(self, worker: int, round_id: int) -> None:
         raise NotImplementedError
 
+    def drop_plan(self, worker: int, plan_id: int) -> None:
+        """Tell ``worker`` to free one plan's task tables (wire v4,
+        sent on plan re-encode).  Best-effort: a transport without a
+        control path may ignore it."""
+
+    def confirm_join(self, worker: int, plans: int = 0) -> None:
+        """Welcome frame after shard catch-up (wire v4).  Socket
+        transports forward it to the device; in-process ones treat it
+        as informational."""
+
+    # -- dynamic membership (wire v4) ---------------------------------------
+
+    def workers(self) -> list[int]:
+        """Current roster (alive or not), sorted."""
+        return sorted(self._known)
+
+    def next_worker_id(self) -> int:
+        return max(self._known, default=-1) + 1
+
+    def add_worker(self, worker: int | None = None) -> int:
+        """Spawn/admit one worker into the running transport and push a
+        ``WorkerJoin`` event; returns its id.  ``worker=None`` picks
+        the next free id; naming a dead id revives it (reconnect)."""
+        raise NotImplementedError(f"{self.name} transport cannot add "
+                                  f"workers at runtime")
+
+    def remove_worker(self, worker: int) -> None:
+        """Tear one worker's channel down *without* a death notice (the
+        graceful half of leave; the dispatcher drains first)."""
+        raise NotImplementedError(f"{self.name} transport cannot remove "
+                                  f"workers at runtime")
+
+    def garble(self, worker: int) -> int:
+        """Deliver a deliberately corrupt frame to ``worker`` (chaos:
+        the worker must refuse to keep serving and notify death rather
+        than compute from a bad state).  Returns bytes sent."""
+        raise NotImplementedError(f"{self.name} transport cannot garble "
+                                  f"frames")
+
     # -- the uniform event stream -----------------------------------------
 
     def poll(self, timeout: float):
@@ -103,7 +150,12 @@ class Transport:
         """Transport-level liveness (no death notice / channel loss
         observed).  A silently hung worker is still transport-alive --
         only the dispatcher's heartbeat timeout catches it."""
-        return not self._dead[worker]
+        return worker in self._known and worker not in self._dead
 
     def mark_dead(self, worker: int) -> None:
-        self._dead[worker] = True
+        self._dead.add(worker)
+
+    def revive(self, worker: int) -> None:
+        """Clear the dead mark (a rejoin/reconnect admitted a fresh
+        channel for this id)."""
+        self._dead.discard(worker)

@@ -8,19 +8,27 @@ length-prefixed frames of the versioned wire records:
     record carrying the wire version (in the record header, so a
     mismatched build is rejected at decode) and the worker id; a
     connection whose first frame fails to decode is closed without
-    registering.
+    registering.  Since wire v4 a hello for an id the coordinator has
+    never seen (or one whose previous connection died) is a **live
+    join**: the connection is admitted, a ``WorkerJoin`` surfaces on
+    the uniform event stream, and the dispatcher catches the newcomer
+    up (every attached plan's shards, digest-verified) before
+    confirming with a welcome frame.
   * **shard shipping** -- shards travel wrapped with a sha256 digest.
     The *worker-side* check is the enforcement: a digest mismatch turns
     into a death notice, so a corrupted shard can never silently serve
     wrong products.  The worker also acks the digest back
     (``TcpTransport.shard_acks``, confirmation telemetry asserted by
-    the parity tests).
+    the parity tests).  Shipping retries under the shared
+    ``RetryPolicy`` (exponential backoff + deterministic jitter,
+    per-attempt timeouts) before giving up on a flaky channel.
   * **liveness** -- workers heartbeat on the same socket results travel
-    on.  A closed connection surfaces immediately as a death notice; a
-    *silent* worker (hung, or a stale NAT entry) is caught only by the
-    dispatcher's heartbeat timeout -- which is exactly why ``done=``
-    masks in cluster mode are derived from measured liveness rather
-    than injected.
+    on.  A closed connection surfaces immediately as a death notice
+    (unless the worker was *leaving* gracefully); a silent worker
+    (hung, or a stale NAT entry) is caught only by the dispatcher's
+    heartbeat timeout -- which is exactly why ``done=`` masks in
+    cluster mode are derived from measured liveness rather than
+    injected.
 
 Worker children are plain blocking sockets + threads (their compute is
 blocking BSR matmul anyway); only the dispatcher side multiplexes, and
@@ -38,16 +46,19 @@ import struct
 import threading
 
 from ..faults import from_spec
+from ..retry import RetryPolicy
 from ..wire import (
     PlanShard,
     Task,
     TaskResult,
+    WorkerJoin,
     control_record,
     death_notice,
     decode_event,
     decode_record,
     encode_record,
     hello_record,
+    welcome_record,
 )
 from ..worker import serve_loop, start_heartbeat
 from .base import Transport
@@ -88,7 +99,7 @@ def _recv_frame(sock: socket.socket) -> bytes | None:
 
 
 def _tcp_worker_main(host: str, port: int, worker_id: int, fault_spec,
-                     heartbeat_s: float) -> None:
+                     heartbeat_s: float, join: bool = False) -> None:
     """Child entry point: connect, hello, pump socket -> inbox, serve."""
     faults = from_spec(fault_spec)
     sock = socket.create_connection((host, port))
@@ -137,6 +148,10 @@ def _tcp_worker_main(host: str, port: int, worker_id: int, fault_spec,
                     inbox.put(("shard", PlanShard.decode(inner)))
                 elif rec == "cancel":
                     inbox.put(("cancel", meta["round"]))
+                elif rec == "drop":
+                    inbox.put(("drop", meta["plan"]))
+                elif rec == "welcome":
+                    inbox.put(("welcome", meta.get("plans", 0)))
                 elif rec == "stop":
                     parked.set()
                     inbox.put(("stop", None))
@@ -148,9 +163,10 @@ def _tcp_worker_main(host: str, port: int, worker_id: int, fault_spec,
                 return
 
     try:
-        _send_frame(sock, hello_record(worker_id), lock)
+        _send_frame(sock, hello_record(worker_id, join=join), lock)
         threading.Thread(target=pump, daemon=True).start()
-        start_heartbeat(worker_id, emit, heartbeat_s, stop_beats)
+        start_heartbeat(worker_id, emit, heartbeat_s, stop_beats,
+                        mute=getattr(faults, "should_mute", None))
         status = serve_loop(worker_id, inbox, emit, faults,
                             stop_beats=stop_beats)
     except OSError:
@@ -177,24 +193,32 @@ class TcpTransport(Transport):
     def __init__(self, n_workers: int, *, faults=None,
                  heartbeat_s: float = 0.25, host: str = "127.0.0.1",
                  port: int = 0, spawn: bool = True,
-                 hello_timeout: float = 60.0):
+                 hello_timeout: float = 60.0, allow_join: bool = True):
         """``spawn=False`` turns this into a multi-host coordinator: no
         local children are forked -- the server binds ``host:port``
         (pass a fixed port so operators can point remote devices at it)
         and ``start`` waits ``hello_timeout`` seconds for ``n_workers``
         remote ``python -m repro.cluster.worker --connect`` processes to
-        dial in and handshake."""
+        dial in and handshake.  ``allow_join`` (default on) admits
+        hellos for ids outside the initial roster at runtime -- the
+        wire-v4 live-join path."""
         super().__init__(n_workers, faults=faults, heartbeat_s=heartbeat_s)
         self.host = host
         self.spawn = spawn
         self.hello_timeout = hello_timeout
+        self.allow_join = allow_join
         self.port: int | None = port or None
         self._loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
         self._server = None
-        self._writers: list = [None] * n_workers
-        self._hello = [threading.Event() for _ in range(n_workers)]
-        self._procs: list = []
+        self._writers: dict = {}
+        self._hello: dict[int, threading.Event] = {
+            w: threading.Event() for w in range(n_workers)}
+        self._awaiting: set[int] = set(range(n_workers))
+        self._leaving: set[int] = set()
+        self._procs: dict = {}
+        self._ship_retry = RetryPolicy(base_s=0.05, max_backoff_s=0.5,
+                                       attempt_timeout_s=15.0)
         self.shard_acks: dict[int, str] = {}    # worker -> last acked digest
 
     # -- event-loop plumbing ----------------------------------------------
@@ -223,13 +247,25 @@ class TcpTransport(Transport):
             if meta.get("record") != "hello":
                 raise ValueError(f"expected hello, got {meta.get('record')!r}")
             w = int(meta["worker"])
-            if not 0 <= w < self.n_workers or self._writers[w] is not None:
+            if w < 0 or self._writers.get(w) is not None:
                 raise ValueError(f"bad or duplicate worker id {w}")
+            is_join = w not in self._awaiting
+            if is_join and not self.allow_join:
+                raise ValueError(f"unknown worker id {w} (live join "
+                                 f"disabled)")
         except (ValueError, KeyError, TypeError, AttributeError):
             writer.close()                      # failed handshake: reject
             return
+        self._awaiting.discard(w)
+        self._known.add(w)
+        self.revive(w)
+        self._leaving.discard(w)
         self._writers[w] = writer
-        self._hello[w].set()
+        self._hello.setdefault(w, threading.Event()).set()
+        if is_join:
+            # live join (a fresh id, a respawned child, or a remote
+            # device reconnecting): the dispatcher owns catch-up
+            self.push_event(WorkerJoin(worker=w))
         while True:
             blob = await self._read_frame(reader)
             if blob is None:
@@ -245,9 +281,11 @@ class TcpTransport(Transport):
             if isinstance(event, TaskResult) and event.kind == "death":
                 self.mark_dead(w)
             self.push_event(event)
-        self._writers[w] = None
+        if self._writers.get(w) is writer:
+            self._writers.pop(w, None)
         writer.close()
-        if not self._closing and not self._dead[w]:
+        if not self._closing and w not in self._dead \
+                and w not in self._leaving:
             # connection lost without a notice: fail-stop over the network
             self.mark_dead(w)
             self.push_event(death_notice(w, "connection lost"))
@@ -256,7 +294,7 @@ class TcpTransport(Transport):
         """Write one frame; returns whether it actually hit the wire
         (False once the connection is gone -- the pump surfaces the
         death, callers must not crash the round or count the bytes)."""
-        writer = self._writers[worker]
+        writer = self._writers.get(worker)
         if writer is None:
             return False                        # death already surfaced
         try:
@@ -268,9 +306,19 @@ class TcpTransport(Transport):
 
     # -- Transport interface ----------------------------------------------
 
-    def start(self, shard_blobs: list[bytes] | None = None) -> int:
+    def _spawn_child(self, w: int, join: bool = False) -> None:
         import multiprocessing as mp  # noqa: PLC0415
 
+        ctx = mp.get_context("spawn")
+        proc = ctx.Process(
+            target=_tcp_worker_main,
+            args=(self.host, self.port, w, self.faults.to_spec(),
+                  self.heartbeat_s, join),
+            daemon=True)
+        proc.start()
+        self._procs[w] = proc
+
+    def start(self, shard_blobs: list[bytes] | None = None) -> int:
         self._loop = asyncio.new_event_loop()
         self._thread = threading.Thread(
             target=self._loop.run_forever, name="cluster-tcp-loop",
@@ -282,17 +330,10 @@ class TcpTransport(Transport):
                                      self.port or 0))
             self.port = self._server.sockets[0].getsockname()[1]
             if self.spawn:
-                ctx = mp.get_context("spawn")
                 for w in range(self.n_workers):
-                    proc = ctx.Process(
-                        target=_tcp_worker_main,
-                        args=(self.host, self.port, w, self.faults.to_spec(),
-                              self.heartbeat_s),
-                        daemon=True)
-                    proc.start()
-                    self._procs.append(proc)
-            for w, evt in enumerate(self._hello):
-                if not evt.wait(timeout=self.hello_timeout):
+                    self._spawn_child(w)
+            for w in range(self.n_workers):
+                if not self._hello[w].wait(timeout=self.hello_timeout):
                     raise RuntimeError(f"tcp worker {w} never completed "
                                        f"the handshake")
             return sum(self.ship_shard(w, blob)
@@ -309,9 +350,20 @@ class TcpTransport(Transport):
         digest = hashlib.sha256(blob).hexdigest()
         frame = encode_record({"record": "shard-wrap", "digest": digest},
                               {"blob": np.frombuffer(blob, np.uint8)})
+
         # synchronous (.result): shard shipping wants backpressure, and
-        # requeue correctness depends on the shard preceding its tasks
-        sent = self._run_coro(self._asend(worker, frame))
+        # requeue correctness depends on the shard preceding its tasks.
+        # Retried under the shared policy: a slow loop round-trip or a
+        # transient socket error must not strand a shard (and with it
+        # every requeue that depends on it).
+        def send_once() -> bool:
+            return self._run_coro(self._asend(worker, frame),
+                                  timeout=self._ship_retry.attempt_timeout_s)
+
+        try:
+            sent = self._ship_retry.call(send_once)
+        except (TimeoutError, ConnectionError, OSError):
+            return 0                    # channel gone: the pump surfaces it
         return len(frame) if sent else 0
 
     def submit(self, worker: int, task: Task) -> int:
@@ -330,27 +382,102 @@ class TcpTransport(Transport):
             self._loop)
         fut.add_done_callback(lambda f: f.exception())
 
+    def drop_plan(self, worker: int, plan_id: int) -> None:
+        try:
+            self._run_coro(self._asend(
+                worker, control_record("drop", plan=plan_id)), timeout=5)
+        except Exception:               # best-effort hygiene
+            pass
+
+    def confirm_join(self, worker: int, plans: int = 0) -> None:
+        try:
+            self._run_coro(self._asend(
+                worker, welcome_record(worker, plans)), timeout=5)
+        except Exception:               # informational: never fail a join
+            pass
+
+    # -- dynamic membership (wire v4) ---------------------------------------
+
+    def add_worker(self, worker: int | None = None) -> int:
+        w = self.next_worker_id() if worker is None else int(worker)
+        if self._writers.get(w) is not None:
+            raise ValueError(f"worker {w} is already connected")
+        old = self._procs.pop(w, None)
+        if old is not None:             # reap a dead predecessor
+            old.join(timeout=2)
+            if old.is_alive():
+                old.terminate()
+                old.join(timeout=2)
+        evt = self._hello.setdefault(w, threading.Event())
+        evt.clear()
+        if self.spawn:
+            self._spawn_child(w, join=True)
+        # spawn=False: a remote device dials on its own -- just wait
+        if not evt.wait(timeout=self.hello_timeout):
+            raise RuntimeError(f"tcp worker {w} never completed the "
+                               f"join handshake")
+        return w
+
+    def remove_worker(self, worker: int) -> None:
+        # leaving mark first: the connection teardown that follows must
+        # not be mistaken for fail-stop by the pump
+        self._leaving.add(worker)
+        self.mark_dead(worker)
+        self._known.discard(worker)
+        try:
+            self._run_coro(self._asend(worker, control_record("stop")),
+                           timeout=5)
+        except Exception:
+            pass
+        proc = self._procs.pop(worker, None)
+        if proc is not None:
+            proc.join(timeout=2)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=2)
+
+        async def _close_writer() -> None:
+            wr = self._writers.pop(worker, None)
+            if wr is not None:
+                wr.close()
+
+        try:
+            self._run_coro(_close_writer(), timeout=5)
+        except Exception:
+            pass
+
+    def garble(self, worker: int) -> int:
+        """One deliberately corrupt frame: the worker's pump must answer
+        with a death notice (it may not keep serving from a bad state)."""
+        frame = b"\xde\xad\xbe\xefgarbled-frame"
+        try:
+            sent = self._run_coro(self._asend(worker, frame), timeout=5)
+        except Exception:
+            return 0
+        return len(frame) if sent else 0
+
     def close(self) -> None:
         if self._closing:
             return
         self._closing = True
         stop = control_record("stop")
-        for w in range(self.n_workers):
-            try:
-                self._run_coro(self._asend(w, stop), timeout=5)
-            except Exception:           # conn already gone
-                pass
-        for proc in self._procs:
+        if self._loop is not None:
+            for w in list(self._writers):
+                try:
+                    self._run_coro(self._asend(w, stop), timeout=5)
+                except Exception:           # conn already gone
+                    pass
+        for proc in self._procs.values():
             proc.join(timeout=2)
             if proc.is_alive():         # hung or stuck child
                 proc.terminate()
                 proc.join(timeout=2)
 
         async def teardown() -> None:
-            for w, writer in enumerate(self._writers):
+            for w in list(self._writers):
+                writer = self._writers.pop(w, None)
                 if writer is not None:
                     writer.close()
-                    self._writers[w] = None
             if self._server is not None:
                 self._server.close()
                 await self._server.wait_closed()

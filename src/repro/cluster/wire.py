@@ -45,7 +45,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 MAGIC = b"RPRC"
-WIRE_VERSION = 3       # v3: plan/round routing fields on shard / task /
+WIRE_VERSION = 4       # v4: elastic membership -- join/leave/welcome
+                       # control frames (a worker may dial into a
+                       # *running* fleet and be caught up, or drain out
+                       # of one), plus drop frames freeing a
+                       # re-encoded plan's stale task tables.
+                       # v3: plan/round routing fields on shard / task /
                        # result records -- workers co-host several
                        # plans' shards (fleet sessions) and the fleet
                        # dispatcher demuxes results by (plan, round).
@@ -337,14 +342,55 @@ def plan_packed(plan):
     return pack_coded_blocks(np.asarray(ex.coded), 8, 8)
 
 
+def _host_virtuals(n_virtual: int, w: int,
+                   capacities=None) -> list[list[int]]:
+    """Virtual-worker ids per physical host.
+
+    Uniform hosts round-robin (``v % w``).  With ``capacities`` (one
+    positive int per host) the cut mirrors ``make_hetero_system``'s
+    layout exactly: hosts ordered by descending capacity own
+    *contiguous* virtual ranges sized proportionally to their capacity
+    -- so a hetero scheme's per-device tile groups land on the device
+    they were sized for, and a slow host gets proportionally fewer
+    coded tiles instead of a 1/w slice it cannot keep up with.
+    """
+    if capacities is None:
+        return [list(range(host, n_virtual, w)) for host in range(w)]
+    caps = [int(c) for c in capacities]
+    if len(caps) != w or any(c < 1 for c in caps):
+        raise ValueError(f"capacities wants {w} ints >= 1, got {capacities}")
+    order = sorted(range(w), key=lambda h: (-caps[h], h))
+    quota = [0] * w
+    # largest-remainder split of n_virtual proportional to capacity,
+    # every host guaranteed at least one virtual worker
+    total = sum(caps)
+    exact = [n_virtual * caps[h] / total for h in order]
+    base = [max(1, int(e)) for e in exact]
+    while sum(base) > n_virtual:
+        base[base.index(max(base))] -= 1
+    rema = sorted(range(len(order)), key=lambda i: base[i] - exact[i])
+    for i in rema:
+        if sum(base) >= n_virtual:
+            break
+        base[i] += 1
+    start = 0
+    for h, c in zip(order, base):
+        quota[h] = (start, c)
+        start += c
+    return [list(range(s, s + c)) for s, c in
+            (quota[host] for host in range(w))]
+
+
 def shard_plan(plan, n_workers: int | None = None, packed=None,
-               plan_id: int = 0) -> list[PlanShard]:
+               plan_id: int = 0, capacities=None) -> list[PlanShard]:
     """Split a compiled plan into per-physical-worker shards.
 
     Virtual worker ``v`` (and its ``tasks_per_worker`` task rows) lands
     on physical worker ``v % n_workers``; with fewer hosts than virtual
     workers each host serves several rows sequentially -- the
-    partial-straggler setting of Sec. IV-B.
+    partial-straggler setting of Sec. IV-B.  ``capacities`` switches to
+    the capacity-proportional contiguous cut (hetero schemes /
+    EWMA-measured device speeds -- see ``_host_virtuals``).
     """
     from ..runtime.pack import bsr_shards  # noqa: PLC0415
 
@@ -364,10 +410,10 @@ def shard_plan(plan, n_workers: int | None = None, packed=None,
         dense_tiles = max((packed.t_pad // packed.bk)
                           * (packed.c_pad // packed.bm), 1)
 
+    by_host = _host_virtuals(n_virtual, w, capacities)
     shards = []
     for host in range(w):
-        rows = [v * per + j for v in range(host, n_virtual, w)
-                for j in range(per)]
+        rows = [v * per + j for v in by_host[host] for j in range(per)]
         if packed is None:
             shards.append(PlanShard(
                 worker=host, n_workers=w, task_rows=tuple(rows),
@@ -510,12 +556,66 @@ class Heartbeat:
                               "tick": self.tick})
 
 
-def hello_record(worker: int) -> bytes:
+@dataclass
+class WorkerJoin:
+    """Membership event: a worker (re)joined the transport (wire v4).
+
+    Transports surface every membership gain -- a spawned addition, a
+    remote ``--connect`` dial into a *running* fleet, a healed
+    partition's reconnect -- as this event on the uniform stream; the
+    fleet dispatcher answers by catching the worker up (digest-verified
+    shard ship for every attached plan, rebalanced off the most-loaded
+    hosts) and confirming with a welcome frame.
+    """
+
+    worker: int
+    capacity: int = 1          # device speed hint (1 = baseline)
+
+    def encode(self) -> bytes:
+        return encode_record({"record": "join", "worker": self.worker,
+                              "capacity": self.capacity})
+
+
+@dataclass
+class WorkerLeave:
+    """Membership event: a worker asked to leave gracefully (wire v4).
+
+    Unlike a death notice this is *drain-before-remove*: the fleet
+    stops routing new rows to the worker, waits for its in-flight rows
+    (bounded), re-homes its shards, and only then tears the channel
+    down -- no requeue storm, no suspicion.
+    """
+
+    worker: int
+    reason: str = ""
+
+    def encode(self) -> bytes:
+        return encode_record({"record": "leave", "worker": self.worker,
+                              "reason": self.reason})
+
+
+def hello_record(worker: int, *, join: bool = False) -> bytes:
     """Per-connection handshake: the wire version travels in the record
     header (so a mismatched peer is rejected at decode), the worker id
-    in the meta.  Socket transports send this as their first frame."""
+    in the meta.  Socket transports send this as their first frame;
+    ``join=True`` marks a live join into an already-running fleet
+    (v4 -- a coordinator accepts it for ids it has never seen)."""
     return encode_record({"record": "hello", "worker": worker,
-                          "wire_version": WIRE_VERSION})
+                          "wire_version": WIRE_VERSION, "join": bool(join)})
+
+
+def welcome_record(worker: int, plans: int = 0) -> bytes:
+    """Coordinator -> worker join confirmation (wire v4): sent after
+    shard catch-up, echoing how many attached plans were shipped."""
+    return encode_record({"record": "welcome", "worker": worker,
+                          "plans": plans})
+
+
+def drop_record(plan_id: int) -> bytes:
+    """Free one plan's task tables on a worker (wire v4): sent when the
+    fleet re-encodes a plan under a fresh plan id, so stale shards do
+    not accumulate on long-lived devices."""
+    return encode_record({"record": "drop", "plan": plan_id})
 
 
 def control_record(record: str, **meta) -> bytes:
@@ -526,8 +626,9 @@ def control_record(record: str, **meta) -> bytes:
 def decode_event(data: bytes):
     """Decode one frame of the worker->dispatcher stream.
 
-    Returns a ``TaskResult`` or ``Heartbeat``; control records
-    (``shard-ack``) come back as their plain meta dict.  This is the
+    Returns a ``TaskResult``, ``Heartbeat``, ``WorkerJoin`` or
+    ``WorkerLeave``; control records (``shard-ack``, ``hello``,
+    ``welcome``) come back as their plain meta dict.  This is the
     single demux every transport's pump uses, so the dispatcher sees
     one uniform event stream no matter what carried the bytes.
     """
@@ -543,8 +644,14 @@ def decode_event(data: bytes):
                               arrays=arrays)
         if rec == "beat":
             return Heartbeat(worker=meta["worker"], tick=meta["tick"])
+        if rec == "join":
+            return WorkerJoin(worker=meta["worker"],
+                              capacity=meta.get("capacity", 1))
+        if rec == "leave":
+            return WorkerLeave(worker=meta["worker"],
+                               reason=meta.get("reason", ""))
     except KeyError as e:   # parses but fields are missing: still garbled
         raise ValueError(f"garbled {rec} record: missing {e}") from e
-    if rec in ("shard-ack", "hello"):
+    if rec in ("shard-ack", "hello", "welcome"):
         return meta
     raise ValueError(f"unexpected event record {rec!r}")

@@ -55,6 +55,17 @@ class ShardRuntime:
         # per-plan operand geometry (t_pad, bk) for the support scatter
         self.geometry: dict[int, tuple[int, int]] = {}
 
+    def drop(self, plan: int) -> int:
+        """Free one plan's task table + geometry (wire v4 ``drop``:
+        the fleet re-encoded the plan under a fresh id, the old shards
+        must not accumulate on long-lived devices).  Returns how many
+        task rows were freed."""
+        stale = [key for key in self.tasks if key[0] == plan]
+        for key in stale:
+            del self.tasks[key]
+        self.geometry.pop(plan, None)
+        return len(stale)
+
     def load(self, shard: PlanShard) -> None:
         from scipy import sparse  # noqa: PLC0415 - worker-side heavy dep
 
@@ -109,16 +120,22 @@ class ShardRuntime:
 
 
 def start_heartbeat(worker_id: int, emit, interval: float,
-                    stop: threading.Event) -> threading.Thread:
+                    stop: threading.Event, mute=None) -> threading.Thread:
     """Beat ``Heartbeat(worker_id)`` on ``emit`` every ``interval``
     seconds until ``stop`` is set (or the channel dies).  Runs on its
     own daemon thread so long tasks and injected latency never starve
-    liveness -- only death, hangs, and shutdown do."""
+    liveness -- only death, hangs, and shutdown do.  ``mute`` (an
+    optional ``mute(worker_id) -> bool``, e.g. a scripted partition
+    window) drops individual beats while truthy -- the device is alive
+    but unreachable, which is exactly what the dispatcher's suspicion
+    path must be exercised against."""
 
     def beat():
         tick = 0
         while not stop.wait(interval):
             tick += 1
+            if mute is not None and mute(worker_id):
+                continue
             try:
                 emit(Heartbeat(worker=worker_id, tick=tick))
             except Exception:   # channel gone: the pump handles liveness
@@ -169,11 +186,26 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
         if kind == "cancel":
             cancelled.add(val)
             continue
-        if kind == "shard":
-            runtime.load(PlanShard.decode(val) if isinstance(val, bytes)
-                         else val)
+        if kind == "welcome":
+            continue                    # join confirmation: informational
+        if kind == "drop":
+            runtime.drop(val)
             continue
-        task: Task = Task.decode(val) if isinstance(val, bytes) else val
+        try:
+            if kind == "shard":
+                runtime.load(PlanShard.decode(val) if isinstance(val, bytes)
+                             else val)
+                continue
+            task: Task = Task.decode(val) if isinstance(val, bytes) else val
+        except (ValueError, KeyError, TypeError) as e:
+            # garbled frame: this worker must not keep serving from a
+            # bad state -- notify death (same contract as the tcp
+            # pump's digest check) instead of crashing the serve thread
+            try:
+                emit(death_notice(worker_id, f"garbled {kind}: {e!r}"))
+            except Exception:
+                pass
+            return finish("death")
         # drain everything already queued so cancels annihilate stale
         # tasks before we burn compute (and injected sleep) on them
         while True:
@@ -217,25 +249,25 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
 
 def run_remote_worker(host: str, port: int, worker_id: int, *,
                       heartbeat_s: float = 0.25,
-                      connect_timeout: float = 30.0) -> None:
+                      max_dial_s: float = 30.0) -> None:
     """Join a tcp fleet on another host: dial, hello-handshake, download
     shards, heartbeat, serve until the coordinator stops us.  The whole
     protocol is the tcp transport's worker child -- a remote device and
-    a locally-spawned one are indistinguishable to the coordinator.
-    Dialing retries for ``connect_timeout`` seconds so devices may come
-    up before the coordinator binds its port."""
+    a locally-spawned one are indistinguishable to the coordinator, and
+    a worker dialing into an already-*running* fleet is caught up with
+    every attached plan's shards (wire v4 live join).  Dialing retries
+    with exponential backoff + deterministic jitter for up to
+    ``max_dial_s`` seconds, so devices may come up before the
+    coordinator binds its port without hammering it at a fixed rate."""
+    from .retry import RetryPolicy  # noqa: PLC0415
     from .transport.tcp import _tcp_worker_main  # noqa: PLC0415
 
-    deadline = time.monotonic() + connect_timeout
-    while True:
-        try:
-            _tcp_worker_main(host, port, worker_id, NoFaults().to_spec(),
-                             heartbeat_s)
-            return
-        except ConnectionError:
-            if time.monotonic() >= deadline:
-                raise
-            time.sleep(0.2)
+    policy = RetryPolicy(max_attempts=0, base_s=0.1, max_backoff_s=2.0,
+                         seed=worker_id, total_timeout_s=max_dial_s)
+    policy.call(
+        lambda: _tcp_worker_main(host, port, worker_id,
+                                 NoFaults().to_spec(), heartbeat_s),
+        retry_on=(ConnectionError,))
 
 
 def main(argv=None) -> None:
@@ -251,15 +283,21 @@ def main(argv=None) -> None:
                          "(must be unique and < the fleet's n_workers)")
     ap.add_argument("--heartbeat", type=float, default=0.25,
                     help="liveness beat interval in seconds")
+    ap.add_argument("--max-dial-s", type=float, default=None,
+                    dest="max_dial_s",
+                    help="cap on total dial time: the initial connect "
+                         "retries with exponential backoff + jitter "
+                         "until this many seconds have passed")
     ap.add_argument("--connect-timeout", type=float, default=30.0,
-                    help="seconds to keep retrying the initial dial")
+                    help="deprecated alias for --max-dial-s")
     args = ap.parse_args(argv)
     host, _, port = args.connect.rpartition(":")
     if not host or not port.isdigit():
         ap.error(f"--connect wants HOST:PORT, got {args.connect!r}")
+    cap = args.max_dial_s if args.max_dial_s is not None \
+        else args.connect_timeout
     run_remote_worker(host, int(port), args.worker_id,
-                      heartbeat_s=args.heartbeat,
-                      connect_timeout=args.connect_timeout)
+                      heartbeat_s=args.heartbeat, max_dial_s=cap)
 
 
 if __name__ == "__main__":

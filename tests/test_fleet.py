@@ -29,8 +29,8 @@ import numpy as np
 import pytest
 
 from repro.api import CodedFleet, compile_plan
-from repro.api.fleet import default_max_inflight
-from repro.cluster import StragglerFaults
+from repro.api.fleet import FleetDegraded, default_max_inflight
+from repro.cluster import ScriptedFaults, StragglerFaults
 
 TOL = dict(rtol=5e-3, atol=5e-3)
 
@@ -545,3 +545,304 @@ class TestSharedConsumers:
             assert trainer.retunes[0]["backend"] == "reference"
             assert trainer.retunes[0]["reshipped_bytes"] > 0
             assert handle.bytes_shards > shards_before
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership: live join / graceful leave
+# ---------------------------------------------------------------------------
+
+
+def wait_until(pred, timeout=10.0):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(0.02)
+    return pred()
+
+
+class TestElasticMembership:
+    def test_add_worker_joins_and_serves(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6) as fleet:
+            h = fleet.attach(plan)
+            h.matvec(xs[0])
+            joiner = fleet.add_worker()
+            assert joiner in fleet.live_workers()
+            assert "join" in [e["kind"] for e in fleet.event_log]
+            # ownership rebalanced off the most-loaded hosts: the
+            # newcomer actually serves the already-attached plan
+            assert wait_until(lambda: any(
+                o == joiner for ps in fleet._plans.values()
+                for o in ps.owner.values()))
+            # and parity survives the re-homed rows
+            done = np.ones(6, bool)
+            np.testing.assert_array_equal(
+                np.asarray(h.matvec(xs[1], done)),
+                np.asarray(plan.matvec(xs[1], jnp.asarray(done))))
+
+    def test_remove_worker_drains_without_deaths(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6) as fleet:
+            h = fleet.attach(plan)
+            h.matvec(xs[0])
+            fleet.remove_worker(5, drain=True)
+            assert 5 not in fleet.live_workers()
+            kinds = [e["kind"] for e in fleet.event_log]
+            assert "leave" in kinds
+            # drain-before-remove: no death notice, no suspicion
+            assert "death" not in kinds and "suspect" not in kinds
+            # resilience shrank before availability: k preserved
+            assert wait_until(lambda: h.plan.n == 5)
+            assert (h.plan.k, h.plan.s) == (4, 1)
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[1])),
+                                       np.asarray(xs[1] @ A), **TOL)
+            assert all(r.deaths == 0 for r in h.reports)
+
+    def test_removing_last_worker_refuses(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(1) as fleet:
+            h = fleet.attach(plan)
+            h.matvec(xs[0])
+            with pytest.raises(FleetDegraded, match="add a worker"):
+                fleet.remove_worker(0)
+            # the refused leave left the fleet serving
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[1])),
+                                       np.asarray(xs[1] @ A), **TOL)
+
+    def test_join_restores_full_resilience_after_loss(self, operands):
+        from repro.cluster import FailStop
+
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6, faults=FailStop({0: 0})) as fleet:
+            h = fleet.attach(plan)
+            pid0 = h.plan_id
+            # worker 0 dies serving its first task: the round still
+            # answers, then the plan re-encodes for the 5 survivors
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[0])),
+                                       np.asarray(xs[0] @ A), **TOL)
+            assert wait_until(lambda: h.plan.n == 5)
+            assert (h.plan.k, h.plan.s) == (4, 1)
+            pid_shrunk = h.plan_id
+            assert pid_shrunk != pid0
+            # a replacement device joins: full strength restored
+            fleet.add_worker()
+            assert wait_until(lambda: h.plan.n == 6)
+            assert (h.plan.k, h.plan.s) == (4, 2)
+            assert h.plan_id != pid_shrunk
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[1])),
+                                       np.asarray(xs[1] @ A), **TOL)
+
+    def test_worker_capacities_quantize_throughput_ewmas(self, operands):
+        with CodedFleet(4) as fleet:
+            # no measurements yet: everyone is baseline
+            assert fleet.worker_capacities([0, 1, 2, 3]) == [1, 1, 1, 1]
+            # seeded EWMAs quantize to 1..levels, proportional to the
+            # fastest; unmeasured workers get the median live rate
+            fleet._rate.update({0: 4.0, 1: 1.0, 2: 2.0})
+            assert fleet.worker_capacities([0, 1, 2]) == [4, 1, 2]
+            assert fleet.worker_capacities([0, 1, 2, 3]) == [4, 1, 2, 2]
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: floors, shedding, re-encode edges
+# ---------------------------------------------------------------------------
+
+
+class TestGracefulDegradation:
+    def test_reencode_is_journaled_under_fresh_plan_id(self, operands):
+        from repro.cluster import FailStop
+
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6, faults=FailStop({2: 0})) as fleet:
+            h = fleet.attach(plan)
+            pid0 = h.plan_id
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[0])),
+                                       np.asarray(xs[0] @ A), **TOL)
+            assert wait_until(lambda: h.plan_id != pid0)
+            kinds = [e["kind"] for e in fleet.event_log]
+            assert "reencode" in kinds
+            # the version that served round 1 stays replayable
+            assert h.plan_version(pid0).n == 6
+
+    def test_min_workers_floor_fails_fast(self, operands):
+        from repro.cluster import FailStop
+
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6, faults=FailStop({w: 0 for w in range(5)}),
+                        min_workers=3) as fleet:
+            h = fleet.attach(plan)
+            with pytest.raises(FleetDegraded, match="min_workers"):
+                h.matvec(xs[0], deadline=30.0)
+            # below the floor every later submission fails fast too,
+            # and the error names the recovery action
+            with pytest.raises(FleetDegraded, match="add_worker"):
+                h.submit_matvec(xs[1])
+            assert "degraded-floor" in [e["kind"] for e in fleet.event_log]
+
+    def test_shed_admission_rejects_when_saturated(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        slow = StragglerFaults(time_scale=30.0, seed=1)
+        with CodedFleet(6, faults=slow, admission="shed", queue_cap=2,
+                        max_inflight=1, microbatch=False) as fleet:
+            h = fleet.attach(plan)
+            f1 = h.submit_matvec(xs[0], np.ones(6, bool), deadline=0.5)
+            f2 = h.submit_matvec(xs[1], np.ones(6, bool), deadline=0.5)
+            with pytest.raises(FleetDegraded, match="queue_cap") as ei:
+                h.submit_matvec(xs[2], np.ones(6, bool))
+            assert ei.value.action == "shed"
+            for f in (f1, f2):          # shed calls never wedge others
+                with pytest.raises(TimeoutError):
+                    f.result(timeout=30.0)
+
+    def test_queued_explicit_mask_fails_structured_across_reencode(
+            self, operands):
+        from repro.cluster import FailStop
+
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6, faults=FailStop({0: 0}), max_inflight=1,
+                        microbatch=False) as fleet:
+            h = fleet.attach(plan)
+            # round 1 kills worker 0 -> the plan re-encodes once its
+            # rounds drain; the queued explicit-mask call was built in
+            # the old version's task coordinates and cannot be rebuilt
+            f1 = h.submit_matvec(xs[0])
+            f2 = h.submit_matvec(xs[1], np.ones(6, bool))
+            np.testing.assert_allclose(np.asarray(f1.result()),
+                                       np.asarray(xs[0] @ A), **TOL)
+            with pytest.raises(FleetDegraded, match="re-encode") as ei:
+                f2.result(timeout=30.0)
+            assert ei.value.action == "re-encode"
+            # race-mode calls survive the same transition fine
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[2])),
+                                       np.asarray(xs[2] @ A), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase suspicion edge cases, all transports
+# ---------------------------------------------------------------------------
+
+
+class TestSuspicionEdgeCases:
+    @pytest.mark.parametrize("transport", ["memory", "pipe", "tcp"])
+    def test_partitioned_worker_suspected_not_failed(self, operands,
+                                                     transport):
+        if transport != "memory":
+            pytest.importorskip("scipy")
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        warm = 2.5 if transport == "memory" else 15.0
+        epoch = time.time() + warm
+        faults = ScriptedFaults(
+            windows=[{"kind": "partition", "worker": 0,
+                      "t0": 0.0, "t1": 2.0}],
+            epoch=epoch)
+        with CodedFleet(6, transport=transport, faults=faults,
+                        heartbeat_s=0.1, suspect_after=0.4,
+                        suspect_grace=10.0, microbatch=False) as fleet:
+            h = fleet.attach(plan)
+            h.matvec(xs[0])                     # warm before the window
+            while time.time() < epoch + 0.6:
+                time.sleep(0.02)
+            # phase 1: silent but IDLE -- no outstanding rows, so the
+            # two-phase rule must neither suspect nor re-home it
+            assert 0 in fleet.live_workers()
+            assert 0 not in fleet._suspected
+            # phase 2: give it outstanding rows mid-partition; a
+            # wait-all round cannot finish until the partition heals,
+            # and the LONG grace means the late beat un-suspects the
+            # worker instead of a spurious fail-stop + requeue
+            done = np.ones(6, bool)
+            out = np.asarray(h.matvec(xs[1], done, deadline=60.0))
+            assert time.time() >= epoch + 1.8   # resolved post-heal
+            rep = h.reports[-1]
+            assert rep.suspected == 0
+            assert rep.deaths == 0
+            assert rep.requeues == 0
+            np.testing.assert_array_equal(
+                out, np.asarray(plan.matvec(xs[1], jnp.asarray(done))))
+            assert 0 in fleet.live_workers()
+            assert wait_until(lambda: 0 not in fleet._suspected, 5.0)
+            assert "death" not in [e["kind"] for e in fleet.event_log]
+
+
+# ---------------------------------------------------------------------------
+# Close robustness: idempotence, mid-round teardown, leak checks
+# ---------------------------------------------------------------------------
+
+
+class TestCloseRobustness:
+    @pytest.mark.parametrize("transport", ["memory", "tcp"])
+    def test_double_close_is_idempotent(self, operands, transport):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        fleet = CodedFleet(6, transport=transport)
+        h = fleet.attach(plan)
+        h.matvec(xs[0])
+        fleet.close()
+        fleet.close()                           # second close is a no-op
+        time.sleep(0.05)
+        for t in threading.enumerate():
+            assert not t.name.startswith(("coded-fleet", "cluster-tcp",
+                                          "cluster-beat",
+                                          "cluster-worker"))
+
+    def test_close_mid_round_resolves_futures(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        slow = StragglerFaults(time_scale=30.0, seed=1)
+        fleet = CodedFleet(6, faults=slow, microbatch=False)
+        h = fleet.attach(plan)
+        fut = h.submit_matvec(xs[0], np.ones(6, bool))
+        time.sleep(0.2)
+        fleet.close()                           # round still in flight
+        with pytest.raises(RuntimeError, match="closed"):
+            fut.result(timeout=10.0)            # resolved, never hangs
+        assert fut.done()
+        fleet.close()                           # idempotent afterwards
+        time.sleep(0.05)
+        leftover = [t.name for t in threading.enumerate()
+                    if t.name.startswith(("coded-fleet", "cluster-worker",
+                                          "cluster-beat"))]
+        assert leftover == []
+
+    def test_tcp_close_releases_fds(self, operands):
+        import gc
+
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+
+        def run_once():
+            with CodedFleet(4, transport="tcp") as fleet:
+                h = fleet.attach(plan)
+                h.matvec(xs[0])
+
+        run_once()                              # warm lazy imports/caches
+        gc.collect()
+        time.sleep(0.2)
+        before = len(os.listdir("/proc/self/fd"))
+        run_once()
+        gc.collect()
+        time.sleep(0.2)
+        after = len(os.listdir("/proc/self/fd"))
+        assert after <= before + 2              # sockets + pipes released
