@@ -714,6 +714,34 @@ def fleet_bench(scale: float, calls: int = 48, seed: int = 11,
     emit("fleet/sequential", sequential["lat_p50_ms"] * 1e3,
          f"cps={sequential['throughput_cps']:.1f}")
 
+    # -- closed-loop service latency at inflight=1 ------------------------
+    # One call in flight at a time, result awaited before the next
+    # submit: pure per-call service latency through the fleet path.
+    # The idle-fleet immediate pump must keep this within ~3x of the
+    # sequential shim (it used to defer every round by a loop
+    # iteration; the grid rows below are OPEN loop, so their inflight=1
+    # latencies are dominated by queue wait, not service time).
+    with CodedFleet(n, transport="memory", max_inflight=1,
+                    queue_cap=calls + 8) as fleet:
+        h = fleet.attach(plan)
+        h.matvec(xcalls[0])                         # warm
+        lat = []
+        t0 = time.perf_counter()
+        for xc in xcalls:
+            t1 = time.perf_counter()
+            h.matvec(xc)
+            lat.append(time.perf_counter() - t1)
+        closed1 = {"mode": "CodedFleet inflight=1 closed-loop", **stats(
+            lat, time.perf_counter() - t0)}
+    ratio1 = closed1["lat_p50_ms"] / sequential["lat_p50_ms"]
+    closed1["p50_ratio_vs_sequential"] = ratio1
+    assert ratio1 <= 3.0, (
+        f"fleet inflight=1 closed-loop p50 is {ratio1:.2f}x the "
+        f"sequential shim (need <= 3x; idle-fleet pump regressed?)")
+    emit("fleet/inflight1_closedloop", closed1["lat_p50_ms"] * 1e3,
+         f"cps={closed1['throughput_cps']:.1f};"
+         f"p50_vs_sequential={ratio1:.2f}x")
+
     # -- fleet grid: in-flight x microbatch ------------------------------
     loop_creations = {"n": 0}
     real_run, real_new = _asyncio.run, _asyncio.new_event_loop
@@ -799,14 +827,199 @@ def fleet_bench(scale: float, calls: int = 48, seed: int = 11,
                    "zeros": zeros, "calls": calls, "seed": seed,
                    "backend": "packed", "transport": "memory"},
         "sequential": sequential,
+        "fleet_inflight1_closedloop": closed1,
         "fleet": grid,
         "speedup_16_vs_sequential": speedup,
         "parity_bitwise": bool(parity_ok),
         "event_loops_created_during_calls": loop_creations["n"],
+        "note": ("fleet grid latencies are open-loop (all calls "
+                 "submitted up front; p50 includes queue wait); "
+                 "fleet_inflight1_closedloop is the per-call service "
+                 "latency, directly comparable to sequential"),
     }
     with open(json_path, "w") as fh:
         _json.dump(payload, fh, indent=2)
     emit("fleet/json", 0.0, f"wrote={json_path}")
+
+
+# ---------------------------------------------------------------------------
+# Serve router: adaptive microbatching vs static caps, tenant fairness
+# (framework bench, tracked via BENCH_router.json)
+# ---------------------------------------------------------------------------
+
+
+def router_bench(scale: float, calls: int = 64, seed: int = 13,
+                 json_path: str = "BENCH_router.json"):
+    """Serve front door: adaptive microbatching must win both ways.
+
+    One endpoint ("lm-head") on two replica fleets, two tenants with
+    3:1 weights, three batching configs: static width 8, static width
+    64 (the throughput cap), and adaptive width in [8, 128].  Each
+    config runs a *low-load* closed loop (one call at a time -- the
+    static cap pays its ``batch_wait_s`` collection window, adaptive
+    collapses and dispatches solo) and a *high-load* open burst
+    (``calls`` calls per tenant submitted at once -- adaptive ramps to
+    wider rounds than any static cap).  Asserts: adaptive high-load
+    throughput >= the best static config; adaptive low-load p50
+    strictly below the static-64 cap; tenant service shares within the
+    weighted-fair band; and bitwise parity of routed results vs direct
+    ``PlanHandle`` calls (explicit-mask replay and race-mode observed-
+    pattern replay).
+    """
+    import json as _json  # noqa: PLC0415
+
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.api import CodedFleet, compile_plan  # noqa: PLC0415
+    from repro.serve import Router  # noqa: PLC0415
+
+    n, k, b = 12, 9, 8
+    t = max(int(4096 * scale) // 128 * 128, 256)
+    r = max(int(4608 * scale) // (k * 8) * (k * 8), k * 8)
+    zeros = 0.98
+    rng = np.random.default_rng(seed)
+    mask = rng.random((t // 8, r // 8)) >= zeros
+    A = jnp.asarray((rng.standard_normal((t, r)) *
+                     np.kron(mask, np.ones((8, 8)))).astype(np.float32))
+    plan = compile_plan(A, scheme="proposed", n=n, s=n - k,
+                        backend="packed")
+    x_low = [jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+             for _ in range(24)]
+    x_high = [jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+              for _ in range(calls)]
+    wait_s = 0.004
+
+    configs = [
+        ("static-8", dict(adaptive=False, width=8, max_cols=64)),
+        ("static-64", dict(adaptive=False, width=64, max_cols=64)),
+        ("adaptive", dict(adaptive=True, min_cols=8, max_cols=128)),
+    ]
+    results = {}
+    parity_ok = True
+    for label, opts in configs:
+        router = Router(batch_wait_s=wait_s)
+        router.register("lm-head", plan, replicas=2, n_workers=n,
+                        transport="memory", max_inflight=4, **opts)
+        router.set_tenant("pro", weight=3.0)
+        router.set_tenant("free", weight=1.0)
+        router.call("lm-head", x_low[0], tenant="pro")       # warm both
+        router.call("lm-head", x_low[0], tenant="free")      # replicas
+
+        # low offered load: closed loop, one call in flight
+        lat = []
+        for i, xc in enumerate(x_low):
+            tenant = "pro" if i % 2 else "free"
+            t1 = time.perf_counter()
+            router.call("lm-head", xc, tenant=tenant)
+            lat.append(time.perf_counter() - t1)
+        lat_ms = np.asarray(sorted(lat)) * 1e3
+        low = {"lat_p50_ms": float(np.percentile(lat_ms, 50)),
+               "lat_p99_ms": float(np.percentile(lat_ms, 99))}
+
+        # high offered load: open burst, both tenants at once.  A
+        # warmup burst first (identical for every config) so the timed
+        # burst measures steady state -- adaptive's width ramp is paid
+        # here, static widths are unaffected
+        router.pause()
+        warm = [router.submit("lm-head", x_high[i % calls], tenant=tn)
+                for i in range(calls // 2) for tn in ("pro", "free")]
+        router.resume()
+        for f in warm:
+            f.result(60)
+        log_before = len(router.dispatch_log("lm-head"))
+        router.pause()
+        futs = []
+        for i in range(calls):
+            futs.append(router.submit("lm-head", x_high[i], tenant="pro"))
+            futs.append(router.submit("lm-head", x_high[i], tenant="free"))
+        t0 = time.perf_counter()
+        router.resume()
+        outs = [np.asarray(f.result(60)) for f in futs]
+        elapsed = time.perf_counter() - t0
+        log = router.dispatch_log("lm-head")[log_before:]
+        # tenant fairness: service shares over the contended stretch
+        # (the last log tail is the leftover of whichever tenant's
+        # backlog outlived the other, so measure the first 60%)
+        contended = log[: max(1, int(len(log) * 0.6))]
+        cols_by = {}
+        for e in contended:
+            cols_by[e["tenant"]] = cols_by.get(e["tenant"], 0) + e["cols"]
+        share_pro = cols_by.get("pro", 0) / max(sum(cols_by.values()), 1)
+        m = router.metrics()["endpoints"]["lm-head"]
+        high = {"throughput_cps": 2 * calls / elapsed,
+                "rounds": len(log),
+                "max_round_cols": max(e["cols"] for e in log),
+                "final_width": m["width"],
+                "tenant_share_pro": share_pro,
+                "tenant_counters": {
+                    tn: tv["counters"]
+                    for tn, tv in m["tenants"].items()}}
+
+        # bitwise parity vs direct PlanHandle calls (once, on adaptive):
+        # explicit-mask replay routed == direct, and each race-mode
+        # burst result == direct replay of its observed pattern
+        if label == "adaptive":
+            done_fixed = np.ones(n, bool)
+            done_fixed[[3, 7, 10]] = False
+            with CodedFleet(n, transport="memory") as fleet:
+                h = fleet.attach(plan)
+                direct = np.asarray(h.matvec(x_low[0], done_fixed))
+                routed = np.asarray(router.call(
+                    "lm-head", x_low[0], done=done_fixed, tenant="pro"))
+                parity_ok &= bool(np.array_equal(routed, direct))
+                for i in range(0, 2 * calls, 7):
+                    rep = futs[i].report
+                    want = np.asarray(h.matvec(x_high[i // 2],
+                                               done=rep.pattern))
+                    parity_ok &= bool(np.array_equal(outs[i], want))
+        router.close()
+        results[label] = {"low_load": low, "high_load": high}
+        emit(f"router/{label}", low["lat_p50_ms"] * 1e3,
+             f"cps_high={high['throughput_cps']:.1f};"
+             f"low_p50={low['lat_p50_ms']:.2f}ms;"
+             f"width={high['final_width']};"
+             f"pro_share={share_pro:.2f}")
+
+    ad = results["adaptive"]
+    best_static_cps = max(results[c]["high_load"]["throughput_cps"]
+                          for c in ("static-8", "static-64"))
+    adaptive_cps = ad["high_load"]["throughput_cps"]
+    static_cap_p50 = results["static-64"]["low_load"]["lat_p50_ms"]
+    assert parity_ok, "routed results diverged from direct handle calls"
+    assert adaptive_cps >= best_static_cps, (
+        f"adaptive high-load throughput {adaptive_cps:.1f} cps below "
+        f"the best static cap {best_static_cps:.1f} cps")
+    assert ad["low_load"]["lat_p50_ms"] < static_cap_p50, (
+        f"adaptive low-load p50 {ad['low_load']['lat_p50_ms']:.2f} ms "
+        f"not below the static-cap config {static_cap_p50:.2f} ms")
+    for label in results:
+        share = results[label]["high_load"]["tenant_share_pro"]
+        assert 0.55 <= share <= 0.92, (
+            f"{label}: pro tenant served {share:.2f} of contended "
+            f"columns; expected ~0.75 for 3:1 weights")
+    emit("router/summary", 0.0,
+         f"adaptive_vs_best_static={adaptive_cps / best_static_cps:.2f}x;"
+         f"low_p50_adaptive={ad['low_load']['lat_p50_ms']:.2f}ms;"
+         f"low_p50_static64={static_cap_p50:.2f}ms;parity_bitwise=True")
+
+    payload = {
+        "bench": "router",
+        "config": {"n": n, "k": k, "t": t, "r": r, "batch_cols": b,
+                   "zeros": zeros, "calls_per_tenant": calls,
+                   "seed": seed, "backend": "packed",
+                   "transport": "memory", "replicas": 2,
+                   "batch_wait_s": wait_s,
+                   "tenant_weights": {"pro": 3.0, "free": 1.0}},
+        "results": results,
+        "adaptive_vs_best_static_throughput":
+            adaptive_cps / best_static_cps,
+        "adaptive_low_load_p50_vs_static_cap":
+            ad["low_load"]["lat_p50_ms"] / static_cap_p50,
+        "parity_bitwise": bool(parity_ok),
+    }
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("router/json", 0.0, f"wrote={json_path}")
 
 
 # ---------------------------------------------------------------------------
@@ -890,15 +1103,11 @@ def main() -> None:
                     help="schedule seed for the chaos bench")
     ap.add_argument("--chaos-transports", default="memory,tcp",
                     help="comma-separated transports for the chaos bench")
+    ap.add_argument("--router-calls", type=int, default=64,
+                    help="high-load calls per tenant in the router bench")
     ap.add_argument("--list", action="store_true",
-                    help="print the scheme registry table and exit")
+                    help="print the bench suites + scheme registry and exit")
     args = ap.parse_args()
-
-    if args.list:
-        from repro.api.__main__ import format_scheme_table  # noqa: PLC0415
-
-        print(format_scheme_table())
-        return
 
     benches = {
         "table2": lambda: table2_worker(args.scale),
@@ -913,10 +1122,22 @@ def main() -> None:
             args.scale, rounds=args.cluster_rounds,
             transport=args.cluster_transport),
         "fleet": lambda: fleet_bench(args.scale, calls=args.fleet_calls),
+        "router": lambda: router_bench(args.scale, calls=args.router_calls),
         "chaos": lambda: chaos_bench(
             args.chaos_seed,
             transports=tuple(args.chaos_transports.split(","))),
     }
+
+    if args.list:
+        from repro.api.__main__ import format_scheme_table  # noqa: PLC0415
+
+        print("bench suites (--only NAME):")
+        for name in benches:
+            print(f"  {name}")
+        print()
+        print(format_scheme_table())
+        return
+
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -34,6 +34,17 @@ per-worker throughput for hetero capacities, and below ``min_workers``
 (env ``REPRO_FLEET_MIN_WORKERS``) futures fail fast with a structured
 ``FleetDegraded`` carrying the recovery action -- never a hang.
 
+Observability: ``fleet.metrics()`` / ``handle.metrics()`` return a
+structured snapshot (queue depth, in-flight rounds, per-plan latency
+EWMAs, resolution counters, worker capacities) -- degradation is
+visible to any caller, not only via exceptions.  Per-plan coalescing
+is dynamic: ``handle.set_microbatch_cols(cols)`` retargets the width
+cap live, and ``handle.submit_matvec_many(xs)`` packs an explicit
+group into exactly one round with per-call bitwise decode.  The
+multi-tenant serve front door over fleet replicas (named endpoints,
+weighted-fair tenant queues, adaptive microbatching) is
+``repro.serve.Router``.
+
 The implementation lives in ``repro.cluster.fleet`` (it is cluster
 machinery: transports, wire plan routing, liveness); this module is
 the supported import path.

@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import asyncio
 import concurrent.futures
+import itertools
 import os
 import threading
 import time
@@ -206,10 +207,18 @@ class CodedFuture:
     cancellable, mirroring ``concurrent.futures`` semantics), and
     ``add_done_callback(fn)`` fires ``fn(future)`` on resolution --
     from the fleet's loop thread, so callbacks must not block on other
-    futures.
+    futures.  After a successful race-mode round ``future.report``
+    holds the round's ``ClusterReport`` (observed pattern, wall/decode
+    time, per-worker credit).
+
+    A future may also be owned by a non-fleet producer (the serve
+    router wraps queued calls in the same type): construct with
+    ``fleet=None`` and resolve via ``_finish``; ``cancel()`` then
+    delegates to ``_canceller`` when the owner installed one.
     """
 
-    def __init__(self, fleet: "CodedFleet", ps: "_PlanState"):
+    def __init__(self, fleet: "CodedFleet | None" = None,
+                 ps: "_PlanState | None" = None):
         self._fleet = fleet
         self._ps = ps
         self._event = threading.Event()
@@ -218,6 +227,9 @@ class CodedFuture:
         self._cancelled = False
         self._callbacks: list = []
         self._lock = threading.Lock()
+        self._canceller = None          # non-fleet owners install a hook
+        self._t_submit: float | None = None
+        self.report: ClusterReport | None = None
 
     # -- consumer side -----------------------------------------------------
 
@@ -253,6 +265,10 @@ class CodedFuture:
     def cancel(self) -> bool:
         """Withdraw the call if it has not been launched into a round
         yet; returns whether the cancellation took."""
+        if self._fleet is None:
+            if self._canceller is not None:
+                return self._canceller(self)
+            return self.cancelled()
         return self._fleet._cancel_call(self._ps, self)
 
     # -- producer side (fleet loop) ---------------------------------------
@@ -265,7 +281,10 @@ class CodedFuture:
             self._value, self._exc, self._cancelled = value, exc, cancelled
             callbacks, self._callbacks = self._callbacks, []
             self._event.set()
-        self._ps.sem.release()          # backpressure slot freed
+        ps = self._ps
+        if ps is not None:
+            ps.sem.release()            # backpressure slot freed
+            ps.account(self)            # metrics: counters + latency EWMA
         for fn in callbacks:
             try:
                 fn(self)
@@ -303,6 +322,7 @@ class _Call:
     dense_bytes: int = 0
     built_for: int = 0                  # plan id the fields were built for
     rebuild: object = None              # (call) -> None re-prep, or None
+    group: int | None = None            # explicit coalescing group id
 
 
 class _Round:
@@ -355,6 +375,13 @@ class _PlanState:
         self.queue: deque[_Call] = deque()
         self.sem: threading.Semaphore | None = None     # set by the fleet
         self.detached = False
+        self.microbatch_cols: int | None = None  # per-plan cap (None = fleet)
+        self.counters = {"submitted": 0, "resolved": 0, "failed": 0,
+                         "cancelled": 0, "shed": 0, "deadline_hit": 0}
+        self._counter_lock = threading.Lock()
+        self.lat_ewma_s: float | None = None    # per-call submit -> resolve
+        self.wall_ewma_s: float | None = None   # per-round dispatch -> decode
+        self.decode_ewma_s: float | None = None
         self.versions: dict[int, object] = {plan_id: plan}
         self.pending_reencode = False
         self.max_shards = n_shards          # full-strength shard count
@@ -384,6 +411,43 @@ class _PlanState:
             remap = {h: hosts[h] for h in range(len(hosts))}
             self.owner = {row: remap[o] for row, o in self.owner.items()}
             self.shard_hosts = [remap[h] for h in self.shard_hosts]
+
+    def bump(self, key: str, by: int = 1) -> None:
+        with self._counter_lock:
+            self.counters[key] = self.counters.get(key, 0) + by
+
+    def account(self, fut: "CodedFuture") -> None:
+        """Resolution-time bookkeeping (any thread; lock-guarded)."""
+        if fut._cancelled:
+            self.bump("cancelled")
+        elif fut._exc is not None:
+            self.bump("failed")
+            if isinstance(fut._exc, TimeoutError):
+                self.bump("deadline_hit")
+        else:
+            self.bump("resolved")
+            if fut._t_submit is not None:
+                lat = time.perf_counter() - fut._t_submit
+                self.lat_ewma_s = lat if self.lat_ewma_s is None \
+                    else 0.8 * self.lat_ewma_s + 0.2 * lat
+
+    def snapshot(self) -> dict:
+        """Point-in-time metrics for this plan (no loop round-trip;
+        read under the counter lock plus GIL-atomic reads)."""
+        with self._counter_lock:
+            counters = dict(self.counters)
+        queued = list(self.queue)
+        to_ms = lambda s: None if s is None else s * 1e3  # noqa: E731
+        return {"plan_id": self.plan_id,
+                "kind": self.plan.kind,
+                "queue_depth": len(queued),
+                "queued_cols": sum(max(c.width, 1) for c in queued),
+                "microbatch_cols": self.microbatch_cols,
+                "pending_reencode": self.pending_reencode,
+                "lat_ewma_ms": to_ms(self.lat_ewma_s),
+                "wall_ewma_ms": to_ms(self.wall_ewma_s),
+                "decode_ewma_ms": to_ms(self.decode_ewma_s),
+                "counters": counters}
 
     def restricted_payload(self, row: int, b_op: np.ndarray) -> dict:
         """Support-restricted task payload: only the nonzero b
@@ -470,6 +534,7 @@ class CodedFleet:
         self._orphan = {"deaths": 0, "suspected": 0}    # between-rounds
         self._next_plan_id = 1
         self._round_counter = 0
+        self._group_counter = itertools.count(1)
         self._rr: list[int] = []            # plan round-robin order
         self._pump_scheduled = False
         self._reencoding = False
@@ -556,6 +621,62 @@ class CodedFleet:
         return {"transport": self.transport_name,
                 "bytes_shards": self.bytes_shards,
                 "bytes_tasks_total": self.bytes_tasks_total}
+
+    def set_microbatch_cols(self, cols: int) -> None:
+        """Retarget the fleet-wide coalescing cap; takes effect at the
+        next pump, in-flight rounds unaffected."""
+        self.microbatch_cols = max(1, int(cols))
+
+    def _metrics_unsafe(self) -> dict:
+        live = self._live()
+        rounds = list(self._rounds.values())
+        per_plan_inflight: dict[int, int] = {}
+        for rnd in rounds:
+            pid = rnd.ps.plan_id
+            per_plan_inflight[pid] = per_plan_inflight.get(pid, 0) + 1
+        plans = {}
+        for pid, ps in list(self._plans.items()):
+            snap = ps.snapshot()
+            snap["inflight_rounds"] = per_plan_inflight.get(pid, 0)
+            plans[pid] = snap
+        return {"transport": self.transport_name,
+                "live_workers": live,
+                "n_live": len(live),
+                "max_inflight": self.max_inflight,
+                "inflight_rounds": len(rounds),
+                "queued_calls": sum(p["queue_depth"] for p in plans.values()),
+                "microbatch": self.microbatch,
+                "microbatch_cols": self.microbatch_cols,
+                "worker_rates": dict(self._rate),
+                "worker_capacities": dict(
+                    zip(live, self.worker_capacities(live))),
+                "bytes_shards": self.bytes_shards,
+                "bytes_tasks_total": self.bytes_tasks_total,
+                "plans": plans}
+
+    def metrics(self) -> dict:
+        """Structured point-in-time snapshot: liveness, in-flight
+        rounds, queue depths, per-plan latency EWMAs and counters,
+        worker capacities.  The serve router's control input, and the
+        observable complement to ``FleetDegraded`` exceptions.  Taken
+        on the fleet loop for consistency (falls back to a best-effort
+        direct read when the loop is down or we ARE the loop)."""
+        if (self._closed or not self._loop.is_running()
+                or threading.current_thread() is self._loop_thread):
+            return self._metrics_unsafe()
+        fut = concurrent.futures.Future()
+
+        def snap():
+            try:
+                fut.set_result(self._metrics_unsafe())
+            except BaseException as e:  # noqa: BLE001
+                fut.set_exception(e)
+
+        try:
+            self._loop.call_soon_threadsafe(snap)
+            return fut.result(timeout=5)
+        except Exception:               # pragma: no cover - teardown race
+            return self._metrics_unsafe()
 
     def _log_event(self, kind: str, **fields) -> None:
         """Membership / degradation journal (bounded; chaos + ops
@@ -695,17 +816,67 @@ class CodedFleet:
             raise self._all_dead
         # bounded-queue backpressure: block (default) or shed
         if not ps.sem.acquire(blocking=self.admission != "shed"):
+            ps.bump("shed")
             raise FleetDegraded(
                 f"plan {ps.plan_id} admission queue is full "
                 f"({self.queue_cap} unresolved calls); back off and "
                 f"resubmit, or raise queue_cap",
                 action="shed", plan_id=ps.plan_id)
+        ps.bump("submitted")
+        call.future._t_submit = time.perf_counter()
         try:
             self._loop.call_soon_threadsafe(self._enqueue, ps, call)
         except RuntimeError:                # loop torn down under us
             ps.sem.release()
             raise RuntimeError("fleet has been closed") from None
         return call.future
+
+    def _submit_group(self, ps: _PlanState,
+                      calls: list[_Call]) -> list[CodedFuture]:
+        """Submit an explicitly-packed coalescing group: all calls land
+        on the plan queue in ONE loop callback and pump immediately, so
+        they form exactly one round (cap-exempt) when a slot is free --
+        the serve router's batch-dispatch primitive."""
+        if self._closed or ps.detached:
+            raise RuntimeError("fleet has been closed"
+                               if self._closed else "plan handle detached")
+        if self._all_dead is not None:
+            raise self._all_dead
+        acquired = 0
+        try:
+            for _ in calls:
+                if not ps.sem.acquire(blocking=self.admission != "shed"):
+                    ps.bump("shed")
+                    raise FleetDegraded(
+                        f"plan {ps.plan_id} admission queue is full "
+                        f"({self.queue_cap} unresolved calls); back off "
+                        f"and resubmit, or raise queue_cap",
+                        action="shed", plan_id=ps.plan_id)
+                acquired += 1
+            now = time.perf_counter()
+            for c in calls:
+                c.future._t_submit = now
+            ps.bump("submitted", len(calls))
+            self._loop.call_soon_threadsafe(self._enqueue_group, ps, calls)
+        except BaseException:
+            for _ in range(acquired):
+                ps.sem.release()
+            raise
+        return [c.future for c in calls]
+
+    def _enqueue_group(self, ps: _PlanState, calls: list[_Call]) -> None:
+        if ps.detached:
+            for c in calls:
+                c.future._finish(cancelled=True)
+            return
+        if self._all_dead is not None:
+            for c in calls:
+                c.future._finish(exc=self._all_dead)
+            return
+        ps.queue.extend(calls)
+        # the group is complete by construction -- nothing submitted
+        # later may join it -- so pump now instead of deferring
+        self._pump_queues()
 
     def _cancel_call(self, ps: _PlanState, future: CodedFuture) -> bool:
         if future.done():
@@ -739,7 +910,20 @@ class CodedFleet:
             call.future._finish(exc=self._all_dead)
             return
         ps.queue.append(call)
-        # defer the launch by one loop iteration: a burst of
+        # An idle fleet (no in-flight rounds, nothing else queued on
+        # any plan) has nothing this call could coalesce with, so
+        # launch NOW: deferring would add one loop iteration -- and,
+        # under load on the loop, many queued callbacks -- to every
+        # isolated low-load call (the inflight=1 latency pathology).
+        # With microbatching off the deferral buys nothing either.
+        if not self.microbatch or (
+                not self._rounds
+                and len(ps.queue) == 1
+                and not any(p.queue for p in self._plans.values()
+                            if p is not ps)):
+            self._pump_queues()
+            return
+        # Otherwise defer the launch by one loop iteration: a burst of
         # submissions (all sitting in this iteration's ready queue)
         # lands in the plan queues BEFORE the pump runs, so queued
         # matvecs coalesce instead of each grabbing its own in-flight
@@ -756,7 +940,8 @@ class CodedFleet:
     def _coalescible(self, a: _Call, b: _Call) -> bool:
         return (a.op == "matvec" and b.op == "matvec"
                 and not a.wait_all and not b.wait_all
-                and a.deadline == b.deadline)
+                and a.deadline == b.deadline
+                and a.group == b.group)
 
     def _pump_queues(self) -> None:
         """Launch queued calls while in-flight slots are free; queued
@@ -776,9 +961,14 @@ class CodedFleet:
             self._rr.remove(ps.plan_id)
             self._rr.append(ps.plan_id)
             batch = [ps.queue.popleft()]
-            if self.microbatch:
+            if self.microbatch or batch[0].group is not None:
+                cap = ps.microbatch_cols if ps.microbatch_cols is not None \
+                    else self.microbatch_cols
                 width = batch[0].width
-                while (ps.queue and width < self.microbatch_cols
+                # an explicit group (submit_matvec_many) was packed by
+                # its caller: it coalesces whole, exempt from the cap
+                while (ps.queue
+                       and (width < cap or batch[0].group is not None)
                        and self._coalescible(batch[0], ps.queue[0])):
                     nxt = ps.queue.popleft()
                     batch.append(nxt)
@@ -1455,8 +1645,14 @@ class CodedFleet:
             return
         rep.decode_s = time.perf_counter() - t_dec
         rep.wall_s = time.perf_counter() - rnd.t_start
-        rnd.ps.reports.append(rep)
+        ps = rnd.ps
+        ps.reports.append(rep)
+        ps.wall_ewma_s = rep.wall_s if ps.wall_ewma_s is None \
+            else 0.8 * ps.wall_ewma_s + 0.2 * rep.wall_s
+        ps.decode_ewma_s = rep.decode_s if ps.decode_ewma_s is None \
+            else 0.8 * ps.decode_ewma_s + 0.2 * rep.decode_s
         for call, value in zip(rnd.calls, values):
+            call.future.report = rep    # observability + parity replay
             call.future._finish(value=value)
         self._pump_queues()
 
@@ -1570,6 +1766,27 @@ class PlanHandle:
                 "bytes_shards": self._ps.bytes_shards,
                 "bytes_tasks_total": self._ps.bytes_tasks_total}
 
+    def metrics(self) -> dict:
+        """This plan's slice of ``fleet.metrics()``: queue depth,
+        in-flight rounds, latency EWMAs, resolution counters."""
+        snap = self.fleet.metrics()
+        mine = snap["plans"].get(self._ps.plan_id)
+        if mine is None:                # detached: static view
+            mine = self._ps.snapshot()
+            mine["inflight_rounds"] = 0
+        mine["fleet"] = {k: snap[k] for k in
+                         ("transport", "n_live", "max_inflight",
+                          "inflight_rounds", "worker_capacities")}
+        return mine
+
+    def set_microbatch_cols(self, cols: int | None) -> None:
+        """Dynamically retarget this plan's coalescing cap (``None``
+        falls back to the fleet default).  Takes effect at the next
+        pump; in-flight rounds are unaffected.  This is the knob the
+        serve router's adaptive-width feedback loop drives."""
+        self._ps.microbatch_cols = None if cols is None \
+            else max(1, int(cols))
+
     # -- lifecycle ---------------------------------------------------------
 
     def detach(self) -> None:
@@ -1610,11 +1827,8 @@ class PlanHandle:
 
     # -- async submission --------------------------------------------------
 
-    def submit_matvec(self, x, done=None, *,
-                      deadline: float | None = None) -> CodedFuture:
-        """A^T x as a future.  ``done=None`` races the workers (and may
-        be microbatched with other queued matvecs); an explicit mask
-        replays that exact pattern (parity mode, never coalesced)."""
+    def _make_matvec_call(self, x, done, deadline,
+                          group: int | None = None) -> _Call:
         ps = self._ps
         if ps.plan.kind != "mv":
             raise ValueError(f"matvec needs an mv plan, got {ps.plan.kind}")
@@ -1626,7 +1840,8 @@ class PlanHandle:
         b = xb.shape[0]
         call = _Call(op="matvec", future=CodedFuture(self.fleet, ps),
                      target=None, wait_all=False,
-                     deadline=self._deadline(deadline), width=b)
+                     deadline=self._deadline(deadline), width=b,
+                     group=group)
 
         def build(c: _Call) -> None:
             # everything geometry-dependent, derived from the plan
@@ -1654,7 +1869,30 @@ class PlanHandle:
         # explicit masks are in this plan version's task coordinates:
         # they cannot survive a re-encode, so they don't get a rebuild
         call.rebuild = None if done is not None else build
-        return self.fleet._submit_call(ps, call)
+        return call
+
+    def submit_matvec(self, x, done=None, *,
+                      deadline: float | None = None) -> CodedFuture:
+        """A^T x as a future.  ``done=None`` races the workers (and may
+        be microbatched with other queued matvecs); an explicit mask
+        replays that exact pattern (parity mode, never coalesced)."""
+        return self.fleet._submit_call(
+            self._ps, self._make_matvec_call(x, done, deadline))
+
+    def submit_matvec_many(self, xs, *, deadline: float | None = None
+                           ) -> list[CodedFuture]:
+        """Submit a pre-packed group of race-mode matvecs: the calls
+        coalesce into exactly ONE round (exempt from the microbatch
+        cap -- the caller already chose the width) but keep per-call
+        futures and per-call decode slices, so each result is bitwise
+        identical to the same call submitted solo.  The serve router
+        dispatches its adaptive batches through this."""
+        if not xs:
+            return []
+        grp = next(self.fleet._group_counter)
+        calls = [self._make_matvec_call(x, None, deadline, group=grp)
+                 for x in xs]
+        return self.fleet._submit_group(self._ps, calls)
 
     def submit_matmat(self, B, done=None, *,
                       deadline: float | None = None) -> CodedFuture:

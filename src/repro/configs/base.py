@@ -91,6 +91,17 @@ class CodedConfig:
     # consumers; whoever built the fleet closes it.  Overrides
     # cluster=/cluster_workers when set.
     fleet: object | None = None
+    # serve front door (repro.serve.Router): when set, the engine
+    # routes its coded head through router.submit(endpoint, ...,
+    # tenant=tenant) -- per-tenant weighted-fair queueing, adaptive
+    # microbatching, replica balancing.  If the endpoint is not yet
+    # registered the engine registers it on one owned replica fleet
+    # (cluster_workers workers on `transport`) and unregisters it on
+    # close(); a pre-registered endpoint is shared and left running.
+    # Overrides fleet=/cluster= when set.
+    router: object | None = None
+    endpoint: str = "lm-head"
+    tenant: str = "default"
 
 
 @dataclass(frozen=True)

@@ -30,7 +30,14 @@ shuts the transport down: sockets, heartbeat threads, processes).
 With ``CodedConfig.fleet`` the head instead *attaches* to a shared
 ``CodedFleet`` session -- same workers as the MoE experts and the
 gradient aggregator, rounds multiplexed over the fleet's persistent
-dispatcher loop -- and ``close()`` merely detaches.
+dispatcher loop -- and ``close()`` merely detaches.  With
+``CodedConfig.router`` the head goes through the serve front door
+(``repro.serve.Router``): logits calls are submitted to the named
+``CodedConfig.endpoint`` under ``CodedConfig.tenant``, flowing through
+per-tenant weighted-fair queues and adaptive microbatching across the
+endpoint's replica fleets; if the endpoint does not exist yet the
+engine registers it (one owned replica) and unregisters it on
+``close()``.
 """
 
 from __future__ import annotations
@@ -71,7 +78,9 @@ class ServeEngine:
             else StragglerFaults(rng=self.rng)
         self.coded = None
         self.coded_cluster = None
+        self.coded_router = None
         self._owns_cluster = True
+        self._owns_endpoint = False
         if coded is not None and coded.enabled:
             from ..api.schemes import scheme_info, scheme_names  # noqa: PLC0415
 
@@ -90,7 +99,23 @@ class ServeEngine:
                 n=coded.n_workers, s=coded.stragglers,
                 seed=coded.seed, backend=coded.backend or "auto")
             self.s = coded.stragglers
-            if coded.fleet is not None:
+            if coded.router is not None:
+                # serve front door: submit through the router's named
+                # endpoint under this engine's tenant.  A missing
+                # endpoint is registered here (one owned replica) and
+                # unregistered on close(); a pre-registered one is
+                # shared infrastructure and left alone.
+                self.coded_router = coded.router
+                self._router_endpoint = coded.endpoint
+                self._router_tenant = coded.tenant
+                self._owns_endpoint = not coded.router.has_endpoint(
+                    coded.endpoint)
+                if self._owns_endpoint:
+                    coded.router.register(
+                        coded.endpoint, self.coded, replicas=1,
+                        n_workers=coded.cluster_workers,
+                        transport=coded.transport)
+            elif coded.fleet is not None:
                 # shared session: attach to the externally-owned fleet
                 # (workers co-host other consumers' plans); close()
                 # detaches without tearing the fleet down
@@ -181,6 +206,11 @@ class ServeEngine:
         if self.coded is None:
             raise ValueError("engine built without coded config")
         mask = done if done is not None else self._straggler_mask()
+        if self.coded_router is not None:
+            out = self.coded_router.call(
+                self._router_endpoint, hidden, done=mask,
+                tenant=self._router_tenant)
+            return out.astype(hidden.dtype)
         head = self.coded_cluster if self.coded_cluster is not None \
             else self.coded
         return head.matvec(hidden, mask).astype(hidden.dtype)
@@ -195,6 +225,12 @@ class ServeEngine:
         fleet`` is only detached: the fleet and its workers keep
         serving the other consumers, and its owner closes it.
         """
+        if self.coded_router is not None:
+            if self._owns_endpoint:
+                # drain + detach the endpoint this engine registered;
+                # the router itself belongs to whoever built it
+                self.coded_router.unregister(self._router_endpoint)
+            self.coded_router = None
         if self.coded_cluster is not None:
             if self._owns_cluster:
                 self.coded_cluster.shutdown()

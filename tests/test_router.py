@@ -1,0 +1,433 @@
+"""Serve-router suite (repro.serve.router).
+
+Covers: bitwise parity of routed calls vs direct ``PlanHandle`` calls
+on all three transports (explicit-mask replay and race-mode observed-
+pattern replay), weighted-fair stride determinism under a fixed seed
+(two identical runs produce identical dispatch sequences, service
+ratios track tenant weights), tenant isolation (deadline expiry and
+shed-admission backpressure scoped to one tenant, the other's calls
+untouched), the adaptive width feedback loop (ramps under backlog,
+collapses when idle), live config push (``configure`` / ``swap_plan`` /
+``add_replica`` / ``remove_replica`` without dropping traffic), the
+``ServeEngine`` front-door integration (``CodedConfig.router``), and
+shutdown hygiene (idempotent ``close``, ``unregister`` scoped to one
+endpoint, no leaked scheduler/fleet/worker threads).
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CodedFleet, compile_plan
+from repro.api.fleet import FleetDegraded
+from repro.serve import Router
+
+TOL = dict(rtol=5e-3, atol=5e-3)
+FLEET_THREADS = ("repro-router-sched", "coded-fleet", "cluster-worker",
+                 "cluster-beat")
+
+
+def block_sparse(rng, t, r, zeros, bs=8, dtype=np.float32):
+    mask = rng.random((t // bs, r // bs)) >= zeros
+    a = rng.standard_normal((t, r)).astype(dtype)
+    return a * np.kron(mask, np.ones((bs, bs), dtype))
+
+
+@pytest.fixture(scope="module")
+def operands():
+    rng = np.random.default_rng(7)
+    t, r = 256, 144
+    A = jnp.asarray(block_sparse(rng, t, r, 0.98))
+    xs = jnp.asarray(rng.standard_normal((10, 4, t)), jnp.float32)
+    return A, xs
+
+
+@pytest.fixture(scope="module")
+def plan(operands):
+    A, _ = operands
+    return compile_plan(A, scheme="proposed", n=6, s=2, backend="packed")
+
+
+def leftover_threads():
+    return [t.name for t in threading.enumerate()
+            if t.name.startswith(FLEET_THREADS)]
+
+
+# ---------------------------------------------------------------------------
+# Parity: routed == direct PlanHandle, all transports
+# ---------------------------------------------------------------------------
+
+
+class TestRoutedParity:
+    @pytest.mark.parametrize("transport", ["memory", "pipe", "tcp"])
+    def test_explicit_mask_bitwise_vs_direct_handle(self, operands, plan,
+                                                    transport):
+        if transport != "memory":
+            pytest.importorskip("scipy")
+        A, xs = operands
+        done = np.ones(6, bool)
+        done[[1, 4]] = False
+        with Router() as router, \
+                CodedFleet(6, transport=transport) as ref_fleet:
+            router.register("head", plan, replicas=1, n_workers=6,
+                            transport=transport)
+            h = ref_fleet.attach(plan)
+            for i in range(3):
+                routed = np.asarray(router.call("head", xs[i], done=done))
+                direct = np.asarray(h.matvec(xs[i], done))
+                np.testing.assert_array_equal(routed, direct)
+
+    def test_race_mode_observed_pattern_bitwise(self, operands, plan):
+        # batched race-mode calls carry their round's observed pattern
+        # in fut.report; replaying it against a direct handle must
+        # reproduce every routed result bit for bit
+        A, xs = operands
+        with Router() as router, CodedFleet(6) as ref_fleet:
+            router.register("head", plan, replicas=1, n_workers=6)
+            router.pause()
+            futs = [router.submit("head", xs[i]) for i in range(6)]
+            router.resume()
+            outs = [np.asarray(f.result(30)) for f in futs]
+            h = ref_fleet.attach(plan)
+            for i, f in enumerate(futs):
+                want = np.asarray(h.matvec(xs[i], done=f.report.pattern))
+                np.testing.assert_array_equal(outs[i], want)
+
+    def test_batched_calls_share_one_round(self, operands, plan):
+        A, xs = operands
+        with Router(batch_wait_s=0.05) as router:
+            router.register("head", plan, replicas=1, n_workers=6,
+                            adaptive=False, width=64)
+            router.pause()
+            futs = [router.submit("head", xs[i]) for i in range(5)]
+            router.resume()
+            [f.result(30) for f in futs]
+            log = router.dispatch_log("head")
+        assert len(log) == 1 and log[0]["calls"] == 5
+        reports = {id(f.report) for f in futs}
+        assert len(reports) == 1        # one fleet round served them all
+
+
+# ---------------------------------------------------------------------------
+# Weighted-fair scheduling
+# ---------------------------------------------------------------------------
+
+
+def run_contended(plan, xs, *, weights, calls=12):
+    """Pause, queue `calls` per tenant, resume; return the dispatch
+    sequence [(tenant, cols)...] and per-tenant resolved counts."""
+    with Router(batch_wait_s=0.002) as router:
+        router.register("head", plan, replicas=1, n_workers=6,
+                        adaptive=False, width=8, max_inflight=2)
+        for name, w in weights.items():
+            router.set_tenant(name, weight=w)
+        router.pause()
+        futs = []
+        for i in range(calls):
+            for name in weights:
+                futs.append(router.submit("head", xs[i % len(xs)],
+                                          tenant=name))
+        router.resume()
+        [f.result(60) for f in futs]
+        log = router.dispatch_log("head")
+        m = router.metrics()["endpoints"]["head"]["tenants"]
+    seq = [(e["tenant"], e["cols"]) for e in log]
+    resolved = {t: v["counters"]["resolved"] for t, v in m.items()}
+    return seq, resolved
+
+
+class TestWeightedFair:
+    def test_dispatch_sequence_deterministic(self, operands, plan):
+        A, xs = operands
+        seq1, res1 = run_contended(plan, xs, weights={"pro": 3.0,
+                                                      "free": 1.0})
+        seq2, res2 = run_contended(plan, xs, weights={"pro": 3.0,
+                                                      "free": 1.0})
+        assert seq1 == seq2             # stride order, batch widths
+        assert res1 == res2 == {"pro": 12, "free": 12}
+
+    def test_service_tracks_weights_under_contention(self, operands, plan):
+        A, xs = operands
+        seq, _ = run_contended(plan, xs, weights={"pro": 3.0, "free": 1.0},
+                               calls=16)
+        # while both tenants still queue, cumulative service converges
+        # to the weight ratio (round granularity allows +-1 round)
+        served = {"pro": 0, "free": 0}
+        backlog = {"pro": 16 * 4, "free": 16 * 4}
+        for tenant, cols in seq:
+            if min(backlog.values()) <= 0:
+                break
+            served[tenant] += cols
+            backlog[tenant] -= cols
+        ratio = served["pro"] / max(served["free"], 1)
+        assert 2.0 <= ratio <= 4.5, f"3:1 weights served {ratio:.2f}:1"
+
+    def test_no_starvation_on_equal_weights(self, operands, plan):
+        A, xs = operands
+        seq, resolved = run_contended(plan, xs,
+                                      weights={"a": 1.0, "b": 1.0})
+        assert resolved == {"a": 12, "b": 12}
+        # alternating stride: neither tenant dispatches 3 rounds in a
+        # row while the other still queues
+        tenants = [t for t, _ in seq]
+        runs = max(len(list(g)) for _, g in __import__("itertools")
+                   .groupby(tenants[:-2]))
+        assert runs <= 2
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation
+# ---------------------------------------------------------------------------
+
+
+class TestTenantIsolation:
+    def test_deadline_expiry_scoped_to_tenant(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            router.pause()                      # hold everything queued
+            doomed = [router.submit("head", xs[i], tenant="slow",
+                                    deadline=0.02) for i in range(3)]
+            safe = [router.submit("head", xs[i], tenant="fast")
+                    for i in range(3)]
+            time.sleep(0.1)                     # the deadline passes
+            router.resume()
+            for f in doomed:
+                with pytest.raises(TimeoutError):
+                    f.result(30)
+            for f in safe:                      # untouched neighbors
+                np.testing.assert_allclose(
+                    np.asarray(f.result(30)),
+                    np.asarray(xs[safe.index(f)] @ A), **TOL)
+            m = router.metrics()["endpoints"]["head"]["tenants"]
+            assert m["slow"]["counters"]["deadline_hit"] == 3
+            assert m["fast"]["counters"]["failed"] == 0
+
+    def test_shed_admission_scoped_to_tenant(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            router.set_tenant("burst", queue_cap=2, admission="shed")
+            router.pause()
+            kept = [router.submit("head", xs[i], tenant="burst")
+                    for i in range(2)]
+            with pytest.raises(FleetDegraded) as ei:
+                router.submit("head", xs[2], tenant="burst")
+            assert ei.value.action == "shed"
+            # the full neighbor never blocks the other tenant's lane
+            other = router.submit("head", xs[3], tenant="steady")
+            router.resume()
+            for f in [*kept, other]:
+                assert f.result(30) is not None
+            m = router.metrics()["endpoints"]["head"]["tenants"]
+            assert m["burst"]["counters"]["shed"] == 1
+            assert m["steady"]["counters"]["resolved"] == 1
+
+    def test_cancel_queued_call(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            router.pause()
+            fut = router.submit("head", xs[0], tenant="t")
+            assert fut.cancel()
+            router.resume()
+            assert fut.cancelled()
+            m = router.metrics()["endpoints"]["head"]["tenants"]
+            assert m["t"]["counters"]["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Adaptive microbatching feedback
+# ---------------------------------------------------------------------------
+
+
+class TestAdaptiveWidth:
+    def test_width_ramps_under_backlog_and_collapses_idle(self, operands,
+                                                          plan):
+        A, xs = operands
+        with Router(batch_wait_s=0.002) as router:
+            router.register("head", plan, replicas=1, n_workers=6,
+                            min_cols=1, max_cols=64)
+            assert router.metrics()["endpoints"]["head"]["width"] == 1
+            router.pause()
+            futs = [router.submit("head", xs[i % len(xs)])
+                    for i in range(24)]
+            router.resume()
+            [f.result(60) for f in futs]
+            log = router.dispatch_log("head")
+            grown = router.metrics()["endpoints"]["head"]["width"]
+            assert grown > 1            # backlog pushed the width up
+            assert max(e["cols"] for e in log) > 4
+            for _ in range(8):          # idle: solo closed-loop calls
+                router.call("head", xs[0])
+            shrunk = router.metrics()["endpoints"]["head"]["width"]
+            assert shrunk == 1          # collapsed, no collection window
+
+    def test_static_width_is_frozen(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6,
+                            adaptive=False, width=8)
+            router.pause()
+            futs = [router.submit("head", xs[i % len(xs)])
+                    for i in range(16)]
+            router.resume()
+            [f.result(60) for f in futs]
+            assert router.metrics()["endpoints"]["head"]["width"] == 8
+            assert all(e["cols"] <= 8 + 4        # one call may overshoot
+                       for e in router.dispatch_log("head"))
+
+
+# ---------------------------------------------------------------------------
+# Config push without dropping traffic
+# ---------------------------------------------------------------------------
+
+
+class TestConfigPush:
+    def test_configure_retunes_live(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6,
+                            adaptive=False, width=4)
+            router.call("head", xs[0])
+            router.configure("head", width=32, batch_wait_s=0.001)
+            m = router.metrics()["endpoints"]["head"]
+            assert m["width"] == 32 and m["batch_wait_s"] == 0.001
+
+    def test_swap_plan_mid_traffic(self, operands, plan):
+        A, xs = operands
+        plan2 = compile_plan(A, scheme="cyclic31", n=6, s=2,
+                             backend="packed")
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            router.pause()
+            before = [router.submit("head", xs[i]) for i in range(3)]
+            router.resume()
+            router.swap_plan("head", plan2)
+            after = [router.submit("head", xs[i]) for i in range(3)]
+            for f in [*before, *after]:     # nothing dropped either side
+                i = (before + after).index(f) % 3
+                np.testing.assert_allclose(np.asarray(f.result(30)),
+                                           np.asarray(xs[i] @ A), **TOL)
+
+    def test_add_remove_replica_live(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            idx = router.add_replica("head", n_workers=6)
+            futs = [router.submit("head", xs[i % len(xs)])
+                    for i in range(12)]
+            [f.result(30) for f in futs]
+            assert len(router.metrics()["endpoints"]["head"]
+                       ["replicas"]) == 2
+            router.remove_replica("head", idx)
+            m = router.metrics()["endpoints"]["head"]["replicas"]
+            assert [r["index"] for r in m] == [0]
+            np.testing.assert_allclose(       # survivor still serves
+                np.asarray(router.call("head", xs[0])),
+                np.asarray(xs[0] @ A), **TOL)
+
+    def test_remove_last_replica_refuses(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            with pytest.raises(ValueError, match="last live replica"):
+                router.remove_replica("head", 0)
+
+    def test_replicas_balance_load(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=2, n_workers=6,
+                            adaptive=False, width=4, max_inflight=2)
+            router.pause()
+            futs = [router.submit("head", xs[i % len(xs)])
+                    for i in range(16)]
+            router.resume()
+            [f.result(60) for f in futs]
+            used = {e["replica"] for e in router.dispatch_log("head")}
+            assert used == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# Engine front door + shutdown hygiene
+# ---------------------------------------------------------------------------
+
+
+class TestEngineFrontDoor:
+    def test_engine_routes_coded_head_as_tenant(self):
+        import jax  # noqa: PLC0415
+
+        from repro.configs import get_smoke_config  # noqa: PLC0415
+        from repro.configs.base import CodedConfig  # noqa: PLC0415
+        from repro.models import build_model  # noqa: PLC0415
+        from repro.serve import ServeEngine  # noqa: PLC0415
+
+        cfg = get_smoke_config("qwen3-14b")
+        model = build_model(cfg, dtype=jnp.float32)
+        params = model.init(jax.random.key(0))
+        router = Router()
+        try:
+            engine = ServeEngine(
+                model, params, cfg, batch_size=2, max_len=32,
+                coded=CodedConfig(enabled=True, n_workers=6, stragglers=2,
+                                  router=router, tenant="engine"))
+            assert router.has_endpoint("lm-head")
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["head"])
+            hidden = jnp.asarray(np.random.default_rng(0)
+                                 .standard_normal((2, cfg.d_model)),
+                                 jnp.float32)
+            logits = engine.coded_logits(hidden)
+            np.testing.assert_allclose(np.asarray(logits),
+                                       np.asarray(hidden @ head), **TOL)
+            m = router.metrics()["endpoints"]["lm-head"]["tenants"]
+            assert m["engine"]["counters"]["resolved"] == 1
+            engine.close()              # engine owns the endpoint...
+            assert not router.has_endpoint("lm-head")
+        finally:
+            router.close()              # ...its builder owns the router
+
+
+class TestRouterLifecycle:
+    def test_close_is_idempotent_and_leaks_nothing(self, operands, plan):
+        A, xs = operands
+        router = Router()
+        router.register("head", plan, replicas=2, n_workers=6)
+        futs = [router.submit("head", xs[i]) for i in range(4)]
+        router.close()
+        router.close()                  # second close is a no-op
+        for f in futs:                  # drained, not dropped
+            assert f.result(1) is not None
+        time.sleep(0.3)
+        assert leftover_threads() == []
+        with pytest.raises(RuntimeError):
+            router.submit("head", xs[0])
+
+    def test_unregister_scoped_to_endpoint(self, operands, plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            router.register("aux", plan, replicas=1, n_workers=6)
+            router.call("head", xs[0])
+            router.unregister("head")
+            assert router.endpoints() == ["aux"]
+            with pytest.raises(ValueError, match="no endpoint"):
+                router.submit("head", xs[0])
+            np.testing.assert_allclose(     # the survivor keeps serving
+                np.asarray(router.call("aux", xs[0])),
+                np.asarray(xs[0] @ A), **TOL)
+
+    def test_external_fleets_survive_router_close(self, operands, plan):
+        A, xs = operands
+        with CodedFleet(6) as fleet:
+            router = Router()
+            router.register("head", plan, fleets=[fleet])
+            np.testing.assert_allclose(np.asarray(
+                router.call("head", xs[0])), np.asarray(xs[0] @ A), **TOL)
+            router.close()
+            h = fleet.attach(plan)      # not closed by the router
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[0])),
+                                       np.asarray(xs[0] @ A), **TOL)
