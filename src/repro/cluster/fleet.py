@@ -808,14 +808,18 @@ class CodedFleet:
 
     # -- submission (caller threads) ---------------------------------------
 
-    def _submit_call(self, ps: _PlanState, call: _Call) -> CodedFuture:
+    def _submit_call(self, ps: _PlanState, call: _Call, *,
+                     block: bool | None = None) -> CodedFuture:
         if self._closed or ps.detached:
             raise RuntimeError("fleet has been closed"
                                if self._closed else "plan handle detached")
         if self._all_dead is not None:
             raise self._all_dead
-        # bounded-queue backpressure: block (default) or shed
-        if not ps.sem.acquire(blocking=self.admission != "shed"):
+        # bounded-queue backpressure: block (fleet default) or shed;
+        # ``block`` overrides per call (the serve router submits
+        # non-blocking so its scheduler thread can never stall here)
+        if not ps.sem.acquire(blocking=self.admission != "shed"
+                              if block is None else block):
             ps.bump("shed")
             raise FleetDegraded(
                 f"plan {ps.plan_id} admission queue is full "
@@ -831,21 +835,37 @@ class CodedFleet:
             raise RuntimeError("fleet has been closed") from None
         return call.future
 
-    def _submit_group(self, ps: _PlanState,
-                      calls: list[_Call]) -> list[CodedFuture]:
+    def _submit_group(self, ps: _PlanState, calls: list[_Call], *,
+                      block: bool | None = None) -> list[CodedFuture]:
         """Submit an explicitly-packed coalescing group: all calls land
         on the plan queue in ONE loop callback and pump immediately, so
         they form exactly one round (cap-exempt) when a slot is free --
-        the serve router's batch-dispatch primitive."""
+        the serve router's batch-dispatch primitive.
+
+        Admission is all-or-nothing: the group holds ``len(calls)``
+        queue slots or none.  ``block=False`` sheds instead of waiting
+        (``FleetDegraded``), releasing every slot acquired so far --
+        callers on a scheduler thread must use it, because a blocking
+        group wider than the free queue capacity would hold its partial
+        slots while waiting for slots only its own unsubmitted calls
+        could ever free."""
         if self._closed or ps.detached:
             raise RuntimeError("fleet has been closed"
                                if self._closed else "plan handle detached")
         if self._all_dead is not None:
             raise self._all_dead
+        if len(calls) > self.queue_cap:
+            # wider than the whole queue: could never admit, even empty
+            # (a blocking acquire would self-deadlock, a shed would
+            # make every retry futile) -- reject loudly instead
+            raise ValueError(
+                f"group of {len(calls)} calls exceeds queue_cap="
+                f"{self.queue_cap}; split the group or raise queue_cap")
         acquired = 0
         try:
             for _ in calls:
-                if not ps.sem.acquire(blocking=self.admission != "shed"):
+                if not ps.sem.acquire(blocking=self.admission != "shed"
+                                      if block is None else block):
                     ps.bump("shed")
                     raise FleetDegraded(
                         f"plan {ps.plan_id} admission queue is full "
@@ -1872,27 +1892,33 @@ class PlanHandle:
         return call
 
     def submit_matvec(self, x, done=None, *,
-                      deadline: float | None = None) -> CodedFuture:
+                      deadline: float | None = None,
+                      block: bool | None = None) -> CodedFuture:
         """A^T x as a future.  ``done=None`` races the workers (and may
         be microbatched with other queued matvecs); an explicit mask
-        replays that exact pattern (parity mode, never coalesced)."""
+        replays that exact pattern (parity mode, never coalesced).
+        ``block`` overrides the fleet's admission policy for this call
+        (``False`` sheds instead of waiting on a full queue)."""
         return self.fleet._submit_call(
-            self._ps, self._make_matvec_call(x, done, deadline))
+            self._ps, self._make_matvec_call(x, done, deadline),
+            block=block)
 
-    def submit_matvec_many(self, xs, *, deadline: float | None = None
-                           ) -> list[CodedFuture]:
+    def submit_matvec_many(self, xs, *, deadline: float | None = None,
+                           block: bool | None = None) -> list[CodedFuture]:
         """Submit a pre-packed group of race-mode matvecs: the calls
         coalesce into exactly ONE round (exempt from the microbatch
         cap -- the caller already chose the width) but keep per-call
         futures and per-call decode slices, so each result is bitwise
         identical to the same call submitted solo.  The serve router
-        dispatches its adaptive batches through this."""
+        dispatches its adaptive batches through this.  Admission is
+        all-or-nothing; ``block=False`` sheds rather than waiting (a
+        scheduler thread must never park inside fleet admission)."""
         if not xs:
             return []
         grp = next(self.fleet._group_counter)
         calls = [self._make_matvec_call(x, None, deadline, group=grp)
                  for x in xs]
-        return self.fleet._submit_group(self._ps, calls)
+        return self.fleet._submit_group(self._ps, calls, block=block)
 
     def submit_matmat(self, B, done=None, *,
                       deadline: float | None = None) -> CodedFuture:

@@ -111,10 +111,19 @@ class ServeEngine:
                 self._owns_endpoint = not coded.router.has_endpoint(
                     coded.endpoint)
                 if self._owns_endpoint:
-                    coded.router.register(
-                        coded.endpoint, self.coded, replicas=1,
-                        n_workers=coded.cluster_workers,
-                        transport=coded.transport)
+                    try:
+                        coded.router.register(
+                            coded.endpoint, self.coded, replicas=1,
+                            n_workers=coded.cluster_workers,
+                            transport=coded.transport)
+                    except (ValueError, RuntimeError):
+                        # the has_endpoint/register pair is not atomic:
+                        # another engine may register the same endpoint
+                        # in between.  Losing that race is not an error
+                        # -- fall back to sharing the winner's endpoint
+                        if not coded.router.has_endpoint(coded.endpoint):
+                            raise
+                        self._owns_endpoint = False
             elif coded.fleet is not None:
                 # shared session: attach to the externally-owned fleet
                 # (workers co-host other consumers' plans); close()

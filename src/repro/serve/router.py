@@ -40,7 +40,14 @@ until decode amortization saturates.  ``adaptive=False`` freezes ``w``
 (the static cap the feedback loop replaces).  Batches go to the fleet
 via ``PlanHandle.submit_matvec_many`` -- one round, per-call decode
 slices -- so every routed result is **bitwise identical** to the same
-call submitted solo against the handle.
+call submitted solo against the handle.  Dispatch never blocks: the
+router tracks each replica's unresolved calls and clamps every batch
+to the fleet's free admission slots (``queue_cap``), submitting
+non-blocking -- so one saturated endpoint can neither deadlock the
+scheduler nor head-of-line-block other endpoints' tenants.  Fleets
+the router creates itself get ``queue_cap >= max_cols`` so the clamp
+never limits the adaptive width; for externally-owned fleets the
+effective width tops out at their ``queue_cap``.
 
 Replica balancing picks the live, non-draining replica with the
 fewest outstanding columns (``least-loaded``, default) or cycles
@@ -101,8 +108,8 @@ class _TenantConfig:
     deadline: float | None = None       # default per-call deadline
 
 
-@dataclass
-class _RCall:
+@dataclass(eq=False)        # identity semantics: hashable, and queue
+class _RCall:               # membership never aliases equal-field calls
     """One routed call, queued under its (endpoint, tenant)."""
 
     x: object                           # operand exactly as submitted
@@ -146,11 +153,19 @@ class _Replica:
         self.owned = owned
         self.draining = False
         self.outstanding: dict = {}     # handle -> in-flight batches
+        self.out_calls: dict = {}       # handle -> unresolved calls
         self.out_cols = 0
         self.dispatched = 0             # lifetime batches
 
     def total_outstanding(self) -> int:
         return sum(self.outstanding.values())
+
+    def free_calls(self) -> int:
+        """Unused fleet admission slots on the current handle.  The
+        router is the handle's only submitter, so this budget is exact:
+        a batch clamped to it can never block (or shed) in fleet
+        admission."""
+        return self.fleet.queue_cap - self.out_calls.get(self.handle, 0)
 
 
 class _Endpoint:
@@ -169,6 +184,8 @@ class _Endpoint:
         self.depth_ewma = 0.0
         self.vtime = 0.0                # pass of the last dispatched tenant
         self.rr = 0                     # round-robin replica cursor
+        self.next_rindex = len(replicas)  # monotonic: never reuse an index
+        self.inflight: set = set()      # dispatched, unresolved _RCalls
         self.draining = False
         self.log: deque[dict] = deque(maxlen=2048)
 
@@ -274,10 +291,15 @@ class Router:
                 if fleets is not None:
                     fleet, owned = fleets[i], False
                 else:
+                    # queue_cap >= max_cols: a full-width adaptive batch
+                    # must fit the fleet's admission queue, or the
+                    # per-replica call budget would clamp it back down
                     fleet, owned = CodedFleet(
                         n_workers if n_workers is not None else plans[i].n,
                         transport=transport,
-                        max_inflight=max_inflight or 4), True
+                        max_inflight=max_inflight or 4,
+                        queue_cap=max(4 * (max_inflight or 4), 32,
+                                      max_cols)), True
                 reps.append(_Replica(i, fleet, fleet.attach(plans[i]),
                                      owned))
         except BaseException:
@@ -387,15 +409,19 @@ class Router:
                     transport: str | None = None,
                     max_inflight: int | None = None) -> int:
         """Grow an endpoint's replica set live; returns the new replica
-        index.  The new fleet serves from the next dispatch on."""
+        index (monotonic -- an index removed by ``remove_replica`` is
+        never reissued).  The new fleet serves from the next dispatch
+        on."""
         with self._cond:
             ep = self._ep(name)
             plan = ep.plan
+            max_cols = ep.max_cols
         owned = fleet is None
         if owned:
             fleet = CodedFleet(
                 n_workers if n_workers is not None else plan.n,
-                transport=transport, max_inflight=max_inflight or 4)
+                transport=transport, max_inflight=max_inflight or 4,
+                queue_cap=max(4 * (max_inflight or 4), 32, max_cols))
         try:
             handle = fleet.attach(plan)
         except BaseException:
@@ -403,7 +429,8 @@ class Router:
                 fleet.close()
             raise
         with self._cond:
-            r = _Replica(len(ep.replicas), fleet, handle, owned)
+            r = _Replica(ep.next_rindex, fleet, handle, owned)
+            ep.next_rindex += 1
             ep.replicas.append(r)
             self._cond.notify_all()
             return r.index
@@ -577,19 +604,25 @@ class Router:
                     f"{tq.name!r}, endpoint {ep.name!r})")))
         return out
 
+    def _flush_tq_locked(self, tq: _TenantQueue, exc):
+        """Fail a tenant queue's still-queued calls: state flips,
+        counters bump, and each admission slot is released -- a flushed
+        call must leave no trace a blocked submitter could wait on."""
+        if not tq.queue:
+            return []
+        drop = list(tq.queue)
+        tq.queue.clear()
+        for c in drop:
+            c.state = "done"
+            tq.counters["failed"] += 1
+            tq.sem.release()
+        return [(drop, exc)]
+
     def _flush_locked(self, exc):
         out = []
         for ep in self._endpoints.values():
             for tq in ep.tenants.values():
-                if not tq.queue:
-                    continue
-                drop = list(tq.queue)
-                tq.queue.clear()
-                for c in drop:
-                    c.state = "done"
-                    tq.counters["failed"] += 1
-                    tq.sem.release()
-                out.append((drop, exc))
+                out.extend(self._flush_tq_locked(tq, exc))
         return out
 
     def _drained_locked(self) -> bool:
@@ -602,7 +635,8 @@ class Router:
     def _pick_replica_locked(self, ep: _Endpoint) -> _Replica | None:
         live = [r for r in ep.replicas if not r.draining
                 and not r.fleet._closed
-                and r.total_outstanding() < r.fleet.max_inflight]
+                and r.total_outstanding() < r.fleet.max_inflight
+                and r.free_calls() >= 1]
         if not live:
             return None
         if self.balancer == "round-robin":
@@ -641,10 +675,18 @@ class Router:
                     remain = min(remain, head.deadline_at - now)
                 wait_s = min(wait_s, max(remain, 1e-3))
                 continue
+            # the batch may not outgrow the replica's free admission
+            # slots (1 call = 1 slot): the fleet submit then always
+            # admits without blocking -- an unclamped batch wider than
+            # queue_cap would park the scheduler thread in admission
+            # forever, as only its own unsubmitted calls could free
+            # the slots it waits for
+            budget = replica.free_calls()
             batch = [tq.queue.popleft()]
             if head.done is None:
                 cols = head.cols
                 while (tq.queue and cols < ep.width
+                       and len(batch) < budget
                        and tq.queue[0].done is None
                        and tq.queue[0].deadline_s == head.deadline_s):
                     nxt = tq.queue.popleft()
@@ -670,10 +712,13 @@ class Router:
             handle = replica.handle
             replica.outstanding[handle] = \
                 replica.outstanding.get(handle, 0) + 1
+            replica.out_calls[handle] = \
+                replica.out_calls.get(handle, 0) + len(batch)
             replica.out_cols += cols
             replica.dispatched += 1
             for c in batch:
                 c.state = "dispatched"
+                ep.inflight.add(c)
                 tq.sem.release()        # admission bounds the queue
             tq.counters["dispatched"] += len(batch)
             tq.counters["dispatched_cols"] += cols
@@ -688,8 +733,14 @@ class Router:
         return None, wait_s
 
     def _dispatch(self, job: _Job) -> None:
-        """Hand one single-tenant batch to its replica fleet (outside
-        the router condition -- the fleet may block on admission)."""
+        """Hand one single-tenant batch to its replica fleet, outside
+        the router condition.  Submission is non-blocking
+        (``block=False``): the batch was clamped to the replica's free
+        call budget at pick time, so admission always has room and the
+        scheduler thread never parks inside a fleet -- one saturated
+        endpoint cannot head-of-line-block every other endpoint and
+        tenant.  A shed (impossible for router-owned handles; a defense
+        against external budget drift) fails only this batch."""
         batch = job.batch
         now = time.perf_counter()
         dls = [c.deadline_at for c in batch if c.deadline_at is not None]
@@ -697,18 +748,22 @@ class Router:
         try:
             if batch[0].done is not None:
                 inners = [job.handle.submit_matvec(
-                    batch[0].x, batch[0].done, deadline=deadline)]
+                    batch[0].x, batch[0].done, deadline=deadline,
+                    block=False)]
             elif len(batch) == 1:
                 inners = [job.handle.submit_matvec(
-                    batch[0].x, deadline=deadline)]
+                    batch[0].x, deadline=deadline, block=False)]
             else:
                 inners = job.handle.submit_matvec_many(
-                    [c.x for c in batch], deadline=deadline)
+                    [c.x for c in batch], deadline=deadline, block=False)
         except BaseException as e:  # noqa: BLE001 - scoped to this batch
             with self._cond:
                 for c in batch:
                     c.state = "done"
+                    job.ep.inflight.discard(c)
                 job.tq.counters["failed"] += len(batch)
+                self._uncount_calls_locked(job.replica, job.handle,
+                                           len(batch))
                 self._retire_locked(job)
                 job.remaining = 0
                 self._cond.notify_all()
@@ -718,6 +773,16 @@ class Router:
         for c, inner in zip(batch, inners):
             inner.add_done_callback(
                 functools.partial(self._on_inner, job, c))
+
+    def _uncount_calls_locked(self, r: _Replica, handle, n: int) -> None:
+        """Return ``n`` fleet admission slots to the replica's call
+        budget (one per resolved call -- mirrors the fleet releasing
+        ``ps.sem`` per future)."""
+        left = r.out_calls.get(handle, 0) - n
+        if left > 0:
+            r.out_calls[handle] = left
+        else:
+            r.out_calls.pop(handle, None)
 
     def _retire_locked(self, job: _Job) -> None:
         """Give back a batch's replica slot; queue the retiring handle
@@ -751,6 +816,8 @@ class Router:
             rc.future._finish(value=val)
         with self._cond:
             rc.state = "done"
+            job.ep.inflight.discard(rc)
+            self._uncount_calls_locked(job.replica, job.handle, 1)
             tq = job.tq
             if cancelled:
                 tq.counters["cancelled"] += 1
@@ -794,7 +861,10 @@ class Router:
                          "transport": r.fleet.transport_name,
                          "draining": r.draining,
                          "outstanding_batches": r.total_outstanding(),
+                         "outstanding_calls": sum(r.out_calls.values()),
                          "outstanding_cols": r.out_cols,
+                         "queue_cap": r.fleet.queue_cap,
+                         "free_calls": r.free_calls(),
                          "dispatched": r.dispatched}
                         for r in ep.replicas]}
             return {"balancer": self.balancer,
@@ -831,7 +901,11 @@ class Router:
     def unregister(self, name: str, *, timeout: float = 30.0) -> None:
         """Drain one endpoint out of the router: queued calls dispatch,
         in-flight rounds land, then handles detach and owned fleets
-        close.  Other endpoints keep serving."""
+        close.  Other endpoints keep serving.  On drain timeout every
+        leftover call -- still queued OR already in flight -- fails
+        with the unregister error (queues are flushed for real: state,
+        counters, and admission slots all settle) before the fleets
+        close, so no caller observes a bare cancellation."""
         with self._cond:
             ep = self._endpoints.get(name)
             if ep is None:
@@ -842,12 +916,22 @@ class Router:
                 lambda: all(not tq.queue for tq in ep.tenants.values())
                 and ep.outstanding() == 0, timeout)
             del self._endpoints[name]
-        if not drained:
-            for rcs, exc in [(list(tq.queue), RuntimeError(
-                    f"endpoint {name!r} unregistered"))
-                    for tq in ep.tenants.values()]:
-                for rc in rcs:
-                    rc.future._finish(exc=exc)
+            finish = []
+            if not drained:
+                exc = RuntimeError(
+                    f"endpoint {name!r} unregistered before its calls "
+                    f"drained ({timeout}s timeout)")
+                for tq in ep.tenants.values():
+                    finish.extend(self._flush_tq_locked(tq, exc))
+                # in-flight rounds: fail the routed futures first
+                # (CodedFuture is first-wins) -- closing the owned
+                # fleets below cancels the inner rounds, which must
+                # not surface as cancellation to the caller
+                finish.append((list(ep.inflight), exc))
+                ep.inflight.clear()
+        for rcs, exc in finish:
+            for rc in rcs:
+                rc.future._finish(exc=exc)
         self._close_endpoint(ep)
 
     def _close_endpoint(self, ep: _Endpoint) -> None:

@@ -945,6 +945,51 @@ class TestDynamicCoalescing:
                 want = np.asarray(plan.matvec(xs[i], jnp.asarray(pat)))
                 np.testing.assert_array_equal(out, want)
 
+    def test_submit_group_wider_than_queue_cap_rejected(self, operands):
+        # a group wider than the whole admission queue can never be
+        # admitted, even against an idle fleet: blocking would self-
+        # deadlock (only its own unsubmitted calls could free slots),
+        # shedding would make every retry futile -- reject loudly
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6, queue_cap=4) as fleet:
+            h = fleet.attach(plan)
+            with pytest.raises(ValueError, match="queue_cap"):
+                h.submit_matvec_many([xs[i % 3] for i in range(5)])
+
+    def test_group_nonblocking_shed_is_all_or_nothing(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+
+        class FixedDelay:
+            """Bounded 2s sleep per task: holds admission slots through
+            the shed assertions without leaving workers asleep past
+            fleet close (unlike an unbounded exponential tail)."""
+
+            def delay(self, worker, task_row, work):
+                return 2.0
+
+            def should_fail(self, worker, tasks_done):
+                return False
+
+        with CodedFleet(6, faults=FixedDelay(), queue_cap=3,
+                        max_inflight=1, microbatch=False) as fleet:
+            h = fleet.attach(plan)
+            f1 = h.submit_matvec(xs[0], np.ones(6, bool), deadline=0.5)
+            with pytest.raises(FleetDegraded) as ei:  # 3 wanted, 2 free
+                h.submit_matvec_many([xs[0], xs[1], xs[2]], block=False)
+            assert ei.value.action == "shed"
+            # all-or-nothing: the slots the shed group briefly held are
+            # back, so a group that fits admits without blocking
+            f2 = h.submit_matvec_many([xs[0], xs[1]], deadline=0.5,
+                                      block=False)
+            assert len(f2) == 2
+            for f in (f1, *f2):         # slow workers: deadline fails
+                with pytest.raises(TimeoutError):
+                    f.result(timeout=30.0)
+
     def test_idle_fleet_pumps_immediately(self, operands):
         A, _, xs = operands
         plan = compile_plan(A, scheme="proposed", n=6, s=2,

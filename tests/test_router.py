@@ -337,6 +337,27 @@ class TestConfigPush:
             with pytest.raises(ValueError, match="last live replica"):
                 router.remove_replica("head", 0)
 
+    def test_replica_indices_monotonic_after_remove(self, operands, plan):
+        # indices must never be reused: len(replicas) as the next index
+        # would mint a duplicate after a middle replica is removed, and
+        # remove_replica could then drain the wrong fleet
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=2, n_workers=6)
+            assert router.add_replica("head", n_workers=6) == 2
+            router.remove_replica("head", 1)
+            assert router.add_replica("head", n_workers=6) == 3
+            idxs = [r["index"] for r in
+                    router.metrics()["endpoints"]["head"]["replicas"]]
+            assert idxs == [0, 2, 3]
+            router.remove_replica("head", 2)    # THE replica 2, not 3
+            idxs = [r["index"] for r in
+                    router.metrics()["endpoints"]["head"]["replicas"]]
+            assert idxs == [0, 3]
+            np.testing.assert_allclose(
+                np.asarray(router.call("head", xs[0])),
+                np.asarray(xs[0] @ A), **TOL)
+
     def test_replicas_balance_load(self, operands, plan):
         A, xs = operands
         with Router() as router:
@@ -349,6 +370,97 @@ class TestConfigPush:
             [f.result(60) for f in futs]
             used = {e["replica"] for e in router.dispatch_log("head")}
             assert used == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# The scheduler thread never parks inside fleet admission
+# ---------------------------------------------------------------------------
+
+
+class TestNonBlockingDispatch:
+    def test_backlog_wider_than_fleet_queue_cap_no_deadlock(self, operands,
+                                                            plan):
+        # regression: a batch wider than the fleet's queue_cap used to
+        # acquire every admission slot then block the scheduler thread
+        # on the next acquire forever (only its own unsubmitted calls
+        # could free one) -- deadlocking the whole router.  Batches are
+        # now clamped to the replica's free call budget.
+        A, xs = operands
+        with CodedFleet(6, queue_cap=8, max_inflight=2) as fleet, \
+                Router() as router:
+            router.register("head", plan, fleets=[fleet],
+                            adaptive=False, width=256)
+            router.pause()
+            futs = [router.submit("head", xs[i % len(xs)])
+                    for i in range(20)]
+            router.resume()
+            for i, f in enumerate(futs):
+                np.testing.assert_allclose(
+                    np.asarray(f.result(60)),
+                    np.asarray(xs[i % len(xs)] @ A), **TOL)
+            assert all(e["calls"] <= 8
+                       for e in router.dispatch_log("head"))
+
+    def test_saturated_endpoint_never_blocks_neighbors(self, operands,
+                                                       plan):
+        # head-of-line isolation: one endpoint's full replica queue
+        # must not stall dispatching for other endpoints' tenants
+
+        class FixedDelay:
+            """Every task sleeps exactly 1.5s: long enough to hold the
+            busy replica's budget through the assertion window, short
+            enough that no worker thread outlives its fleet (an
+            unbounded exponential sleeper would trip the global
+            thread-leak check later in the suite)."""
+
+            def delay(self, worker, task_row, work):
+                return 1.5
+
+            def should_fail(self, worker, tasks_done):
+                return False
+
+        A, xs = operands
+        with CodedFleet(6, faults=FixedDelay(), queue_cap=4,
+                        max_inflight=2, microbatch=False) as busy_fleet, \
+                Router(batch_wait_s=0.002) as router:
+            router.register("busy", plan, fleets=[busy_fleet],
+                            adaptive=False, width=16)
+            router.register("snappy", plan, replicas=1, n_workers=6)
+            # saturate "busy": the first 4-call batch takes the whole
+            # queue_cap and its slow round holds it for seconds
+            stuck = [router.submit("busy", xs[i % len(xs)], deadline=5.0)
+                     for i in range(12)]
+            time.sleep(0.1)             # let the first batch dispatch
+            # "snappy" must keep flowing while "busy" has zero budget
+            np.testing.assert_allclose(
+                np.asarray(router.call("snappy", xs[0], deadline=2.0)),
+                np.asarray(xs[0] @ A), **TOL)
+            for f in stuck:
+                f.cancel()              # queued ones withdraw instantly
+            for f in stuck:             # dispatched ones land or fail by
+                try:                    # their 5s deadline -- either way
+                    f.result(30)        # the backlog drains for close()
+                except Exception:
+                    pass
+
+    def test_unregister_timeout_fails_leftovers_cleanly(self, operands,
+                                                        plan):
+        A, xs = operands
+        with Router() as router:
+            router.register("head", plan, replicas=1, n_workers=6)
+            router.pause()              # nothing dispatches: drain must
+            futs = [router.submit("head", xs[i], tenant="t")
+                    for i in range(4)]  # ...time out with these queued
+            router.unregister("head", timeout=0.2)
+            for f in futs:              # the unregister error, never a
+                with pytest.raises(RuntimeError, match="unregistered"):
+                    f.result(5)         # bare cancellation
+            assert router.endpoints() == []
+            router.resume()             # flushed clean: the name is
+            router.register("head", plan, replicas=1, n_workers=6)
+            np.testing.assert_allclose(  # immediately reusable
+                np.asarray(router.call("head", xs[0])),
+                np.asarray(xs[0] @ A), **TOL)
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +501,57 @@ class TestEngineFrontDoor:
             assert not router.has_endpoint("lm-head")
         finally:
             router.close()              # ...its builder owns the router
+
+    def test_engine_register_race_falls_back_to_shared(self):
+        # two engines' has_endpoint/register pairs are not atomic: the
+        # loser's register raises -- it must fall back to sharing the
+        # winner's endpoint, not crash engine construction
+        import jax  # noqa: PLC0415
+
+        from repro.configs import get_smoke_config  # noqa: PLC0415
+        from repro.configs.base import CodedConfig  # noqa: PLC0415
+        from repro.models import build_model  # noqa: PLC0415
+        from repro.serve import ServeEngine  # noqa: PLC0415
+
+        cfg = get_smoke_config("qwen3-14b")
+        model = build_model(cfg, dtype=jnp.float32)
+        params = model.init(jax.random.key(0))
+        router = Router()
+        try:
+            winner = ServeEngine(
+                model, params, cfg, batch_size=2, max_len=32,
+                coded=CodedConfig(enabled=True, n_workers=6, stragglers=2,
+                                  router=router))
+            real = router.has_endpoint
+            state = {"stale": True}
+
+            def stale_once(name):       # the loser's pre-check snapshot
+                if state.pop("stale", False):
+                    return False
+                return real(name)
+
+            router.has_endpoint = stale_once
+            try:
+                loser = ServeEngine(
+                    model, params, cfg, batch_size=2, max_len=32,
+                    coded=CodedConfig(enabled=True, n_workers=6,
+                                      stragglers=2, router=router))
+            finally:
+                router.has_endpoint = real
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["head"])
+            hidden = jnp.asarray(np.random.default_rng(1)
+                                 .standard_normal((2, cfg.d_model)),
+                                 jnp.float32)
+            np.testing.assert_allclose(
+                np.asarray(loser.coded_logits(hidden)),
+                np.asarray(hidden @ head), **TOL)
+            loser.close()               # shared mode: must NOT unregister
+            assert router.has_endpoint("lm-head")
+            winner.close()
+            assert not router.has_endpoint("lm-head")
+        finally:
+            router.close()
 
 
 class TestRouterLifecycle:
