@@ -34,6 +34,13 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
                      within the resilience budget and graceful
                      degradation past it; recovery latency p50/p99 per
                      fault type -> BENCH_chaos.json
+  obs             -- observability cost + fidelity (repro.obs): the
+                     tracing-disabled closed loop must sit within 2% of
+                     its own baseline rerun; a traced tcp fleet with a
+                     seeded slow worker must decompose rounds into
+                     segments summing to the round wall (10%) and
+                     attribute the straggler -> BENCH_obs.json + a
+                     Chrome trace (BENCH_obs_trace.json, Perfetto)
 
 ``--list`` prints the scheme registry table instead of benching.
 
@@ -1085,6 +1092,134 @@ def chaos_bench(seed: int = 5, transports=("memory", "tcp"),
 # ---------------------------------------------------------------------------
 
 
+def obs_bench(scale: float, calls: int = 48,
+              json_path: str = "BENCH_obs.json",
+              trace_path: str = "BENCH_obs_trace.json"):
+    """Observability cost + fidelity (repro.obs) -> BENCH_obs.json.
+
+    Part A (cost): the ``fleet_inflight1_closedloop`` shape with
+    tracing disabled, run twice (best-of-3 each), asserts run-to-run
+    throughput within 2% -- the disabled path is a single identity
+    check, so the spread IS the noise floor; tracing-ON throughput is
+    recorded alongside as the enablement overhead.  Part B (fidelity):
+    tcp fleet + one seeded slow worker under a live tracer -- asserts
+    the median per-round critical-chain segment sum lands within 10%
+    of the measured round wall and that attribution names the seeded
+    worker; per-phase medians and the Chrome trace file ship as
+    artifacts.
+    """
+    import json as _json  # noqa: PLC0415
+
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.api import CodedFleet, compile_plan  # noqa: PLC0415
+    from repro.cluster.faults import adversarial_faults  # noqa: PLC0415
+    from repro.obs import (  # noqa: PLC0415
+        Tracer, attribute, write_chrome_trace)
+
+    n, k, b = 12, 9, 8
+    t = max(int(4096 * scale) // 128 * 128, 256)
+    r = max(int(4608 * scale) // (k * 8) * (k * 8), k * 8)
+    rng = np.random.default_rng(11)
+    mask = rng.random((t // 8, r // 8)) >= 0.98
+    A = jnp.asarray((rng.standard_normal((t, r)) *
+                     np.kron(mask, np.ones((8, 8)))).astype(np.float32))
+    xcalls = [jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+              for _ in range(calls)]
+    plan = compile_plan(A, scheme="proposed", n=n, s=n - k,
+                        backend="packed")
+
+    # -- part A: closed-loop throughput, tracing off/off/on --------------
+    def closed_loop(tracer) -> float:
+        with CodedFleet(n, transport="memory", max_inflight=1,
+                        queue_cap=calls + 8, tracer=tracer) as fleet:
+            h = fleet.attach(plan)
+            h.matvec(xcalls[0])                     # warm
+            t0 = time.perf_counter()
+            for xc in xcalls:
+                h.matvec(xc)
+            return calls / (time.perf_counter() - t0)
+
+    def best_of(reps: int, tracer_fn) -> float:
+        return max(closed_loop(tracer_fn()) for _ in range(reps))
+
+    baseline_cps = best_of(3, lambda: None)
+    off_cps = best_of(3, lambda: None)
+    on_cps = best_of(3, lambda: Tracer(capacity=16384))
+    off_ratio = off_cps / baseline_cps
+    on_ratio = on_cps / baseline_cps
+    # the disabled-tracer hot path is one identity check per guard: two
+    # identical tracing-off runs must agree within the 2% budget
+    assert off_ratio >= 0.98, (
+        f"tracing-off closed loop at {off_ratio:.3f}x its own baseline "
+        f"(need >= 0.98; the disabled guard path regressed?)")
+    emit("obs/overhead_off", 0.0,
+         f"cps={off_cps:.1f};vs_baseline={off_ratio:.3f}x")
+    emit("obs/overhead_on", 0.0,
+         f"cps={on_cps:.1f};vs_baseline={on_ratio:.3f}x")
+
+    # -- part B: tcp + seeded slow worker, tracer on ---------------------
+    slow = 5
+    tracer = Tracer(capacity=16384)
+    rounds_b = min(calls, 24)
+    with CodedFleet(n, transport="tcp", tracer=tracer,
+                    faults=adversarial_faults([slow], slowdown=40.0,
+                                              time_scale=2e-3)) as fleet:
+        h = fleet.attach(plan)
+        h.matvec(xcalls[0])                         # warm
+        for xc in xcalls[:rounds_b]:
+            h.matvec(xc)
+            time.sleep(0.005)       # pacing: drain healthy inboxes
+        rep = attribute(tracer.events())
+        n_events = write_chrome_trace(trace_path, tracer, fleet=fleet)
+
+    rounds = [e for e in tracer.events() if e["cat"] == "round"][1:]
+    devs = sorted(abs(sum(e["args"]["segments"].values()) - e["dur"])
+                  / max(e["dur"], 1e-9) for e in rounds)
+    med_dev = devs[len(devs) // 2]
+    assert med_dev <= 0.10, (
+        f"median segment-sum deviation {med_dev:.3f} of round wall "
+        f"on tcp (need <= 0.10; clock-offset estimation regressed?)")
+    suspects = rep.suspects()
+    assert suspects and suspects[0] == slow, (
+        f"attribution ranked {suspects[:3]} but worker {slow} was the "
+        f"seeded straggler")
+    phases = {ph: float(np.median([e["args"]["segments"][ph]
+                                   for e in rounds]))
+              for ph in rounds[0]["args"]["segments"]} if rounds else {}
+    emit("obs/tcp_segments", med_dev * 1e6,
+         f"rounds={len(rounds)};median_dev={med_dev:.3f};"
+         f"suspect={suspects[0]};trace_events={n_events}")
+
+    payload = {
+        "bench": "obs", "scale": scale, "calls": calls,
+        "overhead": {
+            "baseline_cps": baseline_cps, "off_cps": off_cps,
+            "on_cps": on_cps, "off_ratio_vs_baseline": off_ratio,
+            "on_ratio_vs_baseline": on_ratio,
+            "off_within_2pct": off_ratio >= 0.98,
+        },
+        "tcp": {
+            "rounds": len(rounds), "slow_worker": slow,
+            "suspects": suspects[:3],
+            "attribution_names_slow_worker": suspects[0] == slow,
+            "segment_sum_median_deviation": med_dev,
+            "segment_sum_within_10pct": med_dev <= 0.10,
+            "phase_medians_s": phases,
+            "compute_rates": {str(w): v
+                              for w, v in rep.compute_rates().items()},
+            "wasted_work": rep.wasted_work(),
+        },
+        "trace_file": trace_path, "trace_events": n_events,
+    }
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("obs/json", 0.0, f"wrote={json_path}")
+
+
+# ---------------------------------------------------------------------------
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.25,
@@ -1126,6 +1261,7 @@ def main() -> None:
         "chaos": lambda: chaos_bench(
             args.chaos_seed,
             transports=tuple(args.chaos_transports.split(","))),
+        "obs": lambda: obs_bench(args.scale, calls=args.fleet_calls),
     }
 
     if args.list:

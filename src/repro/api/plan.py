@@ -31,6 +31,7 @@ when the operand's density drifts across the packed/reference crossover.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -306,6 +307,10 @@ def compile_plan(A=None, *, scheme="proposed", n=None, s=None,
     ``REPRO_CODED_BACKEND`` env var overrides everything, including
     auto.  Without ``A`` the plan is aggregation-only.
     """
+    from ..obs.trace import default_tracer  # noqa: PLC0415 (cycle-free)
+
+    tr = default_tracer()
+    t0 = time.perf_counter() if tr is not None else 0.0
     if isinstance(scheme, (MVScheme, MMScheme)):
         sch = scheme
     else:
@@ -322,6 +327,10 @@ def compile_plan(A=None, *, scheme="proposed", n=None, s=None,
         _attach_operand(plan, A, resolved)
     elif kind == "mv":
         plan.prewarm()      # aggregation-only: warm the all-alive pattern
+    if tr is not None:
+        tr.complete("plan.compile", t0, time.perf_counter(), cat="plan",
+                    track="plan", kind=kind, backend=resolved,
+                    n=sch.n, has_operand=A is not None)
     return plan
 
 
@@ -331,8 +340,21 @@ def _attach_operand(plan: CodedPlan, A, resolved: str) -> None:
     Shared by initial compilation and ``plan.retune`` -- re-tuning is
     literally re-running this attachment against the drifted operand.
     """
+    from ..obs.trace import default_tracer  # noqa: PLC0415 (cycle-free)
+
     if A.ndim != 2:
         raise ValueError(f"operand must be 2-D (t, r), got {A.shape}")
+    tr = default_tracer()
+    if tr is not None:
+        with tr.span("plan.encode", cat="plan", track="plan",
+                     kind=plan.kind, backend=resolved,
+                     shape=list(A.shape)):
+            _attach_operand_inner(plan, A, resolved)
+        return
+    _attach_operand_inner(plan, A, resolved)
+
+
+def _attach_operand_inner(plan: CodedPlan, A, resolved: str) -> None:
     sch, G, seed = plan.scheme, plan.G, plan.seed
     cache_size = plan.cache_size
     if plan.kind == "mv":

@@ -166,8 +166,15 @@ class StragglerFaults:
         return self._streams[worker]
 
     def delay(self, worker: int, task_row: int, work: float) -> float:
-        t = self.model.sample(np.asarray([max(work, 1e-9)]),
-                              self._stream(worker))
+        work = max(work, 1e-9)
+        m = self.model
+        if isinstance(m, AdversarialSlow):
+            # the model indexes its work vector by worker id; per-task
+            # injection has only THIS worker's work, so apply the
+            # (deterministic) slowdown directly instead of sampling
+            scale = m.slowdown if worker in m.stragglers else 1.0
+            return work * scale * self.time_scale
+        t = m.sample(np.asarray([work]), self._stream(worker))
         return float(t[0]) * self.time_scale
 
     def should_fail(self, worker: int, tasks_done: int) -> bool:

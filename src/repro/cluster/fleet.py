@@ -83,6 +83,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs.trace import default_tracer
 from .transport import make_transport
 from .wire import Heartbeat, Task, WorkerJoin, WorkerLeave, plan_packed, \
     shard_plan
@@ -341,6 +342,10 @@ class _Round:
         self.results: dict[int, dict] = {}
         self.order: list[int] = []          # completion order of task rows
         self.sent_at: dict[int, float] = {}  # row -> submit stamp (EWMA)
+        self.trace = 0                      # tracer round id (0 = untraced)
+        # row -> (worker, t_recv, t_start, t_finish, t_arrival): worker
+        # stamps on the worker clock, arrival on ours (traced rounds)
+        self.task_meta: dict[int, tuple] = {}
         self.t_start = time.perf_counter()
         self.deadline_at = None if deadline is None \
             else self.t_start + deadline
@@ -490,7 +495,8 @@ class CodedFleet:
                  microbatch: bool = True, microbatch_cols: int = 64,
                  queue_cap: int | None = None,
                  min_workers: int | None = None,
-                 admission: str = "block", transport_opts=None):
+                 admission: str = "block", transport_opts=None,
+                 tracer=None):
         if admission not in ("block", "shed"):
             raise ValueError(f"admission must be 'block' or 'shed', "
                              f"got {admission!r}")
@@ -541,6 +547,11 @@ class CodedFleet:
         self._closed = False
         self._close_lock = threading.Lock()
         self.event_log: deque[dict] = deque(maxlen=4096)
+        # observability (repro.obs): disabled tracing is represented by
+        # None, so every hot-path hook costs one identity check.
+        # Explicit ``tracer=`` wins; otherwise REPRO_TRACE=1 resolves
+        # the process-global tracer.
+        self._tracer = tracer if tracer is not None else default_tracer()
         self.transport.start()              # workers up, no shards yet
         self._beats = {w: time.perf_counter()
                        for w in self.transport.workers()}
@@ -680,8 +691,14 @@ class CodedFleet:
 
     def _log_event(self, kind: str, **fields) -> None:
         """Membership / degradation journal (bounded; chaos + ops
-        introspection -- ``fleet.event_log``)."""
-        self.event_log.append({"t": time.time(), "kind": kind, **fields})
+        introspection -- ``fleet.event_log``).  Entries carry BOTH
+        clocks: ``t`` (wall, for humans and cross-process joins) and
+        ``t_mono`` (``perf_counter``, the clock every latency path and
+        tracer span uses) -- so event-log entries are joinable with
+        span timelines."""
+        self.event_log.append({"t": time.time(),
+                               "t_mono": time.perf_counter(),
+                               "kind": kind, **fields})
 
     # -- elastic membership (public surface) -------------------------------
 
@@ -689,13 +706,22 @@ class CodedFleet:
         """Current live worker ids (transport-alive, not failed)."""
         return self._live()
 
-    def worker_capacities(self, workers=None, levels: int = 4) -> list[int]:
+    def worker_capacities(self, workers=None, levels: int = 4,
+                          rates=None) -> list[int]:
         """Integer device speeds from the throughput EWMAs (submit ->
         result work/s), quantized to ``1..levels`` -- the ``capacities``
         vector ``proposed-hetero`` virtualizes devices with.  Workers
-        without a measured rate yet get the median live rate."""
+        without a measured rate yet get the median live rate.
+
+        ``rates`` (worker -> work/s) substitutes an external
+        measurement for the heartbeat-path EWMAs -- e.g. the per-worker
+        compute rates ``repro.obs.attribute`` derives from traced
+        worker-side timestamps, which see pure compute time instead of
+        the whole submit->result loop (a higher-fidelity capacity
+        signal under queueing or wire noise)."""
         ws = list(workers) if workers is not None else self._live()
-        rates = [self._rate.get(w, 0.0) for w in ws]
+        src = self._rate if rates is None else rates
+        rates = [src.get(w, 0.0) for w in ws]
         known = sorted(r for r in rates if r > 0)
         if not known:
             return [1] * len(ws)
@@ -828,6 +854,11 @@ class CodedFleet:
                 action="shed", plan_id=ps.plan_id)
         ps.bump("submitted")
         call.future._t_submit = time.perf_counter()
+        tr = self._tracer
+        if tr is not None:
+            tr.instant("fleet.enqueue", cat="fleet", track="fleet",
+                       plan=ps.plan_id, op=call.op,
+                       width=max(call.width, 1))
         try:
             self._loop.call_soon_threadsafe(self._enqueue, ps, call)
         except RuntimeError:                # loop torn down under us
@@ -877,6 +908,12 @@ class CodedFleet:
             for c in calls:
                 c.future._t_submit = now
             ps.bump("submitted", len(calls))
+            tr = self._tracer
+            if tr is not None:
+                tr.instant("fleet.enqueue-group", cat="fleet",
+                           track="fleet", plan=ps.plan_id,
+                           calls=len(calls),
+                           width=sum(max(c.width, 1) for c in calls))
             self._loop.call_soon_threadsafe(self._enqueue_group, ps, calls)
         except BaseException:
             for _ in range(acquired):
@@ -1053,6 +1090,16 @@ class CodedFleet:
         rnd = _Round(ps, round_id, calls, make_task, report,
                      calls[0].deadline)
         rnd.dense_bytes = dense_bytes
+        tr = self._tracer
+        if tr is not None:
+            # one trace id per round: every Task/TaskResult of this
+            # round carries it across the wire (v5), and the decode-time
+            # span emission groups by it
+            rnd.trace = tr.new_trace_id()
+            tr.instant("fleet.launch", cat="fleet", track="fleet",
+                       trace=rnd.trace, plan=ps.plan_id, round=round_id,
+                       op=op, calls=len(calls),
+                       rows=int(target.sum()))
         self._rounds[(ps.plan_id, round_id)] = rnd
         try:
             for row in np.flatnonzero(target):
@@ -1065,7 +1112,10 @@ class CodedFleet:
 
     def _submit_row(self, rnd: _Round, row: int) -> None:
         owner = rnd.ps.owner[row]
-        sent = self.transport.submit(owner, rnd.make_task(row))
+        task = rnd.make_task(row)
+        if rnd.trace:
+            task.trace = rnd.trace      # wire v5: the id rides the task
+        sent = self.transport.submit(owner, task)
         rnd.report.bytes_tasks += sent
         rnd.ps.bytes_tasks_total += sent
         self.bytes_tasks_total += sent
@@ -1117,6 +1167,22 @@ class CodedFleet:
             return
         rnd = self._rounds.get((ev.plan, ev.round))
         if rnd is None:
+            tr = self._tracer
+            if tr is not None and getattr(ev, "trace", 0):
+                # a cancelled task completed anyway: its compute bought
+                # nothing -- the wasted-work side of straggler
+                # attribution
+                # serve_s spans serve entry -> return on the worker
+                # clock (fault delays included, unlike compute_s --
+                # the pure BSR product), so attribution can rate a
+                # straggler that ONLY ever answers late
+                tr.instant("fleet.late-result", cat="waste", track="fleet",
+                           trace=ev.trace, worker=ev.worker,
+                           round=ev.round, plan=ev.plan,
+                           work=float(ev.work),
+                           compute_s=float(ev.compute_s),
+                           serve_s=max(0.0, ev.t_finish - ev.t_start)
+                           if ev.t_finish else 0.0)
             return                          # stale round, already decoded
         if not ev.ok:
             exc = RuntimeError(f"worker {ev.worker} failed task "
@@ -1127,6 +1193,23 @@ class CodedFleet:
             return
         rnd.results[ev.task_row] = ev.arrays
         rnd.order.append(ev.task_row)
+        if rnd.trace:
+            # worker stamps are on the WORKER's clock; arrival on ours.
+            # The decode-time span emission shifts them by the hello
+            # clock offset, so store raw here.
+            t_arr = time.perf_counter()
+            rnd.task_meta[ev.task_row] = (
+                ev.worker, ev.t_recv, ev.t_start, ev.t_finish, t_arr)
+            if ev.t_finish:
+                # every traced result tightens the clock-offset upper
+                # bound: arrival - t_finish = offset + wire latency,
+                # so the min over results beats the one-shot hello
+                # estimate (whose latency includes the spawn storm)
+                off = t_arr - ev.t_finish
+                offs = self.transport.clock_offsets
+                cur = offs.get(ev.worker)   # None: shared clock, exact
+                if cur is not None and off < cur:
+                    offs[ev.worker] = off
         rep = rnd.report
         rep.bytes_results += sum(int(a.nbytes) for a in ev.arrays.values())
         rep.completed_per_worker[ev.worker] = \
@@ -1225,6 +1308,14 @@ class CodedFleet:
 
     def _abort_round(self, rnd: _Round, exc: BaseException) -> None:
         self._rounds.pop((rnd.ps.plan_id, rnd.round_id), None)
+        tr = self._tracer
+        if tr is not None and rnd.trace:
+            tr.instant("fleet.round-abort", cat="fleet", track="fleet",
+                       trace=rnd.trace, plan=rnd.ps.plan_id,
+                       round=rnd.round_id, error=type(exc).__name__,
+                       deadline_hit=rnd.report.deadline_hit,
+                       results=len(rnd.results),
+                       inflight=len(rnd.inflight))
         for w in self._live():
             self.transport.cancel(w, rnd.round_id)
         for call in rnd.calls:
@@ -1663,8 +1754,14 @@ class CodedFleet:
                 call.future._finish(exc=e)
             self._pump_queues()
             return
-        rep.decode_s = time.perf_counter() - t_dec
-        rep.wall_s = time.perf_counter() - rnd.t_start
+        t_end = time.perf_counter()
+        rep.decode_s = t_end - t_dec
+        rep.wall_s = t_end - rnd.t_start
+        if rnd.trace:
+            try:
+                self._emit_round_trace(rnd, rep, rows, t_dec, t_end)
+            except Exception:       # tracing must never fail a round
+                pass
         ps = rnd.ps
         ps.reports.append(rep)
         ps.wall_ewma_s = rep.wall_s if ps.wall_ewma_s is None \
@@ -1675,6 +1772,87 @@ class CodedFleet:
             call.future.report = rep    # observability + parity replay
             call.future._finish(value=value)
         self._pump_queues()
+
+    def _emit_round_trace(self, rnd: _Round, rep: ClusterReport, rows,
+                          t_dec: float, t_end: float) -> None:
+        """Decode-time span emission for one traced round.
+
+        Worker-side stamps (recv/start/finish, on the worker's clock)
+        are shifted onto the coordinator timeline by the hello clock
+        offset, then the round decomposes along its *critical chain* --
+        the used task whose arrival made it decodable -- into
+        coordinator-queue / wire-out / worker-queue / compute /
+        wire-back / decode segments.  One structured ``round`` record
+        (cat="round") carries the whole breakdown; ``repro.obs.attrib``
+        consumes exactly that record.
+        """
+        tr = self._tracer
+        if tr is None:
+            return
+        trace = rnd.trace
+        t_submit = min((c.future._t_submit for c in rnd.calls
+                        if c.future._t_submit is not None),
+                       default=rnd.t_start)
+        used = {int(r) for r in np.asarray(rows).ravel()}
+        tasks = []
+        for row, (w, t_recv, t_s, t_f, t_arr) in rnd.task_meta.items():
+            off = self.transport.clock_offset(w)
+            stamped = t_recv > 0.0 and t_s > 0.0 and t_f > 0.0
+            info = {"row": int(row), "worker": int(w),
+                    "sent": rnd.sent_at.get(row),
+                    "recv": t_recv + off if stamped else None,
+                    "start": t_s + off if stamped else None,
+                    "finish": t_f + off if stamped else None,
+                    "arrival": t_arr,
+                    "work": float(rnd.ps.work.get(row, 1.0)),
+                    "used": int(row) in used}
+            tasks.append(info)
+            if stamped:
+                tr.complete("compute", info["start"], info["finish"],
+                            cat="worker", track=f"worker-{w}",
+                            trace=trace, row=int(row),
+                            round=rnd.round_id, plan=rnd.ps.plan_id,
+                            used=info["used"])
+
+        def clamp(x: float) -> float:
+            return max(0.0, float(x))
+
+        # critical chain: among the used tasks with full stamps, the
+        # one whose arrival completed the fastest-k set.  Offsets
+        # telescope across wire_out/wire_back, so the clamped segment
+        # sum matches (t_end - t_submit) up to clock-offset error --
+        # the BENCH_obs 10% criterion measures exactly that error.
+        crit = max((t for t in tasks
+                    if t["used"] and t["sent"] is not None
+                    and t["recv"] is not None),
+                   key=lambda t: t["arrival"], default=None)
+        segments = {}
+        if crit is not None:
+            segments = {
+                "coord_queue": clamp(crit["sent"] - t_submit),
+                "wire_out": clamp(crit["recv"] - crit["sent"]),
+                "worker_queue": clamp(crit["start"] - crit["recv"]),
+                "compute": clamp(crit["finish"] - crit["start"]),
+                "wire_back": clamp(crit["arrival"] - crit["finish"]),
+                "decode_wait": clamp(t_dec - crit["arrival"]),
+                "decode": clamp(t_end - t_dec),
+            }
+        owners = {int(w) for w in rnd.inflight.values()}
+        used_workers = {t["worker"] for t in tasks if t["used"]}
+        cancelled = sorted(int(r) for r in rnd.inflight
+                           if int(r) not in rnd.results)
+        tr.complete("queue", t_submit, rnd.t_start, cat="fleet",
+                    track="fleet", trace=trace, round=rnd.round_id)
+        tr.complete("decode", t_dec, t_end, cat="fleet", track="fleet",
+                    trace=trace, round=rnd.round_id, rows=len(used))
+        tr.complete("round", t_submit, t_end, cat="round",
+                    track=f"plan-{rnd.ps.plan_id}", trace=trace,
+                    plan=rnd.ps.plan_id, round=rnd.round_id, op=rep.op,
+                    calls=rep.calls, wall_s=rep.wall_s,
+                    decode_s=rep.decode_s, requeues=rep.requeues,
+                    segments=segments, tasks=tasks,
+                    decoded_without=sorted(owners - used_workers),
+                    cancelled_rows=cancelled)
 
     # -- re-shipping (plan retune) ----------------------------------------
 

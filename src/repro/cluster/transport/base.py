@@ -58,6 +58,17 @@ class Transport:
         self._known: set[int] = set(range(n_workers))
         self._dead: set[int] = set()
         self._closing = False
+        # wire v5: per-worker perf_counter offset sampled at the hello
+        # handshake (coordinator receive stamp minus the clock sample in
+        # the hello), i.e. coordinator_time ~= worker_time + offset.
+        # In-process workers share the coordinator clock (offset 0.0,
+        # the dict default); socket/pipe transports fill this in.
+        self.clock_offsets: dict[int, float] = {}
+
+    def clock_offset(self, worker: int) -> float:
+        """perf_counter delta placing ``worker``'s timestamps on the
+        coordinator timeline (0.0 when clocks are shared/unknown)."""
+        return self.clock_offsets.get(worker, 0.0)
 
     def push_event(self, event) -> None:
         """Enqueue one uniform-stream event; idle heartbeats beyond the

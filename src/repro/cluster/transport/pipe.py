@@ -22,6 +22,7 @@ from __future__ import annotations
 import os
 import queue
 import threading
+import time
 
 from ..faults import from_spec
 from ..wire import Task, TaskResult, WorkerJoin, death_notice, decode_event
@@ -53,7 +54,9 @@ def _pipe_worker_main(conn, worker_id: int, fault_spec, heartbeat_s: float
             inbox.put(("stop", None))
 
     with send_lock:                     # ready: imports are done, serve
-        conn.send(("hello", worker_id))  # loop is about to start
+        # loop is about to start; the perf_counter sample is the wire-v5
+        # clock handshake (parent derives this child's clock offset)
+        conn.send(("hello", (worker_id, time.perf_counter())))
     threading.Thread(target=pump, daemon=True).start()
     stop_beats = threading.Event()
     start_heartbeat(worker_id, emit, heartbeat_s, stop_beats,
@@ -123,6 +126,13 @@ class PipeTransport(Transport):
             while True:
                 kind, data = conn.recv()
                 if kind == "hello":
+                    # wire v5 clock handshake: the child sampled its
+                    # perf_counter at send; ours-at-receive minus that
+                    # places its task timestamps on our timeline (error
+                    # is the one-way hello latency)
+                    if isinstance(data, tuple):
+                        self.clock_offsets[worker] = \
+                            time.perf_counter() - data[1]
                     self._ready[worker].set()
                     continue
                 event = decode_event(data)

@@ -44,6 +44,7 @@ import queue
 import socket
 import struct
 import threading
+import time
 
 from ..faults import from_spec
 from ..retry import RetryPolicy
@@ -135,7 +136,8 @@ def _tcp_worker_main(host: str, port: int, worker_id: int, fault_spec,
                     inbox.put(("task", Task(
                         round=meta["round"], op=meta["op"],
                         task_row=meta["task_row"],
-                        plan=meta.get("plan", 0), payload=arrays,
+                        plan=meta.get("plan", 0),
+                        trace=meta.get("trace", 0), payload=arrays,
                         meta=meta["meta"])))
                 elif rec == "shard-wrap":
                     inner = arrays["blob"].tobytes()
@@ -253,6 +255,12 @@ class TcpTransport(Transport):
             if is_join and not self.allow_join:
                 raise ValueError(f"unknown worker id {w} (live join "
                                  f"disabled)")
+            # wire v5 clock handshake: the hello sampled the worker's
+            # perf_counter at send; ours-at-receive minus that places
+            # worker-side task timestamps on the coordinator timeline
+            clock = meta.get("clock")
+            if clock is not None:
+                self.clock_offsets[w] = time.perf_counter() - float(clock)
         except (ValueError, KeyError, TypeError, AttributeError):
             writer.close()                      # failed handshake: reject
             return

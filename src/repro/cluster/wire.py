@@ -40,12 +40,21 @@ from __future__ import annotations
 
 import json
 import struct
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 MAGIC = b"RPRC"
-WIRE_VERSION = 4       # v4: elastic membership -- join/leave/welcome
+WIRE_VERSION = 5       # v5: observability -- tasks/results *optionally*
+                       # carry a trace id plus worker-side monotonic
+                       # timestamps (recv/start/finish), and the hello
+                       # handshake samples the sender's clock so the
+                       # coordinator can place worker spans on its own
+                       # timeline.  All new fields are absent unless
+                       # tracing is enabled, so a tracerless v5 peer
+                       # decodes traced and untraced frames alike.
+                       # v4: elastic membership -- join/leave/welcome
                        # control frames (a worker may dial into a
                        # *running* fleet and be caught up, or drain out
                        # of one), plus drop frames freeing a
@@ -456,19 +465,27 @@ class Task:
     worker scatters ``bx`` back into a zero (t_pad, width) buffer, so
     the BSR product is bitwise the dense-shipped one while the wire
     carries omega/k-proportional bytes.
+
+    ``trace`` (wire v5) ties the task to one coordinator-side trace id;
+    0 means untraced and the field never reaches the wire, so a traced
+    and an untraced frame are byte-identical when tracing is off.
     """
 
     round: int
     op: str                                   # matvec | matmat | aggregate
     task_row: int
     plan: int = 0                             # fleet plan routing (wire v3)
+    trace: int = 0                            # trace id (wire v5; 0 = off)
     payload: dict = field(default_factory=dict)   # name -> np.ndarray
     meta: dict = field(default_factory=dict)
 
     def _meta(self) -> dict:
-        return {"record": "task", "round": self.round, "op": self.op,
+        meta = {"record": "task", "round": self.round, "op": self.op,
                 "task_row": self.task_row, "plan": self.plan,
                 "meta": self.meta}
+        if self.trace:
+            meta["trace"] = self.trace
+        return meta
 
     def encode(self) -> bytes:
         return encode_record(self._meta(), self.payload)
@@ -485,6 +502,7 @@ class Task:
                 f"expected a task record, got {meta.get('record')!r}")
         return cls(round=meta["round"], op=meta["op"],
                    task_row=meta["task_row"], plan=meta.get("plan", 0),
+                   trace=meta.get("trace", 0),
                    payload=arrays, meta=meta["meta"])
 
 
@@ -495,6 +513,13 @@ class TaskResult:
     ``kind="death"`` (task_row -1, round -1) marks worker fail-stop;
     the dispatcher responds by re-shipping the dead worker's shard to a
     live host and requeueing its outstanding tasks.
+
+    Traced results (wire v5: ``trace`` nonzero) additionally carry the
+    worker-side monotonic stamps ``t_recv`` (task materialized off the
+    inbox), ``t_start`` (compute began) and ``t_finish`` (serve
+    returned, fault delays included) -- the coordinator shifts them by
+    the hello clock offset and decomposes the round into queue / wire /
+    compute segments.  All three stay off the wire when untraced.
     """
 
     worker: int
@@ -506,14 +531,24 @@ class TaskResult:
     error: str = ""
     work: float = 0.0
     compute_s: float = 0.0
+    trace: int = 0                             # trace id (wire v5; 0 = off)
+    t_recv: float = 0.0                        # worker clock (wire v5)
+    t_start: float = 0.0
+    t_finish: float = 0.0
     arrays: dict = field(default_factory=dict)
 
     def encode(self) -> bytes:
-        return encode_record(
-            {"record": "result", "worker": self.worker, "round": self.round,
-             "task_row": self.task_row, "plan": self.plan, "ok": self.ok,
-             "kind": self.kind, "error": self.error, "work": self.work,
-             "compute_s": self.compute_s}, self.arrays)
+        meta = {"record": "result", "worker": self.worker,
+                "round": self.round, "task_row": self.task_row,
+                "plan": self.plan, "ok": self.ok, "kind": self.kind,
+                "error": self.error, "work": self.work,
+                "compute_s": self.compute_s}
+        if self.trace:
+            meta["trace"] = self.trace
+            meta["t_recv"] = self.t_recv
+            meta["t_start"] = self.t_start
+            meta["t_finish"] = self.t_finish
+        return encode_record(meta, self.arrays)
 
     @classmethod
     def decode(cls, data: bytes) -> "TaskResult":
@@ -525,6 +560,10 @@ class TaskResult:
                    task_row=meta["task_row"], plan=meta.get("plan", 0),
                    ok=meta["ok"], kind=meta["kind"], error=meta["error"],
                    work=meta["work"], compute_s=meta["compute_s"],
+                   trace=meta.get("trace", 0),
+                   t_recv=meta.get("t_recv", 0.0),
+                   t_start=meta.get("t_start", 0.0),
+                   t_finish=meta.get("t_finish", 0.0),
                    arrays=arrays)
 
 
@@ -599,9 +638,16 @@ def hello_record(worker: int, *, join: bool = False) -> bytes:
     header (so a mismatched peer is rejected at decode), the worker id
     in the meta.  Socket transports send this as their first frame;
     ``join=True`` marks a live join into an already-running fleet
-    (v4 -- a coordinator accepts it for ids it has never seen)."""
+    (v4 -- a coordinator accepts it for ids it has never seen).
+
+    ``clock`` (wire v5) samples the sender's ``time.perf_counter`` at
+    send time: the coordinator subtracts it from its own receive stamp
+    to estimate the per-worker clock offset (error is one-way hello
+    latency), which places worker-side task timestamps on the
+    coordinator timeline."""
     return encode_record({"record": "hello", "worker": worker,
-                          "wire_version": WIRE_VERSION, "join": bool(join)})
+                          "wire_version": WIRE_VERSION, "join": bool(join),
+                          "clock": time.perf_counter()})
 
 
 def welcome_record(worker: int, plans: int = 0) -> bytes:
@@ -641,6 +687,10 @@ def decode_event(data: bytes):
                               plan=meta.get("plan", 0), ok=meta["ok"],
                               kind=meta["kind"], error=meta["error"],
                               work=meta["work"], compute_s=meta["compute_s"],
+                              trace=meta.get("trace", 0),
+                              t_recv=meta.get("t_recv", 0.0),
+                              t_start=meta.get("t_start", 0.0),
+                              t_finish=meta.get("t_finish", 0.0),
                               arrays=arrays)
         if rec == "beat":
             return Heartbeat(worker=meta["worker"], tick=meta["tick"])

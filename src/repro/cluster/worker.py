@@ -197,6 +197,10 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
                              else val)
                 continue
             task: Task = Task.decode(val) if isinstance(val, bytes) else val
+            # wire v5 tracing: stamp the task's arrival on this worker's
+            # monotonic clock (only when the coordinator traced it --
+            # untraced tasks pay a single truthiness check)
+            t_recv = time.perf_counter() if task.trace else 0.0
         except (ValueError, KeyError, TypeError) as e:
             # garbled frame: this worker must not keep serving from a
             # bad state -- notify death (same contract as the tcp
@@ -225,7 +229,18 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
         if task.round in cancelled:
             continue
         try:
-            emit(serve(worker_id, task, tasks_done))
+            t_start = time.perf_counter()
+            res = serve(worker_id, task, tasks_done)
+            if task.trace:
+                # t_finish is stamped HERE, after ``faulty`` returns, so
+                # injected straggler delay lands in the compute segment
+                # (compute_s inside ``serve`` measures the BSR product
+                # alone) -- attribution pins slow devices from these
+                res.trace = task.trace
+                res.t_recv = t_recv
+                res.t_start = t_start
+                res.t_finish = time.perf_counter()
+            emit(res)
             tasks_done += 1
         except WorkerHang:
             return finish("hang")           # silent: no notice, no close

@@ -76,6 +76,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..cluster.fleet import CodedFleet, CodedFuture, FleetDegraded
+from ..obs.trace import default_tracer
 
 ENV_BALANCER = "REPRO_ROUTER_BALANCER"
 ENV_QUEUE_CAP = "REPRO_ROUTER_QUEUE_CAP"
@@ -215,9 +216,13 @@ class Router:
 
     def __init__(self, *, balancer: str | None = None,
                  batch_wait_s: float = 0.004,
-                 min_cols: int = 1, max_cols: int | None = None):
+                 min_cols: int = 1, max_cols: int | None = None,
+                 tracer=None):
         self.balancer = balancer if balancer is not None \
             else default_balancer()
+        # disabled tracing is represented by None (one identity check
+        # on the scheduler path); explicit tracer wins over REPRO_TRACE
+        self._tracer = tracer if tracer is not None else default_tracer()
         if self.balancer not in _BALANCERS:
             raise ValueError(f"balancer must be one of {_BALANCERS}, "
                              f"got {self.balancer!r}")
@@ -503,6 +508,10 @@ class Router:
         if not tq.sem.acquire(blocking=admission != "shed"):
             with self._cond:
                 tq.counters["shed"] += 1
+            tr = self._tracer
+            if tr is not None:
+                tr.instant("router.shed", cat="router", track="router",
+                           endpoint=name, tenant=tenant, cols=cols)
             raise FleetDegraded(
                 f"tenant {tenant!r} queue on endpoint {name!r} is full "
                 f"({cfg.queue_cap} queued calls); back off and resubmit, "
@@ -527,6 +536,11 @@ class Router:
             tq.queue.append(rc)
             tq.counters["submitted"] += 1
             self._cond.notify_all()
+        tr = self._tracer
+        if tr is not None:
+            tr.instant("router.admit", cat="router", track="router",
+                       endpoint=name, tenant=tenant, cols=cols,
+                       deadline_s=deadline)
         return fut
 
     def call(self, name: str, x, **kw):
@@ -693,6 +707,7 @@ class Router:
                     batch.append(nxt)
                     cols += nxt.cols
             cols = sum(c.cols for c in batch)
+            tr = self._tracer
             if ep.adaptive:
                 # queue-depth feedback on the backlog LEFT BEHIND by
                 # this dispatch: double while a full round's worth
@@ -702,11 +717,17 @@ class Router:
                 # load and can wedge w above it, re-introducing the
                 # collection window this loop exists to remove.
                 ep.depth_ewma = 0.5 * ep.depth_ewma + 0.5 * (total - cols)
+                prev_w = ep.width
                 if ep.depth_ewma >= ep.width and ep.width < ep.max_cols:
                     ep.width = min(ep.max_cols, ep.width * 2)
                 elif (ep.depth_ewma <= ep.width / 4
                       and ep.width > ep.min_cols):
                     ep.width = max(ep.min_cols, ep.width // 2)
+                if tr is not None and ep.width != prev_w:
+                    tr.instant("router.width", cat="router",
+                               track="router", endpoint=ep.name,
+                               width=ep.width, prev=prev_w,
+                               depth_ewma=ep.depth_ewma)
             tq.pass_v += cols / tq.cfg.weight
             ep.vtime = tq.pass_v
             handle = replica.handle
@@ -722,10 +743,18 @@ class Router:
                 tq.sem.release()        # admission bounds the queue
             tq.counters["dispatched"] += len(batch)
             tq.counters["dispatched_cols"] += cols
-            ep.log.append({"t": now, "endpoint": ep.name,
+            # dual clocks, like the fleet event log: wall for humans,
+            # monotonic for joining with tracer span timelines
+            ep.log.append({"t": time.time(), "t_mono": now,
+                           "endpoint": ep.name,
                            "tenant": tq.name, "calls": len(batch),
                            "cols": cols, "width": ep.width,
                            "replica": replica.index})
+            if tr is not None:
+                tr.instant("router.dispatch", cat="router",
+                           track="router", endpoint=ep.name,
+                           tenant=tq.name, calls=len(batch), cols=cols,
+                           width=ep.width, replica=replica.index)
             self._ep_cursor = (names.index(name) + 1) % len(names)
             job = _Job(ep, tq, replica, handle, batch, cols,
                        remaining=len(batch))
@@ -878,7 +907,10 @@ class Router:
 
     def dispatch_log(self, name: str) -> list[dict]:
         """The endpoint's recent dispatch records (tenant, calls, cols,
-        width, replica) -- the fairness tests assert on this."""
+        width, replica), bounded at 2048 and stamped on both clocks
+        (``t`` wall, ``t_mono`` perf_counter -- same discipline as the
+        fleet event log, so ``repro.obs.export`` can merge the two
+        timelines).  The fairness tests assert on this."""
         with self._cond:
             return list(self._ep(name).log)
 
