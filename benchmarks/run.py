@@ -34,6 +34,13 @@ Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring:
                      within the resilience budget and graceful
                      degradation past it; recovery latency p50/p99 per
                      fault type -> BENCH_chaos.json
+  wire            -- zero-copy data plane (wire v6): the same matvec
+                     workload over memory/pipe/tcp/shm with task-path
+                     memcpy traffic split into coordinator serialize
+                     copies and worker operand copies; asserts shm
+                     frames are header-only (<= 1% of the payload they
+                     reference) and tcp flattens exactly once per
+                     frame (v5 paid >= 2) -> BENCH_wire.json
   obs             -- observability cost + fidelity (repro.obs): the
                      tracing-disabled closed loop must sit within 2% of
                      its own baseline rerun; a traced tcp fleet with a
@@ -1092,6 +1099,99 @@ def chaos_bench(seed: int = 5, transports=("memory", "tcp"),
 # ---------------------------------------------------------------------------
 
 
+def wire_bench(scale: float, calls: int = 12,
+               json_path: str = "BENCH_wire.json"):
+    """Zero-copy data plane (wire v6) -> BENCH_wire.json.
+
+    The same matvec workload over all four transports, with the task
+    path's memcpy traffic split into coordinator copies (serialize /
+    staging, counted by ``transport.bytes_copied``) and worker copies
+    (operand materialization, riding back on ``TaskResult.copied``).
+    Asserts the PR's two claims: on ``shm`` the bytes copied per
+    matvec round are header-only (<= 1% of the operand payload those
+    headers reference), and on ``tcp`` the coordinator pays at most
+    ONE gather copy per task frame -- wire v5 paid two (per-array
+    ``tobytes`` into the record, then the length-prefix join), which
+    ships in the JSON as the ``before`` row of the copies-per-frame
+    comparison.
+    """
+    import json as _json  # noqa: PLC0415
+
+    import jax.numpy as jnp  # noqa: PLC0415
+
+    from repro.api import CodedFleet, compile_plan  # noqa: PLC0415
+
+    n, k, b = 6, 4, 16
+    t = max(int(4096 * scale) // 128 * 128, 256)
+    r = max(int(4608 * scale) // (k * 8) * (k * 8), k * 8)
+    rng = np.random.default_rng(17)
+    mask = rng.random((t // 8, r // 8)) >= 0.98
+    A = jnp.asarray((rng.standard_normal((t, r)) *
+                     np.kron(mask, np.ones((8, 8)))).astype(np.float32))
+    xs = [jnp.asarray(rng.standard_normal((b, t)), jnp.float32)
+          for _ in range(calls)]
+    plan = compile_plan(A, scheme="proposed", n=n, s=n - k,
+                        backend="packed")
+
+    per_transport: dict[str, dict] = {}
+    for transport in ("memory", "pipe", "tcp", "shm"):
+        with CodedFleet(n, transport=transport, max_inflight=1) as fleet:
+            h = fleet.attach(plan)
+            h.matvec(xs[0])                         # warm (jit, spawn)
+            base_coord = fleet.transport.bytes_copied
+            n_before = len(h.reports)
+            for xc in xs:
+                h.matvec(xc)
+            reports = list(h.reports)[n_before:]
+            coord_copied = fleet.transport.bytes_copied - base_coord
+        tasks = sum(rep.bytes_tasks for rep in reports)
+        payload = sum(rep.bytes_tasks_dense for rep in reports)
+        total_copied = sum(rep.bytes_copied for rep in reports)
+        frames = sum(rep.n_dispatched + rep.requeues for rep in reports)
+        row = {
+            "rounds": len(reports), "task_frames": frames,
+            "bytes_tasks": tasks, "bytes_payload_dense": payload,
+            "bytes_copied_total": total_copied,
+            "bytes_copied_coordinator": coord_copied,
+            "bytes_copied_worker": total_copied - coord_copied,
+            "copied_vs_payload": total_copied / max(payload, 1),
+            "coord_copies_per_frame_byte": coord_copied / max(tasks, 1),
+        }
+        per_transport[transport] = row
+        emit(f"wire/{transport}", 0.0,
+             f"copied={total_copied};payload={payload};"
+             f"ratio={row['copied_vs_payload']:.4f}")
+
+    shm_ratio = per_transport["shm"]["copied_vs_payload"]
+    assert shm_ratio <= 0.01, (
+        f"shm task path copied {shm_ratio:.2%} of the operand payload "
+        f"(need <= 1%: frames must carry segment refs, not bytes)")
+    # tcp: one gather copy per frame -- coordinator copies equal the
+    # frame bytes (v5 serialized every frame at least twice)
+    tcp = per_transport["tcp"]
+    tcp_copies = tcp["coord_copies_per_frame_byte"]
+    assert tcp_copies <= 1.02, (
+        f"tcp coordinator copied {tcp_copies:.2f}x the task frame "
+        f"bytes (need <= 1: submit must flatten exactly once)")
+    assert per_transport["memory"]["bytes_copied_coordinator"] == 0
+
+    payload = {
+        "bench": "wire", "scale": scale, "calls": calls,
+        "geometry": {"n": n, "k": k, "b": b, "t": t, "r": r},
+        "transports": per_transport,
+        "assertions": {
+            "shm_copied_vs_payload": shm_ratio,
+            "shm_header_only_within_1pct": shm_ratio <= 0.01,
+            "tcp_copies_per_frame_before": 2,   # wire v5: tobytes + join
+            "tcp_copies_per_frame_after": tcp_copies,
+            "tcp_single_flatten": tcp_copies <= 1.02,
+        },
+    }
+    with open(json_path, "w") as fh:
+        _json.dump(payload, fh, indent=2)
+    emit("wire/json", 0.0, f"wrote={json_path}")
+
+
 def obs_bench(scale: float, calls: int = 48,
               json_path: str = "BENCH_obs.json",
               trace_path: str = "BENCH_obs_trace.json"):
@@ -1230,7 +1330,7 @@ def main() -> None:
     ap.add_argument("--cluster-rounds", type=int, default=30,
                     help="dispatched rounds per scheme in the cluster bench")
     ap.add_argument("--cluster-transport", default="memory",
-                    choices=("memory", "pipe", "tcp"),
+                    choices=("memory", "pipe", "tcp", "shm"),
                     help="cluster transport for the cluster bench")
     ap.add_argument("--fleet-calls", type=int, default=48,
                     help="matvec calls per configuration in the fleet bench")
@@ -1262,6 +1362,7 @@ def main() -> None:
             args.chaos_seed,
             transports=tuple(args.chaos_transports.split(","))),
         "obs": lambda: obs_bench(args.scale, calls=args.fleet_calls),
+        "wire": lambda: wire_bench(args.scale),
     }
 
     if args.list:

@@ -162,6 +162,10 @@ class ClusterReport:
     bytes_tasks: int = 0       # task frames actually put on the wire
     bytes_results: int = 0     # result payload bytes received
     bytes_tasks_dense: int = 0  # what full-operand shipping would have cost
+    bytes_copied: int = 0      # task-path memcpy bytes (wire v6): transport
+                               # serialize/staging copies + worker-side
+                               # operand materialization, NOT the operand
+                               # build every transport pays identically
     completed_per_worker: dict = field(default_factory=dict)
     partial_workers: tuple[int, ...] = ()   # hosts with 0 < done < owned
     worker_work: dict = field(default_factory=dict)
@@ -177,6 +181,7 @@ class ClusterReport:
             "bytes_tasks": self.bytes_tasks,
             "bytes_results": self.bytes_results,
             "bytes_tasks_dense": self.bytes_tasks_dense,
+            "bytes_copied": self.bytes_copied,
             "partial_workers": list(self.partial_workers),
         }
 
@@ -377,6 +382,7 @@ class _PlanState:
         self.reports: deque[ClusterReport] = deque(maxlen=512)
         self.bytes_shards = 0
         self.bytes_tasks_total = 0
+        self.bytes_copied_total = 0
         self.queue: deque[_Call] = deque()
         self.sem: threading.Semaphore | None = None     # set by the fleet
         self.detached = False
@@ -525,6 +531,7 @@ class CodedFleet:
             **(transport_opts or {}))
         self.transport_name = self.transport.name
         self.bytes_tasks_total = 0
+        self.bytes_copied_total = 0
         self.bytes_shards = 0
         self._plans: dict[int, _PlanState] = {}
         self._rounds: dict[tuple[int, int], _Round] = {}
@@ -631,7 +638,9 @@ class CodedFleet:
         """Cumulative bytes-on-wire across every attached plan."""
         return {"transport": self.transport_name,
                 "bytes_shards": self.bytes_shards,
-                "bytes_tasks_total": self.bytes_tasks_total}
+                "bytes_tasks_total": self.bytes_tasks_total,
+                "bytes_copied_total": self.bytes_copied_total,
+                "transport_bytes_copied": self.transport.bytes_copied}
 
     def set_microbatch_cols(self, cols: int) -> None:
         """Retarget the fleet-wide coalescing cap; takes effect at the
@@ -663,6 +672,7 @@ class CodedFleet:
                     zip(live, self.worker_capacities(live))),
                 "bytes_shards": self.bytes_shards,
                 "bytes_tasks_total": self.bytes_tasks_total,
+                "bytes_copied_total": self.bytes_copied_total,
                 "plans": plans}
 
     def metrics(self) -> dict:
@@ -1072,17 +1082,34 @@ class CodedFleet:
             suspected=self._orphan["suspected"])
         self._orphan = {"deaths": 0, "suspected": 0}
         if op == "matvec":
-            b_comb = calls[0].b_op if len(calls) == 1 else \
-                np.concatenate([c.b_op for c in calls], axis=1)
+            if len(calls) == 1:
+                b_comb = calls[0].b_op
+            else:
+                width_all = sum(c.b_op.shape[1] for c in calls)
+                slab = self.transport.alloc_operand(
+                    (calls[0].b_op.shape[0], width_all), np.float32)
+                if slab is None:
+                    b_comb = np.concatenate([c.b_op for c in calls], axis=1)
+                else:
+                    np.concatenate([c.b_op for c in calls], axis=1, out=slab)
+                    b_comb = slab
             width = b_comb.shape[1]
+            dense = self.transport.prefers_dense_payload
 
             def make_task(row: int) -> Task:
+                # a shared-memory transport ships the one dense operand
+                # slab by reference, so support restriction would only
+                # add per-row copies it exists to avoid
+                payload = {"b": b_comb} if dense \
+                    else ps.restricted_payload(row, b_comb)
                 return Task(round=round_id, op="matvec", task_row=row,
-                            plan=ps.plan_id,
-                            payload=ps.restricted_payload(row, b_comb),
+                            plan=ps.plan_id, payload=payload,
                             meta={"b": width})
 
             dense_bytes = int(b_comb.nbytes)
+            self.transport.prepare_results(
+                round_id, [int(r) for r in np.flatnonzero(target)],
+                (ps.packed.c_pad, width), np.float32)
         else:
             call = calls[0]
             make_task = lambda row: call.make_task(row, round_id)  # noqa: E731
@@ -1108,6 +1135,10 @@ class CodedFleet:
             # a failed launch must not leak its in-flight slot -- the
             # caller fails the batch's futures, we drop the round
             self._rounds.pop((ps.plan_id, round_id), None)
+            try:
+                self.transport.finish_round(round_id)
+            except Exception:  # pragma: no cover - close() sweeps leftovers
+                pass
             raise
 
     def _submit_row(self, rnd: _Round, row: int) -> None:
@@ -1115,10 +1146,15 @@ class CodedFleet:
         task = rnd.make_task(row)
         if rnd.trace:
             task.trace = rnd.trace      # wire v5: the id rides the task
+        copied_before = self.transport.bytes_copied
         sent = self.transport.submit(owner, task)
+        copied = self.transport.bytes_copied - copied_before
         rnd.report.bytes_tasks += sent
+        rnd.report.bytes_copied += copied
         rnd.ps.bytes_tasks_total += sent
+        rnd.ps.bytes_copied_total += copied
         self.bytes_tasks_total += sent
+        self.bytes_copied_total += copied
         rnd.inflight[row] = owner
         rnd.sent_at[row] = time.perf_counter()
 
@@ -1212,6 +1248,9 @@ class CodedFleet:
                     offs[ev.worker] = off
         rep = rnd.report
         rep.bytes_results += sum(int(a.nbytes) for a in ev.arrays.values())
+        rep.bytes_copied += int(ev.copied)
+        rnd.ps.bytes_copied_total += int(ev.copied)
+        self.bytes_copied_total += int(ev.copied)
         rep.completed_per_worker[ev.worker] = \
             rep.completed_per_worker.get(ev.worker, 0) + 1
         rep.worker_work[ev.worker] = \
@@ -1308,6 +1347,10 @@ class CodedFleet:
 
     def _abort_round(self, rnd: _Round, exc: BaseException) -> None:
         self._rounds.pop((rnd.ps.plan_id, rnd.round_id), None)
+        try:                                # free shm operand/result slabs
+            self.transport.finish_round(rnd.round_id)
+        except Exception:   # pragma: no cover - close() sweeps leftovers
+            pass
         tr = self._tracer
         if tr is not None and rnd.trace:
             tr.instant("fleet.round-abort", cat="fleet", track="fleet",
@@ -1754,6 +1797,13 @@ class CodedFleet:
                 call.future._finish(exc=e)
             self._pump_queues()
             return
+        finally:
+            # decode copied (or abandoned) every slab-backed view above,
+            # so an shm transport can reclaim this round's segments now
+            try:
+                self.transport.finish_round(rnd.round_id)
+            except Exception:  # pragma: no cover - close() sweeps leftovers
+                pass
         t_end = time.perf_counter()
         rep.decode_s = t_end - t_dec
         rep.wall_s = t_end - rnd.t_start
@@ -1962,7 +2012,8 @@ class PlanHandle:
         """This plan's bytes-on-wire (the fleet aggregates across plans)."""
         return {"transport": self.fleet.transport_name,
                 "bytes_shards": self._ps.bytes_shards,
-                "bytes_tasks_total": self._ps.bytes_tasks_total}
+                "bytes_tasks_total": self._ps.bytes_tasks_total,
+                "bytes_copied_total": self._ps.bytes_copied_total}
 
     def metrics(self) -> dict:
         """This plan's slice of ``fleet.metrics()``: queue depth,
@@ -2045,7 +2096,13 @@ class PlanHandle:
             # everything geometry-dependent, derived from the plan
             # version current at build/launch time
             plan, packed = ps.plan, ps.packed
-            b_op = np.zeros((packed.t_pad, b), np.float32)
+            # an shm transport hands out a shared-memory slab here so
+            # the one unavoidable operand copy (the pad/transpose below)
+            # lands directly in the segment workers will map
+            b_op = self.fleet.transport.alloc_operand(
+                (packed.t_pad, b), np.float32)
+            if b_op is None:
+                b_op = np.zeros((packed.t_pad, b), np.float32)
             b_op[: packed.t] = xb.T[: packed.t]
             c.b_op = b_op
             c.target, c.wait_all = self._target(done)

@@ -1,7 +1,7 @@
-"""Pluggable cluster transports: memory | pipe | tcp.
+"""Pluggable cluster transports: memory | pipe | tcp | shm.
 
 One ``Transport`` interface (``base.Transport``: start / ship-shard /
-submit / cancel / uniform result+heartbeat stream / close), three
+submit / cancel / uniform result+heartbeat stream / close), four
 implementations:
 
   * ``memory`` -- in-process serve threads (deterministic default; the
@@ -10,7 +10,12 @@ implementations:
     (the old ``process`` backend, now heartbeat-capable);
   * ``tcp``    -- asyncio localhost sockets speaking length-prefixed
     frames of the versioned wire format, with a hello handshake (wire
-    version + worker id) and sha256-verified shard shipping.
+    version + worker id) and sha256-verified shard shipping;
+  * ``shm``    -- the pipe transport's control plane with payloads in
+    ``multiprocessing.shared_memory`` segments (wire v6): shards land
+    once, tasks ship segment references instead of bytes, results
+    write into a per-round slab the coordinator decodes in place --
+    the zero-copy path for co-located workers.
 
 ``make_transport(None, ...)`` resolves the default from the
 ``REPRO_CLUSTER_TRANSPORT`` env var (falling back to ``memory``), so a
@@ -26,12 +31,14 @@ import os
 from .base import Transport  # noqa: F401
 from .memory import MemoryTransport
 from .pipe import PipeTransport
+from .shm import ShmTransport
 from .tcp import TcpTransport
 
 TRANSPORTS: dict[str, type] = {
     "memory": MemoryTransport,
     "pipe": PipeTransport,
     "tcp": TcpTransport,
+    "shm": ShmTransport,
 }
 
 # legacy worker-backend names (PR 3's ClusterPlan(backend=...))

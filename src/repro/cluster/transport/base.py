@@ -43,6 +43,10 @@ class Transport:
     """
 
     name = "base"
+    # shm ships one dense operand region shared by every task of a
+    # round instead of per-task support-restricted payloads; the fleet
+    # consults this flag when building a round's tasks.
+    prefers_dense_payload = False
 
     def __init__(self, n_workers: int, *, faults=None,
                  heartbeat_s: float = 0.25):
@@ -50,6 +54,11 @@ class Transport:
         self.faults = faults if faults is not None else NoFaults()
         self.heartbeat_s = heartbeat_s
         self.events: queue.Queue = queue.Queue()
+        # wire v6 copy accounting: bytes this transport memcpy'd on the
+        # coordinator side (flatten joins, staging into shared
+        # segments).  Worker-side copies ride back on
+        # ``TaskResult.copied``; the fleet sums both per round.
+        self.bytes_copied = 0
         # beats keep ticking while the cluster idles between calls and
         # nothing polls: cap how many may sit queued (stale beats carry
         # no information -- the dispatcher re-stamps liveness at round
@@ -109,6 +118,28 @@ class Transport:
         """Welcome frame after shard catch-up (wire v4).  Socket
         transports forward it to the device; in-process ones treat it
         as informational."""
+
+    # -- zero-copy hooks (wire v6) ------------------------------------------
+    # No-ops everywhere except shm, where operands and results live in
+    # shared segments the fleet writes/reads directly.
+
+    def alloc_operand(self, shape, dtype) -> "object | None":
+        """A zero-filled array the fleet may build a round's operand in
+        *in place*.  shm returns a view of a fresh shared segment (the
+        padding copy every transport pays lands straight in shared
+        memory, so submit ships a reference); others return None and
+        the fleet allocates normally."""
+        return None
+
+    def prepare_results(self, round_id: int, rows, shape, dtype) -> None:
+        """Announce a round's expected result geometry before submit.
+        shm carves a per-round result slab and remembers row offsets;
+        others ignore it."""
+
+    def finish_round(self, round_id: int) -> None:
+        """A round fully resolved (decoded, aborted or expired):
+        release any per-round transport state (shm unlinks the round's
+        operand/result segments)."""
 
     # -- dynamic membership (wire v4) ---------------------------------------
 

@@ -161,7 +161,11 @@ class PipeTransport(Transport):
         return len(blob)
 
     def submit(self, worker: int, task: Task) -> int:
+        # encode() is single-copy since wire v6 (one gather join); the
+        # pipe carries the flat frame, so that join is the task path's
+        # only serialization memcpy -- recorded for the wire bench
         data = task.encode()
+        self.bytes_copied += len(data)
         self._send(worker, ("task", data))
         return len(data)
 

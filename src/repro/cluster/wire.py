@@ -34,6 +34,15 @@ worker never executes shipped code):
 Arrays are encoded as (dtype-name, shape, raw bytes); exotic dtypes
 (bfloat16) resolve through ``ml_dtypes``, so decoding shards and tasks
 needs numpy (+ scipy for the BSR build) only.
+
+Wire v6 splits every record into scatter/gather form: a small framed
+header (whose manifest doubles as the explicit buffer count/length
+table) plus a list of zero-copy array buffers
+(``encode_record_sg`` / ``decode_record_sg``).  The flat codec
+(``encode_record`` / ``decode_record``) is now a thin gather over it:
+one join on encode, ``np.frombuffer`` views on decode -- so a frame
+crosses a byte-stream transport with exactly one copy each way, and a
+shared-memory transport with none.
 """
 
 from __future__ import annotations
@@ -46,7 +55,21 @@ from dataclasses import dataclass, field
 import numpy as np
 
 MAGIC = b"RPRC"
-WIRE_VERSION = 5       # v5: observability -- tasks/results *optionally*
+WIRE_VERSION = 6       # v6: scatter/gather framing -- every record
+                       # splits into a small header (magic + version +
+                       # json manifest, which doubles as the explicit
+                       # buffer count/length table) and a list of raw
+                       # array buffers, so encoding never calls
+                       # ``tobytes()``: ``encode_record_sg`` returns
+                       # ``(header, [memoryview, ...])`` and transports
+                       # either pass the views through (memory, shm) or
+                       # flatten once (``flatten`` -- a single vectored
+                       # join, pipe/tcp).  Results optionally carry a
+                       # ``copied`` byte count (worker-side memcpy
+                       # accounting); absent when zero, so the copy
+                       # accounting costs no wire bytes on the
+                       # zero-copy paths it exists to assert.
+                       # v5: observability -- tasks/results *optionally*
                        # carry a trace id plus worker-side monotonic
                        # timestamps (recv/start/finish), and the hello
                        # handshake samples the sender's clock so the
@@ -85,14 +108,51 @@ def _manifest_head(meta: dict, arrays: dict[str, np.ndarray]) -> bytes:
     return json.dumps(manifest, separators=(",", ":")).encode()
 
 
-def encode_record(meta: dict, arrays: dict[str, np.ndarray] | None = None
-                  ) -> bytes:
-    """One wire record: json-able ``meta`` + named numpy arrays."""
+def encode_record_sg(meta: dict, arrays: dict[str, np.ndarray] | None = None
+                     ) -> tuple[bytes, list[memoryview]]:
+    """Scatter/gather form of one wire record (wire v6).
+
+    Returns ``(header, buffers)``: the header is the small framed part
+    (magic + version + json manifest, whose per-array entries are the
+    explicit buffer count/length table), the buffers are zero-copy
+    ``memoryview``s of the arrays' raw bytes in manifest order.  No
+    array byte is copied here -- a transport that can carry multiple
+    buffers (shared memory, an in-process queue) ships the views as-is;
+    one that needs a single frame calls :func:`flatten` and pays
+    exactly one gather copy.
+    """
     arrays = {name: np.ascontiguousarray(arr)
               for name, arr in (arrays or {}).items()}
     head = _manifest_head(meta, arrays)
-    return b"".join([_HEADER.pack(MAGIC, WIRE_VERSION, len(head)), head,
-                     *(a.tobytes() for a in arrays.values())])
+    bufs = [_raw_view(a) for a in arrays.values()]
+    return _HEADER.pack(MAGIC, WIRE_VERSION, len(head)) + head, bufs
+
+
+def _raw_view(a: np.ndarray) -> memoryview:
+    try:
+        return memoryview(a).cast("B")
+    except (ValueError, TypeError):
+        # extension dtypes (ml_dtypes bfloat16 et al.) sit outside the
+        # buffer protocol; reinterpreting the contiguous storage as
+        # uint8 is still a view, not a copy
+        return memoryview(a.reshape(-1).view(np.uint8))
+
+
+def flatten(header: bytes, buffers: list[memoryview],
+            prefix: bytes = b"") -> bytes:
+    """Gather a scatter/gather record into one contiguous frame with a
+    single join (the one copy a stream transport must pay).  ``prefix``
+    lets a length-prefixed framing (tcp) fold its prefix into the same
+    join instead of paying a second concatenation copy."""
+    return b"".join([prefix, header, *buffers]) if prefix \
+        else b"".join([header, *buffers])
+
+
+def encode_record(meta: dict, arrays: dict[str, np.ndarray] | None = None
+                  ) -> bytes:
+    """One flat wire record: json-able ``meta`` + named numpy arrays.
+    Single-copy: gathers the scatter/gather form with one join."""
+    return flatten(*encode_record_sg(meta, arrays))
 
 
 def record_nbytes(meta: dict, arrays: dict[str, np.ndarray] | None = None
@@ -105,7 +165,9 @@ def record_nbytes(meta: dict, arrays: dict[str, np.ndarray] | None = None
             + sum(int(a.nbytes) for a in arrays.values()))
 
 
-def decode_record(data: bytes) -> tuple[dict, dict[str, np.ndarray]]:
+def decode_record(data) -> tuple[dict, dict[str, np.ndarray]]:
+    """Decode one flat frame (``bytes`` or any buffer -- a shared
+    segment's ``memoryview`` decodes in place, arrays stay views)."""
     if len(data) < _HEADER.size:
         raise ValueError(f"truncated wire record: {len(data)} bytes is "
                          f"shorter than the {_HEADER.size}-byte header")
@@ -120,7 +182,7 @@ def decode_record(data: bytes) -> tuple[dict, dict[str, np.ndarray]]:
         raise ValueError("truncated wire record: manifest extends past "
                          "the end of the buffer")
     try:
-        manifest = json.loads(data[off: off + hlen])
+        manifest = json.loads(bytes(data[off: off + hlen]))
         specs = manifest["arrays"]
         meta = manifest["meta"]
     except (ValueError, KeyError, TypeError) as e:
@@ -138,6 +200,58 @@ def decode_record(data: bytes) -> tuple[dict, dict[str, np.ndarray]]:
                                 offset=off).reshape(spec["shape"])
             arrays[spec["name"]] = arr
             off += spec["nbytes"]
+    except (KeyError, TypeError, AttributeError) as e:
+        raise ValueError(f"garbled wire record manifest: {e!r}") from e
+    return meta, arrays
+
+
+def decode_record_sg(header, buffers) -> tuple[dict, dict[str, np.ndarray]]:
+    """Decode the scatter/gather form (wire v6): a framed ``header``
+    plus one raw buffer per manifest entry.
+
+    The manifest is the buffer table: buffer count and every buffer's
+    byte length are checked against it, so a peer that drops, truncates
+    or garbles buffers is rejected with the same explicit errors the
+    flat codec raises.  Arrays are zero-copy ``np.frombuffer`` views of
+    the supplied buffers.
+    """
+    if len(header) < _HEADER.size:
+        raise ValueError(f"truncated wire record: {len(header)} bytes is "
+                         f"shorter than the {_HEADER.size}-byte header")
+    magic, version, hlen = _HEADER.unpack_from(header, 0)
+    if magic != MAGIC:
+        raise ValueError("not a repro cluster wire record")
+    if version != WIRE_VERSION:
+        raise ValueError(f"wire version {version} unsupported "
+                         f"(this build speaks {WIRE_VERSION})")
+    if _HEADER.size + hlen > len(header):
+        raise ValueError("truncated wire record: manifest extends past "
+                         "the end of the header")
+    try:
+        manifest = json.loads(bytes(header[_HEADER.size: _HEADER.size + hlen]))
+        specs = manifest["arrays"]
+        meta = manifest["meta"]
+    except (ValueError, KeyError, TypeError) as e:
+        raise ValueError(f"garbled wire record manifest: {e}") from e
+    if not isinstance(specs, list) or len(specs) != len(buffers):
+        n = len(specs) if isinstance(specs, list) else "?"
+        raise ValueError(f"wrong buffer count: manifest lists {n} "
+                         f"arrays but the frame carries {len(buffers)} "
+                         f"buffers")
+    arrays = {}
+    try:
+        for spec, buf in zip(specs, buffers):
+            nbytes = spec["nbytes"]
+            got = memoryview(buf).nbytes
+            if got != nbytes:
+                raise ValueError(
+                    f"truncated wire record: buffer for array "
+                    f"{spec['name']!r} is {got} bytes, manifest wants "
+                    f"{nbytes}")
+            dt = _np_dtype(spec["dtype"])
+            arrays[spec["name"]] = np.frombuffer(
+                buf, dtype=dt,
+                count=nbytes // dt.itemsize).reshape(spec["shape"])
     except (KeyError, TypeError, AttributeError) as e:
         raise ValueError(f"garbled wire record manifest: {e!r}") from e
     return meta, arrays
@@ -294,7 +408,7 @@ class PlanShard:
     supports: tuple[tuple[int, ...], ...] = ()   # per task: t-block cols read
     tasks: list[dict] = field(default_factory=list)   # data/indices/indptr
 
-    def encode(self) -> bytes:
+    def _record_parts(self) -> tuple[dict, dict[str, np.ndarray]]:
         meta = {"record": "shard", "worker": self.worker,
                 "n_workers": self.n_workers, "plan": self.plan,
                 "task_rows": list(self.task_rows), "kind": self.kind,
@@ -308,7 +422,16 @@ class PlanShard:
         for j, task in enumerate(self.tasks):
             for part in ("data", "indices", "indptr"):
                 arrays[f"{j}.{part}"] = task[part]
-        return encode_record(meta, arrays)
+        return meta, arrays
+
+    def encode(self) -> bytes:
+        return encode_record(*self._record_parts())
+
+    def encode_sg(self) -> tuple[bytes, list[memoryview]]:
+        """Scatter/gather form (wire v6): header + one zero-copy view
+        per BSR component, in manifest order -- the shm transport lays
+        these straight into a shared segment."""
+        return encode_record_sg(*self._record_parts())
 
     @classmethod
     def decode(cls, data: bytes) -> "PlanShard":
@@ -490,6 +613,11 @@ class Task:
     def encode(self) -> bytes:
         return encode_record(self._meta(), self.payload)
 
+    def encode_sg(self) -> tuple[bytes, list[memoryview]]:
+        """Scatter/gather form (wire v6): header + zero-copy payload
+        views.  ``flatten(*task.encode_sg())`` == ``task.encode()``."""
+        return encode_record_sg(self._meta(), self.payload)
+
     def nbytes(self) -> int:
         """Wire size of ``encode()`` without serializing the payload."""
         return record_nbytes(self._meta(), self.payload)
@@ -535,9 +663,11 @@ class TaskResult:
     t_recv: float = 0.0                        # worker clock (wire v5)
     t_start: float = 0.0
     t_finish: float = 0.0
+    copied: int = 0                            # worker-side bytes memcpy'd
+                                               # (wire v6; 0 = off the wire)
     arrays: dict = field(default_factory=dict)
 
-    def encode(self) -> bytes:
+    def _meta(self) -> dict:
         meta = {"record": "result", "worker": self.worker,
                 "round": self.round, "task_row": self.task_row,
                 "plan": self.plan, "ok": self.ok, "kind": self.kind,
@@ -548,7 +678,21 @@ class TaskResult:
             meta["t_recv"] = self.t_recv
             meta["t_start"] = self.t_start
             meta["t_finish"] = self.t_finish
-        return encode_record(meta, self.arrays)
+        if self.copied:
+            meta["copied"] = self.copied
+        return meta
+
+    def encode(self) -> bytes:
+        return encode_record(self._meta(), self.arrays)
+
+    def encode_sg(self) -> tuple[bytes, list[memoryview]]:
+        """Scatter/gather form (wire v6): header + zero-copy result
+        views, for transports that never flatten."""
+        return encode_record_sg(self._meta(), self.arrays)
+
+    def nbytes(self) -> int:
+        """Wire size of ``encode()`` without serializing the arrays."""
+        return record_nbytes(self._meta(), self.arrays)
 
     @classmethod
     def decode(cls, data: bytes) -> "TaskResult":
@@ -564,6 +708,7 @@ class TaskResult:
                    t_recv=meta.get("t_recv", 0.0),
                    t_start=meta.get("t_start", 0.0),
                    t_finish=meta.get("t_finish", 0.0),
+                   copied=meta.get("copied", 0),
                    arrays=arrays)
 
 
@@ -691,6 +836,7 @@ def decode_event(data: bytes):
                               t_recv=meta.get("t_recv", 0.0),
                               t_start=meta.get("t_start", 0.0),
                               t_finish=meta.get("t_finish", 0.0),
+                              copied=meta.get("copied", 0),
                               arrays=arrays)
         if rec == "beat":
             return Heartbeat(worker=meta["worker"], tick=meta["tick"])

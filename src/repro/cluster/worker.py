@@ -75,23 +75,33 @@ class ShardRuntime:
             entry = {"work": shard.work[j], "bsr": None}
             if shard.tasks:
                 t = shard.tasks[j]
+                # zero-copy (wire v6): the decoded shard components are
+                # frombuffer views of the received frame (or of a shared
+                # segment); the BSR operator reads them in place
                 entry["bsr"] = sparse.bsr_matrix(
-                    (np.array(t["data"]), np.array(t["indices"]),
-                     np.array(t["indptr"])),
+                    (np.asarray(t["data"]), np.asarray(t["indices"]),
+                     np.asarray(t["indptr"])),
                     shape=(shard.c_pad, shard.t_pad),
                     blocksize=(shard.bm, shard.bk))
             self.tasks[(shard.plan, row)] = entry
 
-    def _operand(self, plan: int, payload: dict) -> np.ndarray:
-        """Materialize the (t_pad, width) input the BSR product reads.
+    def _operand(self, plan: int, payload: dict
+                 ) -> tuple[np.ndarray, int]:
+        """Materialize the (t_pad, width) input the BSR product reads;
+        returns ``(operand, bytes_copied)``.
 
-        Dense payloads (``b``) pass through; support-restricted ones
-        (``bx`` rows + ``bi`` block indices) scatter into a zero buffer
-        -- every unshipped row was exactly zero, so the product is
-        bitwise the dense-shipped one.
+        Dense payloads (``b``) pass through as zero-copy views;
+        support-restricted ones (``bx`` rows + ``bi`` block indices)
+        scatter into a zero buffer -- every unshipped row was exactly
+        zero, so the product is bitwise the dense-shipped one, and the
+        scatter's memcpy bytes are the copy accounting (wire v6) this
+        path reports back on ``TaskResult.copied``.
         """
         if "b" in payload:
-            return np.asarray(payload["b"], np.float32)
+            src = np.asarray(payload["b"])
+            out = np.asarray(src, np.float32)
+            copied = 0 if np.shares_memory(out, src) else out.nbytes
+            return out, copied
         t_pad, bk = self.geometry[plan]
         bx = np.asarray(payload["bx"], np.float32)
         bi = np.asarray(payload["bi"], np.int64)
@@ -99,10 +109,11 @@ class ShardRuntime:
         if len(bi):
             rows = (bi[:, None] * bk + np.arange(bk)).ravel()
             b[rows] = bx
-        return b
+        return b, bx.nbytes
 
-    def run(self, task: Task) -> tuple[dict, float]:
-        """Execute one task; returns (result arrays, work units)."""
+    def run(self, task: Task) -> tuple[dict, float, int]:
+        """Execute one task; returns (result arrays, work units,
+        task-path bytes memcpy'd materializing the operand)."""
         entry = self.tasks.get((task.plan, task.task_row))
         if entry is None:
             raise KeyError(
@@ -110,12 +121,13 @@ class ShardRuntime:
                 f"worker's shards (have {sorted(self.tasks)})")
         if task.op in ("matvec", "matmat"):
             # (c_pad, t_pad) BSR @ (t_pad, width): walks nonzero tiles only
-            y = entry["bsr"] @ self._operand(task.plan, task.payload)
-            return {"y": y}, entry["work"]
+            operand, copied = self._operand(task.plan, task.payload)
+            y = entry["bsr"] @ operand
+            return {"y": y}, entry["work"], copied
         if task.op == "aggregate":
             # combining is the dispatcher's job; the worker's cost is the
             # gradient compute the payload stands for (work from the task)
-            return dict(task.payload), float(task.meta.get("work", 1.0))
+            return dict(task.payload), float(task.meta.get("work", 1.0)), 0
         raise ValueError(f"unknown op {task.op!r}")
 
 
@@ -168,11 +180,11 @@ def serve_loop(worker_id: int, inbox: "queue.Queue", emit, faults=None,
     @faulty(faults)
     def serve(wid: int, task: Task, done: int) -> TaskResult:
         t0 = time.perf_counter()
-        arrays, work = runtime.run(task)
+        arrays, work, copied = runtime.run(task)
         return TaskResult(worker=wid, round=task.round,
                           task_row=task.task_row, plan=task.plan, ok=True,
                           work=work, compute_s=time.perf_counter() - t0,
-                          arrays=arrays)
+                          copied=copied, arrays=arrays)
 
     def finish(status: str) -> str:
         if stop_beats is not None:

@@ -318,7 +318,7 @@ class TestChaosRuns:
         assert "p99_s" in d["recovery_latency"]["kill"]
 
     @pytest.mark.slow
-    @pytest.mark.parametrize("transport", ["pipe", "tcp"])
+    @pytest.mark.parametrize("transport", ["pipe", "tcp", "shm"])
     def test_process_transports_survive_chaos(self, transport):
         sched = scripted_schedule(seed=3, n=4, s=1, duration=1.5,
                                   n_events=3)

@@ -51,7 +51,10 @@ from repro.cluster.wire import (
     TaskResult,
     decode_event,
     decode_record,
+    decode_record_sg,
     encode_record,
+    encode_record_sg,
+    flatten,
     record_nbytes,
     scheme_from_meta,
     scheme_to_meta,
@@ -124,6 +127,86 @@ class TestWireCodec:
         blob[14 + 2: 14 + 8] = b"\xff\xfe\xfd\xfc\xfb\xfa"
         with pytest.raises(ValueError, match="garbled|truncated"):
             decode_record(bytes(blob))
+
+    def test_sg_roundtrip_and_flatten_equivalence(self):
+        # wire v6 scatter/gather: (header, buffers) framing must be
+        # byte-equivalent to the flat encoding, and decoding the
+        # buffer list must view, not copy, the source arrays
+        meta = {"record": "task", "round": 9, "nested": {"b": [1, 2]}}
+        arrays = {"f": np.arange(6, dtype=np.float32).reshape(2, 3),
+                  "i": np.asarray([3, 1], np.int32)}
+        header, bufs = encode_record_sg(meta, arrays)
+        assert flatten(header, bufs) == encode_record(meta, arrays)
+        assert flatten(header, bufs, prefix=b"LEN!") == \
+            b"LEN!" + encode_record(meta, arrays)
+        m2, a2 = decode_record_sg(header, bufs)
+        assert m2 == meta
+        for k, v in arrays.items():
+            assert a2[k].dtype == v.dtype
+            np.testing.assert_array_equal(a2[k], v)
+        assert np.shares_memory(a2["f"], arrays["f"])   # zero-copy views
+        # and the flat decoder accepts the gathered frame unchanged
+        m3, a3 = decode_record(flatten(header, bufs))
+        assert m3 == meta
+        np.testing.assert_array_equal(a3["i"], arrays["i"])
+
+    def test_sg_wrong_buffer_count_rejected(self):
+        arrays = {"a": np.ones(4, np.float32), "b": np.arange(3, dtype=np.int64)}
+        header, bufs = encode_record_sg({"x": 1}, arrays)
+        with pytest.raises(ValueError, match="wrong buffer count"):
+            decode_record_sg(header, bufs[:1])
+        with pytest.raises(ValueError, match="wrong buffer count"):
+            decode_record_sg(header, [*bufs, memoryview(b"extra")])
+        with pytest.raises(ValueError, match="wrong buffer count"):
+            decode_record_sg(header, [])
+
+    def test_sg_truncated_buffers_rejected(self):
+        arrays = {"a": np.ones(4, np.float32), "b": np.arange(3, dtype=np.int64)}
+        header, bufs = encode_record_sg({"x": 1}, arrays)
+        with pytest.raises(ValueError, match="truncated"):
+            decode_record_sg(header, [bufs[0][:-2], bufs[1]])
+        with pytest.raises(ValueError, match="truncated"):
+            decode_record_sg(header, [bufs[0], bufs[1][:4]])
+        # buffer lengths are checked per array, by name, in the error
+        with pytest.raises(ValueError, match="'b'"):
+            decode_record_sg(header, [bufs[0], bufs[1][:4]])
+
+    def test_sg_garbled_header_rejected(self):
+        header, bufs = encode_record_sg({"x": 1},
+                                        {"a": np.ones(4, np.float32)})
+        bad = bytearray(header)
+        bad[0:4] = b"XXXX"
+        with pytest.raises(ValueError, match="not a repro"):
+            decode_record_sg(bytes(bad), bufs)
+        bad = bytearray(header)
+        bad[4] = WIRE_VERSION + 1               # wrong-wire-version peer
+        with pytest.raises(ValueError, match="version"):
+            decode_record_sg(bytes(bad), bufs)
+        with pytest.raises(ValueError, match="truncated"):
+            decode_record_sg(header[:6], bufs)  # short header
+        bad = bytearray(header)
+        bad[16:22] = b"\xff\xfe\xfd\xfc\xfb\xfa"    # inside the manifest
+        with pytest.raises(ValueError, match="garbled|truncated"):
+            decode_record_sg(bytes(bad), bufs)
+
+    def test_sg_task_and_result_frames(self):
+        t = Task(round=3, op="matvec", task_row=5,
+                 payload={"b": np.ones((4, 2), np.float32)},
+                 meta={"b": 2})
+        header, bufs = t.encode_sg()
+        assert flatten(header, bufs) == t.encode()
+        t2 = Task.decode(flatten(header, bufs))
+        np.testing.assert_array_equal(t2.payload["b"], t.payload["b"])
+        r = TaskResult(worker=1, round=3, task_row=5, copied=123,
+                       arrays={"y": np.zeros(3, np.float32)})
+        header, bufs = r.encode_sg()
+        assert flatten(header, bufs) == r.encode()
+        r2 = TaskResult.decode(r.encode())
+        assert r2.copied == 123                 # v6 copy accounting rides
+        r0 = TaskResult(worker=1, round=3, task_row=5,
+                        arrays={"y": np.zeros(3, np.float32)})
+        assert b"copied" not in r0.encode()     # ...only when nonzero
+        assert TaskResult.decode(r0.encode()).copied == 0
 
     def test_structurally_garbled_records_rejected(self):
         import json
@@ -305,7 +388,7 @@ class TestDispatcherParity:
                 np.testing.assert_array_equal(got, want)
 
     @pytest.mark.slow
-    @pytest.mark.parametrize("transport", ["pipe", "tcp"])
+    @pytest.mark.parametrize("transport", ["pipe", "tcp", "shm"])
     def test_whole_worker_patterns_bitwise_socket_transports(
             self, sparse_operand, transport):
         # the same C(6, 2) sweep over real process/socket transports:
@@ -675,6 +758,120 @@ class TestLivenessAndTcp:
             for sup, task in zip(shard.supports, shard.tasks):
                 assert sorted(sup) == sorted(set(task["indices"].tolist()))
                 assert all(0 <= j < kb for j in sup)
+
+
+# ---------------------------------------------------------------------------
+# Shared-memory transport: zero-copy accounting + segment lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _own_shm_segments():
+    """Names of /dev/shm entries created by this process's transports."""
+    try:
+        entries = os.listdir("/dev/shm")
+    except FileNotFoundError:           # non-Linux: lifecycle untestable
+        pytest.skip("/dev/shm not available")
+    return {e for e in entries if e.startswith(f"repro{os.getpid()}x")}
+
+
+@pytest.mark.slow
+class TestShmTransport:
+    def test_zero_copy_task_path(self, sparse_operand):
+        # the tentpole claim, at test scale: shm task frames carry
+        # segment references, so coordinator-side task copies are the
+        # header frames alone and the worker materializes no operand
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with plan.to_cluster(transport="shm") as cl:
+            cl.matvec(x)
+            rep = cl.last_report
+            # every byte copied on the task path is a header frame byte
+            assert 0 < rep.bytes_copied <= rep.bytes_tasks
+            assert rep.bytes_copied < rep.bytes_tasks_dense
+            totals = cl.fleet.wire_totals()
+            assert totals["bytes_copied_total"] == rep.bytes_copied
+            # transport-level counter additionally holds the one-time
+            # shard staging copies
+            assert totals["transport_bytes_copied"] >= \
+                rep.bytes_copied + totals["bytes_shards"]
+
+    def test_segments_released_on_close(self, sparse_operand):
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        before = _own_shm_segments()
+        with plan.to_cluster(transport="shm") as cl:
+            assert _own_shm_segments() - before     # shard segments live
+            for _ in range(3):
+                cl.matvec(x)
+        assert _own_shm_segments() == before        # all unlinked
+
+    def test_remove_worker_drain_releases_shard_segments(self,
+                                                         sparse_operand):
+        from repro.cluster.fleet import CodedFleet
+
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        before = _own_shm_segments()
+        with CodedFleet(6, transport="shm") as fleet:
+            h = fleet.attach(plan)
+            h.matvec(x)
+            held = _own_shm_segments() - before
+            assert held
+            fleet.remove_worker(5, drain=True)
+            # the leaver's shard segment was unlinked with it
+            assert not any(key[0] == 5
+                           for key in fleet.transport._shard_segs)
+            np.testing.assert_allclose(np.asarray(h.matvec(x)),
+                                       np.asarray(x @ A), **TOL)
+        assert _own_shm_segments() == before
+
+    def test_worker_crash_leaves_no_segments(self, sparse_operand):
+        # SIGKILL mid-run: the coordinator owns every segment, so a
+        # fail-stop child can leak nothing; recovery then close leaves
+        # /dev/shm exactly as found
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=1,
+                            backend="packed")
+        before = _own_shm_segments()
+        with plan.to_cluster(transport="shm") as cl:
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A), **TOL)
+            os.kill(cl.transport._procs[2].pid, signal.SIGKILL)
+            time.sleep(0.3)
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A), **TOL)
+            assert sum(r.deaths for r in cl.reports) == 1
+        assert _own_shm_segments() == before
+
+    def test_garbled_and_wrong_version_frames_kill_worker(self,
+                                                          sparse_operand):
+        # a corrupt frame and a future-wire-version frame must both be
+        # rejected with the codec's explicit error (the worker answers
+        # with a death notice and the fleet re-homes its rows)
+        A, x = sparse_operand
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        before = _own_shm_segments()
+        with plan.to_cluster(transport="shm") as cl:
+            cl.transport.garble(1)
+            bad = bytearray(
+                Task(round=999, op="matvec", task_row=0,
+                     payload={}, meta={}).encode())
+            bad[4] = WIRE_VERSION + 1
+            cl.transport._send(2, ("task", bytes(bad)))
+            deadline = time.time() + 10
+            while sum(1 for w in (1, 2)
+                      if not cl.transport.alive(w)) < 2 \
+                    and time.time() < deadline:
+                time.sleep(0.02)
+            assert not cl.transport.alive(1)
+            assert not cl.transport.alive(2)
+            np.testing.assert_allclose(np.asarray(cl.matvec(x)),
+                                       np.asarray(x @ A), **TOL)
+        assert _own_shm_segments() == before
 
 
 # ---------------------------------------------------------------------------
