@@ -22,7 +22,9 @@ _API = (
 
 _CLUSTER = ("ClusterPlan", "ClusterReport", "dumps_plan", "loads_plan")
 
-__all__ = list(_API + _CLUSTER)
+_SCALE = ("Autoscaler", "LocalPool", "RemotePool", "ReplicaPool")
+
+__all__ = list(_API + _CLUSTER + _SCALE)
 
 
 def __getattr__(name: str):
@@ -34,6 +36,10 @@ def __getattr__(name: str):
         from . import cluster
 
         return getattr(cluster, name)
+    if name in _SCALE:
+        from . import scale
+
+        return getattr(scale, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

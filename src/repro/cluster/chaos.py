@@ -190,6 +190,9 @@ class ChaosResult:
     schedule: list[dict] = field(default_factory=list)
     joiner_serving: bool | None = None
     final_plan: dict = field(default_factory=dict)
+    # decision log of the autoscaling controller, when one ran
+    # alongside the schedule (run_chaos(autoscale=...))
+    autoscale: list = field(default_factory=list)
 
     def counts(self) -> dict:
         c = {"clean": 0, "degraded": 0, "failed": 0}
@@ -263,7 +266,8 @@ def run_chaos(schedule: list[ChaosEvent], *, transport: str = "memory",
               warmup_s: float = 2.0, result_timeout_s: float = 60.0,
               heartbeat_s: float = 0.1, suspect_after: float = 0.6,
               min_workers: int = 1, settle_s: float = 0.5,
-              verify: bool = True) -> ChaosResult:
+              verify: bool = True,
+              autoscale: dict | None = None) -> ChaosResult:
     """Run one scripted chaos schedule against a live fleet.
 
     Builds an ``(n, s)`` proposed-scheme plan over a seeded sparse
@@ -275,6 +279,13 @@ def run_chaos(schedule: list[ChaosEvent], *, transport: str = "memory",
     round's observed pattern (on the exact plan version that served
     it) and numerically against the fault-free reference; violations
     raise ``AssertionError``.
+
+    ``autoscale`` (kwargs for ``repro.scale.Autoscaler``) starts an
+    autoscaling controller against the fleet for the duration of the
+    schedule, so scripted faults and scaling decisions interleave --
+    a kill can land mid scale-up, a join mid drain -- and the
+    invariants above must *still* hold.  The controller's decision log
+    lands on ``result.autoscale``.
     """
     import jax.numpy as jnp  # noqa: PLC0415
 
@@ -306,10 +317,14 @@ def run_chaos(schedule: list[ChaosEvent], *, transport: str = "memory",
                        suspect_after=suspect_after,
                        max_inflight=1, microbatch=False,
                        min_workers=min_workers)
+    scaler = None
     try:
         handle = fleet.attach(plan)
         original_pid = handle.plan_id
         handle.matvec(xs[0])                # warm the jit + task tables
+        if autoscale is not None:
+            from ..scale import Autoscaler  # noqa: PLC0415 - avoid cycle
+            scaler = Autoscaler(fleet, **autoscale).start()
         ctl = threading.Thread(
             target=_controller, args=(fleet, schedule, epoch, stop, joined),
             name="chaos-controller", daemon=True)
@@ -397,6 +412,9 @@ def run_chaos(schedule: list[ChaosEvent], *, transport: str = "memory",
         result.events = list(fleet.event_log)
     finally:
         stop.set()
+        if scaler is not None:
+            scaler.close()
+            result.autoscale = scaler.decision_log()
         fleet.close()
     if verify:
         c = result.counts()

@@ -83,6 +83,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .._env import env_int
 from ..obs.trace import default_tracer
 from .transport import make_transport
 from .wire import Heartbeat, Task, WorkerJoin, WorkerLeave, plan_packed, \
@@ -96,21 +97,13 @@ _TICK_S = 0.025         # watchdog period (suspicion + deadlines)
 
 def default_max_inflight() -> int:
     """Fleet in-flight round cap: ``REPRO_FLEET_MAX_INFLIGHT``, else 8."""
-    raw = os.environ.get(ENV_MAX_INFLIGHT, "")
-    try:
-        return max(1, int(raw))
-    except ValueError:
-        return 8
+    return env_int(ENV_MAX_INFLIGHT, 8)
 
 
 def default_min_workers() -> int:
     """Availability floor: ``REPRO_FLEET_MIN_WORKERS``, else 1.  Below
     it the fleet fails futures fast instead of limping on."""
-    raw = os.environ.get(ENV_MIN_WORKERS, "")
-    try:
-        return max(1, int(raw))
-    except ValueError:
-        return 1
+    return env_int(ENV_MIN_WORKERS, 1)
 
 
 class FleetDegraded(RuntimeError):
@@ -502,7 +495,7 @@ class CodedFleet:
                  queue_cap: int | None = None,
                  min_workers: int | None = None,
                  admission: str = "block", transport_opts=None,
-                 tracer=None):
+                 tracer=None, grow_encodings: bool = False):
         if admission not in ("block", "shed"):
             raise ValueError(f"admission must be 'block' or 'shed', "
                              f"got {admission!r}")
@@ -526,6 +519,14 @@ class CodedFleet:
         self.min_workers = min_workers if min_workers is not None \
             else default_min_workers()
         self.admission = admission
+        # Autoscaling (repro.scale): by default a plan never grows past
+        # its attach-time shard count -- "full strength" is what you
+        # attached with.  With ``grow_encodings=True`` a roster that
+        # outgrows the plan re-encodes *upward*: ``n`` follows the live
+        # worker count while the absolute straggler budget ``s`` is
+        # preserved (``k`` grows), so each worker's ``omega/k`` share of
+        # the work shrinks -- scale-up buys capacity, not just spares.
+        self.grow_encodings = grow_encodings
         self.transport = make_transport(
             transport, n_workers, faults=faults, heartbeat_s=heartbeat_s,
             **(transport_opts or {}))
@@ -739,6 +740,24 @@ class CodedFleet:
         rates = [r if r > 0 else fallback for r in rates]
         top = max(rates)
         return [max(1, round(levels * r / top)) for r in rates]
+
+    def observed_rates(self) -> dict | None:
+        """Per-worker compute rates (work/s of *pure compute*) derived
+        from the active tracer's round records via
+        ``repro.obs.attribute``, or None when untraced / nothing
+        recorded yet.  This is the default ``rates=`` feed for the
+        degradation re-encode path: when tracing is on, a
+        ``proposed-hetero`` re-cut follows measured worker-side compute
+        time instead of the coarser submit->result EWMAs."""
+        tr = self._tracer
+        if tr is None:
+            return None
+        try:
+            from ..obs.attrib import attribute  # noqa: PLC0415 - cycle
+            rates = attribute(tr.events()).compute_rates()
+        except Exception:                   # malformed/partial records
+            return None
+        return rates or None
 
     def add_worker(self, worker: int | None = None, *,
                    timeout: float = 60.0) -> int:
@@ -1636,7 +1655,8 @@ class CodedFleet:
             if getattr(plan, "executor", None) is None \
                     or getattr(plan, "_A", None) is None:
                 continue                    # aggregation-only: nothing to cut
-            if ps.n_shards != min(m, ps.max_shards):
+            cap = m if self.grow_encodings else ps.max_shards
+            if ps.n_shards != min(m, cap):
                 ps.pending_reencode = True
         self._drain_reencodes()
 
@@ -1660,9 +1680,13 @@ class CodedFleet:
     def _reencode_scheme(self, ps: _PlanState, m: int, live: list[int]):
         """Pick the replacement scheme for ``m`` live hosts.  Returns
         ``(plan, cut_capacities)`` -- the compiled plan for the new
-        ``(n', k')`` (resilience shrinks before availability: ``k`` is
-        preserved whenever ``n' >= k``) and the capacities the shard
-        cut should follow (None for a uniform cut)."""
+        ``(n', k')`` and the capacities the shard cut should follow
+        (None for a uniform cut).  Shrinking, resilience goes before
+        availability: ``k`` is preserved whenever ``n' >= k``.  Growing
+        (``grow_encodings``), the absolute straggler budget ``s`` is
+        what's preserved and ``k`` expands with the roster, shrinking
+        every worker's ``omega/k`` share -- the capacity half of the
+        elastic story."""
         from ..api.plan import compile_plan  # noqa: PLC0415 - avoid cycle
         from ..api.schemes import make_scheme  # noqa: PLC0415
 
@@ -1673,7 +1697,14 @@ class CodedFleet:
             return plan0, None
         sch0 = plan0.scheme
         n_target = m * ps.ratio
-        caps = self.worker_capacities(live)
+        if n_target > plan0.n:
+            k_goal = max(plan0.k, n_target - (plan0.n - plan0.k))
+        else:
+            k_goal = min(plan0.k, n_target)
+        # tracer-derived per-worker compute rates (repro.obs), when a
+        # tracer recorded any rounds, beat the heartbeat-path EWMAs:
+        # the hetero cut then reflects measured device speed
+        caps = self.worker_capacities(live, rates=self.observed_rates())
         virt = None
         if (plan0.kind == "mv" and len(set(caps)) > 1
                 and sch0.name in ("proposed", "proposed-hetero")):
@@ -1682,14 +1713,14 @@ class CodedFleet:
             total = sum(caps)
             virt = [max(1, round(c * n_target / total)) for c in caps]
             n_new = sum(virt)
-            k_new = min(plan0.k, n_new)
+            k_new = min(k_goal, n_new)
             try:
                 sch = make_scheme("proposed-hetero", capacities=virt,
                                   k_A=k_new)
             except (ValueError, KeyError):
                 virt = None
         if virt is None:
-            n_new, k_new = n_target, min(plan0.k, n_target)
+            n_new, k_new = n_target, min(k_goal, n_target)
             if plan0.kind == "mv":
                 sch = make_scheme(sch0.name, n=n_new, k_A=k_new)
             else:
@@ -1713,7 +1744,8 @@ class CodedFleet:
         sees two encodings."""
         ps.pending_reencode = False
         live = self._live()
-        m = max(1, min(len(live), ps.max_shards))
+        cap = len(live) if self.grow_encodings else ps.max_shards
+        m = max(1, min(len(live), cap))
         hosts = live[:m]
         old_pid = ps.plan_id
         try:

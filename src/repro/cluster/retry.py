@@ -25,17 +25,15 @@ import random
 import time
 from dataclasses import dataclass
 
+from .._env import env_int
+
 ENV_RETRY_MAX_ATTEMPTS = "REPRO_RETRY_MAX_ATTEMPTS"
 
 
 def default_max_attempts() -> int:
     """Attempt cap for transport retries: ``REPRO_RETRY_MAX_ATTEMPTS``,
     else 5 (first try + 4 retries)."""
-    raw = os.environ.get(ENV_RETRY_MAX_ATTEMPTS, "")
-    try:
-        return max(1, int(raw))
-    except ValueError:
-        return 5
+    return env_int(ENV_RETRY_MAX_ATTEMPTS, 5)
 
 
 @dataclass(frozen=True)

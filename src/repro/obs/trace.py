@@ -34,6 +34,8 @@ import os
 import time
 from collections import deque
 
+from .._env import env_int
+
 ENV_TRACE = "REPRO_TRACE"
 ENV_TRACE_BUF = "REPRO_TRACE_BUF"
 DEFAULT_BUF = 4096
@@ -41,12 +43,7 @@ DEFAULT_BUF = 4096
 
 def trace_buf_capacity() -> int:
     """Ring-buffer capacity: ``REPRO_TRACE_BUF`` or 4096."""
-    raw = os.environ.get(ENV_TRACE_BUF, "")
-    try:
-        cap = int(raw)
-    except ValueError:
-        return DEFAULT_BUF
-    return cap if cap > 0 else DEFAULT_BUF
+    return env_int(ENV_TRACE_BUF, DEFAULT_BUF)
 
 
 class _Span:

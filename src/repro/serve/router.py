@@ -75,6 +75,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .._env import env_int
 from ..cluster.fleet import CodedFleet, CodedFuture, FleetDegraded
 from ..obs.trace import default_tracer
 
@@ -93,11 +94,11 @@ def default_balancer() -> str:
 
 
 def default_queue_cap() -> int:
-    return max(1, int(os.environ.get(ENV_QUEUE_CAP, "256")))
+    return env_int(ENV_QUEUE_CAP, 256)
 
 
 def default_max_cols() -> int:
-    return max(1, int(os.environ.get(ENV_MAX_COLS, "128")))
+    return env_int(ENV_MAX_COLS, 128)
 
 
 @dataclass
@@ -889,6 +890,11 @@ class Router:
                         {"index": r.index, "owned": r.owned,
                          "transport": r.fleet.transport_name,
                          "draining": r.draining,
+                         # plan-state read, no fleet-loop round trip:
+                         # the latency signal autoscaling SLO policies
+                         # compare against their target
+                         "lat_ewma_ms":
+                             r.handle._ps.snapshot()["lat_ewma_ms"],
                          "outstanding_batches": r.total_outstanding(),
                          "outstanding_calls": sum(r.out_calls.values()),
                          "outstanding_cols": r.out_cols,

@@ -317,6 +317,38 @@ class TestChaosRuns:
         assert "p50_s" in d["recovery_latency"]["kill"]
         assert "p99_s" in d["recovery_latency"]["kill"]
 
+    def test_autoscaling_interleaves_with_faults(self):
+        """Scripted faults and autoscaling decisions on the same fleet
+        at the same time: a kill can land mid scale-up, a join mid
+        drain.  run_chaos's invariants (no hang, bitwise parity of
+        every resolved value, zero failures within the budget) must
+        hold regardless, and the controller's decision log must show
+        scaling actually happened in both directions."""
+        from repro.scale import SchedulePolicy
+
+        sched = scripted_schedule(seed=7, n=6, s=2, duration=2.0,
+                                  n_events=5)
+        res = run_chaos(
+            sched, transport="memory", n=6, s=2, seed=7,
+            calls=16, spacing_s=0.1, warmup_s=3.0,
+            autoscale={"policy": SchedulePolicy([(0, 6), (0.5, 8),
+                                                 (1.5, 6)]),
+                       "min_members": 2, "max_members": 10,
+                       "interval_s": 0.1, "cooldown_s": 0.2})
+        counts = res.counts()
+        assert sum(counts.values()) == 16
+        if res.max_concurrent <= 2:
+            assert counts["failed"] == 0
+        resolved = [o for o in res.outcomes if o.outcome != "failed"]
+        assert resolved
+        assert all(o.bitwise and o.correct for o in resolved)
+        actions = [d["action"] for d in res.autoscale]
+        assert "up" in actions and "down" in actions
+        # every non-hold decision carries its audit trail
+        for d in res.autoscale:
+            if d["action"] != "hold":
+                assert d["reason"] and d["target"] >= 0
+
     @pytest.mark.slow
     @pytest.mark.parametrize("transport", ["pipe", "tcp", "shm"])
     def test_process_transports_survive_chaos(self, transport):

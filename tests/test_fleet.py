@@ -651,6 +651,70 @@ class TestElasticMembership:
             assert fleet.worker_capacities([0, 1, 2]) == [4, 1, 2]
             assert fleet.worker_capacities([0, 1, 2, 3]) == [4, 1, 2, 2]
 
+    def test_reencode_gives_measured_slow_worker_fewer_tiles(
+            self, operands):
+        """Closing the observe->re-encode loop: with a tracer on the
+        fleet, ``observed_rates()`` feeds the measured per-worker
+        compute rates into the re-encode's capacity cut, so a worker
+        that *measured* slow (not just configured slow) owns strictly
+        fewer rows of the new hetero encoding."""
+        from repro.cluster.faults import adversarial_faults
+        from repro.obs import Tracer, attribute
+
+        A, _, xs = operands
+        slow = 0
+        plan = compile_plan(A, scheme="proposed", n=12, s=4,
+                            backend="packed")
+        tr = Tracer(capacity=4096)
+        faults = adversarial_faults([slow], slowdown=60.0,
+                                    time_scale=2e-3)
+        with CodedFleet(6, faults=faults, tracer=tr) as fleet:
+            h = fleet.attach(plan)
+            for x in list(xs) * 2:
+                h.matvec(x)
+                # pacing: healthy workers drain between rounds, so
+                # only the injected straggler accumulates lag
+                time.sleep(0.01)
+            rates = fleet.observed_rates()
+            assert rates and slow in rates
+            assert rates[slow] == min(rates.values())
+            # sanity: the rates come from the tracer's round records
+            assert attribute(tr.events()).suspects()[0] == slow
+            pid0 = h.plan_id
+            fleet.remove_worker(5, drain=True)
+            assert wait_until(lambda: h.plan_id != pid0)
+            # the cut followed the measured speeds: hetero scheme,
+            # and the slow worker owns strictly the fewest rows
+            assert h.plan.scheme.name == "proposed-hetero"
+            owned = {w: 0 for w in fleet.live_workers()}
+            for o in h._ps.owner.values():
+                owned[o] += 1
+            assert all(owned[slow] < owned[w] for w in owned
+                       if w != slow)
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[1])),
+                                       np.asarray(xs[1] @ A), **TOL)
+
+    def test_metrics_track_roster_across_add_remove(self, operands):
+        A, _, xs = operands
+        plan = compile_plan(A, scheme="proposed", n=6, s=2,
+                            backend="packed")
+        with CodedFleet(6) as fleet:
+            h = fleet.attach(plan)
+            h.matvec(xs[0])
+            joiner = fleet.add_worker()
+            m = fleet.metrics()
+            assert m["n_live"] == 7 and joiner in m["live_workers"]
+            assert len(m["worker_capacities"]) == 7
+            fleet.remove_worker(joiner, drain=True)
+            fleet.remove_worker(0, drain=True)
+            m = fleet.metrics()
+            assert m["n_live"] == 5
+            assert joiner not in m["live_workers"]
+            assert 0 not in m["live_workers"]
+            assert len(m["worker_capacities"]) == 5
+            np.testing.assert_allclose(np.asarray(h.matvec(xs[1])),
+                                       np.asarray(xs[1] @ A), **TOL)
+
 
 # ---------------------------------------------------------------------------
 # Graceful degradation: floors, shedding, re-encode edges

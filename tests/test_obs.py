@@ -112,8 +112,13 @@ class TestTracer:
     def test_env_capacity(self, monkeypatch):
         monkeypatch.setenv("REPRO_TRACE_BUF", "16")
         assert Tracer().capacity == 16
+        # garbage / nonpositive knobs fail loudly, naming the variable
         monkeypatch.setenv("REPRO_TRACE_BUF", "bogus")
-        assert Tracer().capacity == 4096
+        with pytest.raises(ValueError, match="REPRO_TRACE_BUF"):
+            Tracer()
+        monkeypatch.setenv("REPRO_TRACE_BUF", "0")
+        with pytest.raises(ValueError, match="REPRO_TRACE_BUF"):
+            Tracer()
 
     def test_env_enables_default(self, monkeypatch):
         import repro.obs.trace as trace_mod

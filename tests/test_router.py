@@ -282,6 +282,42 @@ class TestAdaptiveWidth:
 
 
 # ---------------------------------------------------------------------------
+# Metrics under sustained load (the autoscaler's sensor surface)
+# ---------------------------------------------------------------------------
+
+
+class TestMetricsUnderLoad:
+    def test_backlog_width_and_latency_signals(self, operands, plan):
+        """The exact fields ``repro.scale.router_sensor`` reads must
+        hold up under a sustained burst: queued columns while paused,
+        a drained queue + dispatch/latency evidence after."""
+        A, xs = operands
+        with Router(batch_wait_s=0.002) as router:
+            router.register("head", plan, replicas=1, n_workers=6,
+                            min_cols=1, max_cols=64)
+            router.pause()
+            futs = [router.submit("head", xs[i % len(xs)])
+                    for i in range(24)]
+            m = router.metrics()["endpoints"]["head"]
+            cols = xs[0].shape[0]
+            assert m["queued_cols"] == 24 * cols
+            assert m["tenants"]["default"]["queued"] == 24
+            assert m["tenants"]["default"]["queued_cols"] == 24 * cols
+            (rep,) = m["replicas"]
+            assert rep["dispatched"] == 0 and rep["lat_ewma_ms"] is None
+            router.resume()
+            [f.result(60) for f in futs]
+            m = router.metrics()["endpoints"]["head"]
+            assert m["queued_cols"] == 0
+            assert m["width"] > 1           # backlog rode the adaptive loop
+            assert m["depth_ewma"] > 0
+            (rep,) = m["replicas"]
+            assert rep["dispatched"] > 0
+            assert rep["outstanding_cols"] == 0
+            assert rep["lat_ewma_ms"] > 0   # the SLO policies' signal
+
+
+# ---------------------------------------------------------------------------
 # Config push without dropping traffic
 # ---------------------------------------------------------------------------
 
